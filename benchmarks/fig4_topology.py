@@ -1,0 +1,26 @@
+"""Figure 4: accuracy + EDP as a function of FoG topology (groves x size)."""
+from __future__ import annotations
+
+from benchmarks.common import DATASETS, dataset, forest_for
+from repro.core import select_min_edp, topology_sweep
+
+
+def run(datasets=("isolet", "penbased")) -> list[str]:
+    rows = ["dataset,topology,threshold,accuracy,energy_nj,mean_hops,edp"]
+    for name in datasets:
+        ds = dataset(name)
+        rf = forest_for(name)
+        pts = topology_sweep(rf, ds.x_test, ds.y_test, thresh=0.3)
+        for p in pts:
+            rows.append(f"{name},{p.n_groves}x{p.grove_size},{p.threshold},"
+                        f"{p.accuracy:.4f},{p.energy_nj:.3f},{p.delay:.2f},"
+                        f"{p.edp:.4f}")
+        pick = select_min_edp(pts)
+        rows.append(f"{name},SELECTED:{pick.n_groves}x{pick.grove_size},"
+                    f"{pick.threshold},{pick.accuracy:.4f},{pick.energy_nj:.3f},"
+                    f"{pick.delay:.2f},{pick.edp:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

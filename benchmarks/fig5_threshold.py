@@ -1,0 +1,27 @@
+"""Figure 5: run-time tunability — accuracy/EDP vs threshold, 8x2 vs 4x4."""
+from __future__ import annotations
+
+import numpy as np
+
+import benchmarks.common as common
+from benchmarks.common import dataset, forest_for
+from repro.core import threshold_sweep
+
+
+def run(datasets=None) -> list[str]:
+    datasets = datasets or common.DATASETS
+    rows = ["dataset,topology,threshold,accuracy,energy_nj,edp"]
+    for name in datasets:
+        ds = dataset(name)
+        rf = forest_for(name)
+        for grove_size, label in [(2, "8x2"), (4, "4x4")]:
+            for p in threshold_sweep(rf, grove_size, ds.x_test, ds.y_test,
+                                     np.asarray([0.02, 0.05, 0.1, 0.2, 0.3,
+                                                 0.5, 0.7, 0.9, 1.0])):
+                rows.append(f"{name},{label},{p.threshold:.2f},"
+                            f"{p.accuracy:.4f},{p.energy_nj:.4f},{p.edp:.5f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

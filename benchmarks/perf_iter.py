@@ -1,0 +1,50 @@
+"""§Perf hillclimb driver: re-lower the three target cells and print terms.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter [--cells a,b,c] [--fog]
+
+Target cells (chosen per EXPERIMENTS.md §Perf):
+  minicpm3-4b/train_4k    worst roofline fraction (score-traffic-dominated)
+  jamba-1.5-large-398b/train_4k   most collective-bound
+  tinyllama-1.1b/decode_32k       paper-technique representative (FoG decode)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+DEFAULT_CELLS = [
+    ("minicpm3-4b", "train_4k"),
+    ("jamba-1.5-large-398b", "train_4k"),
+    ("tinyllama-1.1b", "decode_32k"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default=None,
+                    help="comma list arch/shape[,arch/shape...]")
+    ap.add_argument("--fog", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--out", default="results_perf_iters.jsonl")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import dryrun_cell
+    cells = DEFAULT_CELLS
+    if args.cells:
+        cells = [tuple(c.split("/")) for c in args.cells.split(",")]
+
+    for arch, shape in cells:
+        rec = dryrun_cell(arch, shape, fog=args.fog and shape.startswith("decode"),
+                          accum_steps=args.accum if shape.startswith("train") else 1)
+        rec["tag"] = args.tag
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        print(f"{args.tag} {arch}/{shape}: compute {rec['compute_s']:.3f}s "
+              f"memory {rec['memory_s']:.3f}s collective {rec['collective_s']:.3f}s "
+              f"useful {rec['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

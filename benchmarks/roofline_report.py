@@ -1,0 +1,70 @@
+"""§Roofline report: derive the three-term table from dry-run JSONL records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        results_dryrun_single.jsonl [results_dryrun_multi.jsonl]
+
+Terms (v5e, per chip): compute = HLO_FLOPs/197e12; memory = HLO_bytes/819e9;
+collective = collective_bytes/(4*50e9).  HLO quantities are per-device
+(post-SPMD).  MODEL_FLOPS = 6*N_active*D (train) / 2*N_active (decode).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.roofline import HBM_BW, ICI_BW, ICI_LINKS, PEAK_FLOPS
+
+
+def derive(rec: dict) -> dict:
+    compute = rec["hlo_flops"] / PEAK_FLOPS
+    memory = rec["hlo_bytes"] / HBM_BW
+    coll = rec["collective_bytes"] / (ICI_LINKS * ICI_BW)
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dom = max(terms, key=terms.get)
+    step = max(terms.values())
+    ideal = rec["model_flops"] / (rec["chips"] * PEAK_FLOPS)
+    useful = (rec["model_flops"] / rec["chips"]) / rec["hlo_flops"] \
+        if rec["hlo_flops"] else 0.0
+    return {**rec, "compute_s": compute, "memory_s": memory,
+            "collective_s": coll, "dominant": dom,
+            "useful_flops_ratio": useful,
+            "roofline_fraction": ideal / step if step else 0.0}
+
+
+def bottleneck_note(rec: dict) -> str:
+    d = rec["dominant"]
+    if d == "memory":
+        return "cut HBM traffic: fused attention tiles / bf16 / fewer saves"
+    if d == "collective":
+        return "reshard or overlap: fewer all-gathers per layer"
+    return "raise MXU utilization: bigger matmul tiles / drop masked work"
+
+
+def rows_from(path: str) -> list[dict]:
+    return [derive(json.loads(l)) for l in open(path)
+            if not json.loads(l).get("skipped") and not json.loads(l).get("error")]
+
+
+def table(rows: list[dict]) -> list[str]:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | MODEL_FLOPS | useful | roofline_frac | next lever |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['model_flops']:.3g} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {bottleneck_note(r)} |")
+    return out
+
+
+def main() -> None:
+    for path in sys.argv[1:]:
+        print(f"\n## {path}")
+        print("\n".join(table(rows_from(path))))
+
+
+if __name__ == "__main__":
+    main()

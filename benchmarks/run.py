@@ -1,0 +1,64 @@
+"""Benchmark runner: one section per paper table/figure (+ beyond-paper).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints CSV blocks; the roofline table is produced by the dry-run
+(launch/dryrun.py) since it needs 512 forced host devices.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of datasets for a fast pass")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        ablation_adaptive, fig4_topology, fig5_threshold, fog_ring_bench,
+        lm_fog_exit, table1_accuracy, table1_energy,
+    )
+    import benchmarks.common as common
+
+    if args.quick:
+        common.DATASETS = ["penbased", "segmentation"]
+
+    sections = {
+        "table1_accuracy": table1_accuracy.run,
+        "table1_energy": table1_energy.run,
+        "fig4_topology": fig4_topology.run,
+        "fig5_threshold": lambda: fig5_threshold.run(common.DATASETS),
+        "fog_ring": fog_ring_bench.run,
+        "ablation_adaptive": ablation_adaptive.run,
+        "lm_fog_exit": lm_fog_exit.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for name, fn in sections.items():
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append((name, str(e)))
+        print(f"----- {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"\nFAILED sections: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall benchmark sections passed")
+
+
+if __name__ == "__main__":
+    main()

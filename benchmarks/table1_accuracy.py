@@ -1,0 +1,20 @@
+"""Table 1 (top): accuracy of 7 classifiers x 5 datasets."""
+from __future__ import annotations
+
+import benchmarks.common as common
+from benchmarks.common import evaluate_all
+
+COLUMNS = ["svm_lr", "svm_rbf", "mlp", "cnn", "rf", "fog_max", "fog_opt"]
+
+
+def run() -> list[str]:
+    rows = ["dataset," + ",".join(COLUMNS)]
+    for name in common.DATASETS:
+        res = evaluate_all(name)
+        rows.append(name + "," + ",".join(
+            f"{res[c].accuracy * 100:.1f}" for c in COLUMNS))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

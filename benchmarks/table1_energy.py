@@ -1,0 +1,33 @@
+"""Table 1 (bottom): modeled energy (nJ) per classification, 7 x 5.
+
+Validates the paper's headline ratios at comparable accuracy:
+FoG_opt vs RF ~1.5x, vs SVM_RBF ~24x, vs MLP ~2.5x, vs CNN ~34.7x lower;
+vs SVM_LR ~6.5-10x HIGHER.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import benchmarks.common as common
+from benchmarks.common import evaluate_all
+from benchmarks.table1_accuracy import COLUMNS
+
+
+def run() -> list[str]:
+    rows = ["dataset," + ",".join(COLUMNS)]
+    ratios = {c: [] for c in COLUMNS}
+    for name in common.DATASETS:
+        res = evaluate_all(name)
+        rows.append(name + "," + ",".join(
+            f"{res[c].energy_nj:.2f}" for c in COLUMNS))
+        for c in COLUMNS:
+            if res["fog_opt"].energy_nj > 0:
+                ratios[c].append(res[c].energy_nj / res["fog_opt"].energy_nj)
+    rows.append("geomean_ratio_vs_fog_opt," + ",".join(
+        f"{np.exp(np.mean(np.log(np.maximum(ratios[c], 1e-9)))):.2f}"
+        for c in COLUMNS))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

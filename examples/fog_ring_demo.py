@@ -1,0 +1,37 @@
+"""The paper's micro-architecture on a device mesh: groves pinned to shards,
+the req/ack handshake as a ppermute ring (DESIGN.md §2 mapping).
+
+Needs multiple devices; forces 8 host devices, so run it directly:
+
+    PYTHONPATH=src python examples/fog_ring_demo.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import split  # noqa: E402
+from repro.core.fog_ring import fog_ring_eval  # noqa: E402
+from repro.data import make_dataset  # noqa: E402
+from repro.forest import TrainConfig, train_random_forest  # noqa: E402
+
+ds = make_dataset("penbased")
+rf = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                         TrainConfig(n_trees=16, max_depth=8))
+gc = split(rf, 2)                       # 8 groves -> one per device
+mesh = jax.make_mesh((8,), ("grove",))
+print(f"mesh: {mesh}")
+
+x = jnp.asarray(ds.x_test[:512])
+proba, hops = fog_ring_eval(gc, x, jax.random.key(0), 0.3, 8, mesh)
+label = np.argmax(np.asarray(proba), axis=-1)
+hops = np.asarray(hops)
+print(f"accuracy          : {(label == ds.y_test[:512]).mean():.3f}")
+print(f"mean hops         : {hops.mean():.2f} of 8 groves")
+print("ring occupancy    :", " ".join(
+    f"hop{j}:{(hops > j).mean():.2f}" for j in range(8)))
+print("Each hop is one collective_permute over one ICI link — the ASIC "
+      "handshake, TPU-native.")

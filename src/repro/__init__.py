@@ -1,0 +1,8 @@
+"""repro — Field of Groves (FoG) reproduction + TPU-pod framework.
+
+Layers: core/ (the paper's algorithms), forest/ (tensorized RF + CART),
+baselines/, kernels/ (Pallas TPU), models/ (assigned LM architectures),
+configs/, data/, optim/, train/, serve/, launch/ (mesh, dry-run, drivers).
+"""
+
+__version__ = "1.0.0"

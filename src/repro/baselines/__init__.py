@@ -1,0 +1,7 @@
+from repro.baselines.train import (
+    ALL_BASELINES, TrainedModel, train_cnn, train_mlp, train_svm_lr,
+    train_svm_rbf,
+)
+
+__all__ = ["ALL_BASELINES", "TrainedModel", "train_cnn", "train_mlp",
+           "train_svm_lr", "train_svm_rbf"]

@@ -1,0 +1,79 @@
+"""CNN baseline (paper §4.1) — a small LeNet-style net in pure JAX.
+
+Tabular UCI datasets are folded to the nearest square "image" (the paper's
+CNN also consumes the raw feature vectors; its energy comes from conv MACs,
+which is what we count).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import cnn_energy_pj
+
+
+def image_side(n_features: int) -> int:
+    return max(4, int(math.ceil(math.sqrt(n_features))))
+
+
+def fold_to_image(x: jax.Array, n_features: int) -> jax.Array:
+    side = image_side(n_features)
+    pad = side * side - n_features
+    x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x.reshape(-1, side, side, 1)
+
+
+def init_cnn(key, n_features: int, n_classes: int,
+             channels: tuple[int, int] = (8, 16), dense: int = 64):
+    side = image_side(n_features)
+    k = jax.random.split(key, 4)
+    c1, c2 = channels
+    params = {
+        "conv1": {"w": jax.random.normal(k[0], (3, 3, 1, c1)) * 0.1,
+                  "b": jnp.zeros((c1,))},
+        "conv2": {"w": jax.random.normal(k[1], (3, 3, c1, c2)) * 0.1,
+                  "b": jnp.zeros((c2,))},
+    }
+    s = -(-(-(-side // 2)) // 2)  # two stride-2 SAME pools: ceil(ceil(s/2)/2)
+    flat = s * s * c2
+    params["fc1"] = {"w": jax.random.normal(k[2], (flat, dense)) * jnp.sqrt(2.0 / flat),
+                     "b": jnp.zeros((dense,))}
+    params["fc2"] = {"w": jax.random.normal(k[3], (dense, n_classes)) * 0.1,
+                     "b": jnp.zeros((n_classes,))}
+    return params
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+
+
+def cnn_logits(params, x: jax.Array, n_features: int) -> jax.Array:
+    img = fold_to_image(x, n_features)
+    h = _pool(_conv(img, params["conv1"]["w"], params["conv1"]["b"]))
+    h = _pool(_conv(h, params["conv2"]["w"], params["conv2"]["b"]))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_energy_nj(n_features: int, n_classes: int,
+                  channels: tuple[int, int] = (8, 16), dense: int = 64) -> float:
+    side = image_side(n_features)
+    c1, c2 = channels
+    s1 = -(-side // 2)
+    s2 = -(-s1 // 2)
+    conv1_macs = side * side * 9 * 1 * c1
+    conv2_macs = s1 * s1 * 9 * c1 * c2
+    dense_macs = s2 * s2 * c2 * dense + dense * n_classes
+    acts = side * side * c1 + s1 * s1 * c2 + dense
+    return cnn_energy_pj(conv1_macs + conv2_macs, dense_macs, acts) * 1e-3

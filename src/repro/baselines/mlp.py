@@ -1,0 +1,32 @@
+"""MLP baseline (paper §4.1) — plain JAX, trained by baselines.train."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import mlp_energy_pj
+
+
+def init_mlp(key, n_features: int, n_classes: int,
+             hidden: tuple[int, ...] = (128, 64)):
+    sizes = (n_features, *hidden, n_classes)
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (a, b)) * jnp.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros((b,))})
+    return params
+
+
+def mlp_logits(params, x: jax.Array) -> jax.Array:
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_energy_nj(n_features: int, n_classes: int,
+                  hidden: tuple[int, ...] = (128, 64)) -> float:
+    return mlp_energy_pj([n_features, *hidden, n_classes]) * 1e-3

@@ -1,0 +1,114 @@
+"""Shared trainer for the baseline classifiers (paper §4.1 experimental set).
+
+One minibatch-Adam loop drives all four baselines; each baseline supplies a
+(params, logits_fn, loss_fn) triple.  Softmax CE for MLP/CNN, multiclass
+hinge for the SVMs (that is what makes them SVMs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import cnn as cnn_mod
+from repro.baselines import mlp as mlp_mod
+from repro.baselines import svm as svm_mod
+from repro.data.synth import Dataset
+from repro.optim import adamw
+
+
+def _xent(scores, y):
+    return -jnp.mean(jax.nn.log_softmax(scores)[jnp.arange(scores.shape[0]), y])
+
+
+@dataclasses.dataclass
+class TrainedModel:
+    name: str
+    params: object
+    predict: Callable   # (params, x[B,F]) -> labels [B]
+    accuracy: float
+    energy_nj: float    # modeled energy per classification
+
+
+def _fit(params, logits_fn, loss_fn, ds: Dataset, *, epochs=30, batch=128,
+         lr=1e-3, weight_decay=1e-4, seed=0):
+    init, update = adamw(lr=lr, weight_decay=weight_decay)
+    state = init(params)
+    x, y = jnp.asarray(ds.x_train), jnp.asarray(ds.y_train)
+    n = x.shape[0]
+    steps_per_epoch = max(n // batch, 1)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(logits_fn(p, xb), yb))(params)
+        params, state = update(grads, state, params)
+        return params, state, loss
+
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(steps_per_epoch):
+            idx = perm[i * batch : (i + 1) * batch]
+            params, state, _ = step(params, state, x[idx], y[idx])
+    return params
+
+
+def train_svm_lr(ds: Dataset, seed: int = 0) -> TrainedModel:
+    params = svm_mod.init_linear_svm(jax.random.key(seed), ds.n_features, ds.n_classes)
+    params = _fit(params, svm_mod.linear_svm_scores, svm_mod.multiclass_hinge_loss,
+                  ds, lr=3e-3)
+    pred_fn = jax.jit(lambda p, x: jnp.argmax(svm_mod.linear_svm_scores(p, x), -1))
+    acc = float(np.mean(np.asarray(pred_fn(params, jnp.asarray(ds.x_test))) == ds.y_test))
+    return TrainedModel("svm_lr", params, pred_fn, acc,
+                        svm_mod.svm_lr_energy_nj(ds.n_features, ds.n_classes))
+
+
+def train_svm_rbf(ds: Dataset, seed: int = 0, n_rff: int = 512) -> TrainedModel:
+    params = svm_mod.init_rbf_svm(jax.random.key(seed), ds.n_features,
+                                  ds.n_classes, n_rff=n_rff)
+    lifted_scores = lambda p, x: svm_mod.rbf_svm_scores(p, x)
+    # only the linear head trains; omega/phase are the fixed RFF lift
+    head = _fit(params.linear,
+                lambda lin, x: svm_mod.linear_svm_scores(
+                    lin, svm_mod.rff_lift(params, x)),
+                svm_mod.multiclass_hinge_loss, ds, lr=3e-3)
+    params = svm_mod.RFFParams(params.omega, params.phase, head)
+    pred_fn = jax.jit(lambda p, x: jnp.argmax(svm_mod.rbf_svm_scores(p, x), -1))
+    acc = float(np.mean(np.asarray(pred_fn(params, jnp.asarray(ds.x_test))) == ds.y_test))
+    train_scores = np.asarray(lifted_scores(params, jnp.asarray(ds.x_train)))
+    n_sv = svm_mod.count_support_vectors(train_scores, ds.y_train)
+    return TrainedModel("svm_rbf", params, pred_fn, acc,
+                        svm_mod.svm_rbf_energy_nj(ds.n_features, ds.n_classes, n_sv))
+
+
+def train_mlp(ds: Dataset, seed: int = 0,
+              hidden: tuple[int, ...] = (128, 64)) -> TrainedModel:
+    params = mlp_mod.init_mlp(jax.random.key(seed), ds.n_features, ds.n_classes, hidden)
+    params = _fit(params, mlp_mod.mlp_logits, _xent, ds)
+    pred_fn = jax.jit(lambda p, x: jnp.argmax(mlp_mod.mlp_logits(p, x), -1))
+    acc = float(np.mean(np.asarray(pred_fn(params, jnp.asarray(ds.x_test))) == ds.y_test))
+    return TrainedModel("mlp", params, pred_fn, acc,
+                        mlp_mod.mlp_energy_nj(ds.n_features, ds.n_classes, hidden))
+
+
+def train_cnn(ds: Dataset, seed: int = 0) -> TrainedModel:
+    params = cnn_mod.init_cnn(jax.random.key(seed), ds.n_features, ds.n_classes)
+    logits = partial(cnn_mod.cnn_logits, n_features=ds.n_features)
+    params = _fit(params, logits, _xent, ds, epochs=20)
+    pred_fn = jax.jit(lambda p, x: jnp.argmax(logits(p, x), -1))
+    acc = float(np.mean(np.asarray(pred_fn(params, jnp.asarray(ds.x_test))) == ds.y_test))
+    return TrainedModel("cnn", params, pred_fn, acc,
+                        cnn_mod.cnn_energy_nj(ds.n_features, ds.n_classes))
+
+
+ALL_BASELINES = {
+    "svm_lr": train_svm_lr,
+    "svm_rbf": train_svm_rbf,
+    "mlp": train_mlp,
+    "cnn": train_cnn,
+}

@@ -1,0 +1,4 @@
+from repro.configs.base import ArchConfig, param_count
+from repro.configs.registry import ARCHS, get_arch, smoke_config
+
+__all__ = ["ArchConfig", "param_count", "ARCHS", "get_arch", "smoke_config"]

@@ -1,0 +1,91 @@
+"""Design-time topology search (Figure 4) and EDP budgeting.
+
+The paper sweeps (n_groves x trees_per_grove) topologies of a fixed forest,
+evaluates accuracy and EDP on validation data, and picks the min-EDP design
+at maximum accuracy; the threshold then becomes the run-time knob (Fig 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.energy import fog_energy
+from repro.core.fog_eval import fog_eval
+from repro.core.grove import split
+from repro.forest.tree import TensorForest
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyPoint:
+    n_groves: int
+    grove_size: int
+    threshold: float
+    accuracy: float
+    energy_nj: float     # mean energy per classification
+    delay: float         # mean hops (ring latency proxy, cycles ~ hops * grove latency)
+    edp: float           # energy * delay
+
+    def __str__(self) -> str:
+        return (f"{self.n_groves}x{self.grove_size} thr={self.threshold:.2f} "
+                f"acc={self.accuracy:.3f} E={self.energy_nj:.3f}nJ "
+                f"D={self.delay:.2f} EDP={self.edp:.3f}")
+
+
+def evaluate_topology(forest: TensorForest, grove_size: int,
+                      x_val: np.ndarray, y_val: np.ndarray,
+                      thresh: float, max_hops: int | None = None,
+                      seed: int = 0) -> TopologyPoint:
+    gc = split(forest, grove_size)
+    hops_cap = max_hops if max_hops is not None else gc.n_groves
+    res = fog_eval(gc, jax.numpy.asarray(x_val), jax.random.key(seed),
+                   thresh, hops_cap)
+    acc = float(np.mean(np.asarray(res.label) == y_val))
+    hops = np.asarray(res.hops)
+    rep = fog_energy(hops, grove_size, gc.depth, gc.n_classes, x_val.shape[1])
+    delay = float(hops.mean())
+    e_nj = rep.per_example_nj
+    return TopologyPoint(gc.n_groves, grove_size, float(thresh), acc,
+                         e_nj, delay, e_nj * delay)
+
+
+def topology_sweep(forest: TensorForest, x_val: np.ndarray, y_val: np.ndarray,
+                   thresh: float = 0.3) -> list[TopologyPoint]:
+    """Figure 4: every (groves x grove_size) factorization of the forest."""
+    t = forest.n_trees
+    points = []
+    for k in range(1, t + 1):
+        if t % k == 0:
+            points.append(evaluate_topology(forest, k, x_val, y_val, thresh))
+    return points
+
+
+def select_min_edp(points: list[TopologyPoint],
+                   accuracy_slack: float = 0.02) -> TopologyPoint:
+    """Min-EDP point whose accuracy is within ``slack`` of the best."""
+    best_acc = max(p.accuracy for p in points)
+    ok = [p for p in points if p.accuracy >= best_acc - accuracy_slack]
+    return min(ok, key=lambda p: p.edp)
+
+
+def threshold_sweep(forest: TensorForest, grove_size: int,
+                    x_val: np.ndarray, y_val: np.ndarray,
+                    thresholds: np.ndarray | None = None) -> list[TopologyPoint]:
+    """Figure 5: run-time tunability curve for a fixed topology."""
+    if thresholds is None:
+        thresholds = np.asarray([0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9, 1.0])
+    return [evaluate_topology(forest, grove_size, x_val, y_val, float(t))
+            for t in thresholds]
+
+
+def find_opt_threshold(points: list[TopologyPoint],
+                       tolerance: float = 0.005) -> TopologyPoint:
+    """FoG_opt: the accuracy-optimal threshold — smallest threshold above
+    which accuracy stops increasing (paper §4.2)."""
+    pts = sorted(points, key=lambda p: p.threshold)
+    best_acc = max(p.accuracy for p in pts)
+    for p in pts:
+        if p.accuracy >= best_acc - tolerance:
+            return p
+    return pts[-1]

@@ -1,0 +1,32 @@
+"""MaxDiff confidence (Algorithm 2, subroutine lines 16-19).
+
+Confidence = |top1 - top2| of the (normalized) probability array.  For
+multi-output classification the paper takes the Min over outputs of the
+per-output margins ("minimum difference of the maximum values").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def top2(ar: jax.Array, axis: int = -1) -> tuple[jax.Array, jax.Array]:
+    """Two largest values along ``axis`` without a full sort (single pass)."""
+    m1 = jnp.max(ar, axis=axis)
+    # mask out ONE occurrence of the max, then take the max again
+    is_max = ar == jnp.expand_dims(m1, axis)
+    first_max = jnp.cumsum(is_max.astype(jnp.int32), axis=axis) == 1
+    masked = jnp.where(is_max & first_max, -jnp.inf, ar)
+    m2 = jnp.max(masked, axis=axis)
+    return m1, m2
+
+
+def maxdiff(ar: jax.Array, axis: int = -1) -> jax.Array:
+    """MaxDiff(ar) = |max1 - max2| along ``axis``."""
+    m1, m2 = top2(ar, axis=axis)
+    return jnp.abs(m1 - m2)
+
+
+def maxdiff_multioutput(ar: jax.Array) -> jax.Array:
+    """Multi-output rule: ar is [..., n_outputs, C]; Min over outputs."""
+    return jnp.min(maxdiff(ar, axis=-1), axis=-1)

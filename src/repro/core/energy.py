@@ -1,0 +1,129 @@
+"""Energy model — per-classification energy accounting.
+
+The paper extracts per-block PPA from Cadence/Aladdin at 40 nm and sums
+per-op energies over each classifier's evaluation path.  Offline we do the
+same arithmetic with published 40/45 nm per-op energies (Horowitz, ISSCC'14
+"Computing's energy problem"), counting ops *exactly* from the algorithms:
+
+  DT       : d node-reads + d feature-reads + d comparisons (visited path only)
+  RF       : t * DT + majority vote (t int adds)
+  grove    : k * DT + prob accumulate (C fp adds) + MaxDiff (C comparisons)
+  FoG      : sum over inputs of hops * grove + hop transfer (queue-entry
+             copy over the handshake: Gamma bytes SRAM write + read)
+  SVM_lr   : C*F MACs
+  SVM_rbf  : n_sv * (F dist-MACs + exp) + n_sv MACs
+  MLP/CNN  : layer MACs + activation evals
+
+Energy ratios between classifiers — the paper's claims — depend only on op
+counts and these constants, not on our container's hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# ---- per-op energies, picojoules (Horowitz ISSCC'14, 45nm; paper: 40nm) ----
+E_INT8_ADD = 0.03
+E_INT32_ADD = 0.1
+E_FP32_ADD = 0.9
+E_INT8_MULT = 0.2
+E_FP32_MULT = 3.7
+E_FP32_MAC = E_FP32_ADD + E_FP32_MULT          # 4.6
+E_CMP8 = 0.03                                   # 8-bit comparator (DT node, byte features)
+E_CMP32 = 0.1
+E_EXP = 20.0                                    # LUT + interpolation mult
+E_SRAM_R32 = 5.0                                # local SRAM read, per 32b word
+E_SRAM_W32 = 5.0
+PJ = 1e-12
+NJ = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    total_pj: float
+    per_example_pj: float
+
+    @property
+    def per_example_nj(self) -> float:
+        return self.per_example_pj * 1e-3
+
+
+# ---------------------------------------------------------------- trees ----
+def _sram_scale(capacity_bytes: float) -> float:
+    """Per-access energy grows ~sqrt(capacity) (bitline/wordline length);
+    E_SRAM_R32 is calibrated for an 8 KB array."""
+    return max(1.0, np.sqrt(capacity_bytes / 8192.0))
+
+
+def tree_bytes(depth: int, n_classes: int) -> float:
+    """Node table {feature idx 2B, threshold 4B, offset 2B} + byte leaves."""
+    return (2**depth - 1) * 8.0 + 2**depth * n_classes
+
+
+def dt_energy_pj(depth: int, n_classes: int = 10) -> float:
+    """One decision tree, one example: the visited root-to-leaf path.
+    SRAM access energy scales with the tree's table size (a depth-12
+    ISOLET tree needs a ~140 KB array, not the 8 KB baseline)."""
+    s = _sram_scale(tree_bytes(depth, n_classes))
+    # node read: {feature idx, threshold, offset} ~ 2 words; feature read: 1 word
+    per_node = (2 * E_SRAM_R32) * s + E_SRAM_R32 + E_CMP8
+    return depth * per_node
+
+
+def rf_energy_pj(n_trees: int, depth: int, n_classes: int) -> float:
+    vote = n_trees * E_INT32_ADD + n_classes * E_CMP32
+    return n_trees * dt_energy_pj(depth, n_classes) + vote
+
+
+def grove_energy_pj(grove_size: int, depth: int, n_classes: int) -> float:
+    # the data queue stores one BYTE per class (§3.2.2 footnote: byte-
+    # addressable Probability Array) -> int8 accumulate, word-packed SRAM
+    words = max(1, (n_classes + 3) // 4)
+    agg = n_classes * E_INT8_ADD + words * (E_SRAM_R32 + E_SRAM_W32)
+    conf = n_classes * E_CMP8 + E_INT8_ADD                     # MaxDiff pass
+    return grove_size * dt_energy_pj(depth, n_classes) + agg + conf
+
+
+def hop_transfer_energy_pj(n_features: int, n_classes: int) -> float:
+    """Queue-entry copy over the handshake: Gamma = 1 + F + 1 + C bytes."""
+    gamma_words = int(np.ceil((1 + n_features + 1 + n_classes) / 4))
+    return gamma_words * (E_SRAM_R32 + E_SRAM_W32)
+
+
+def fog_energy(hops: np.ndarray, grove_size: int, depth: int,
+               n_classes: int, n_features: int) -> EnergyReport:
+    """hops: [B] groves-used per example (FogResult.hops)."""
+    hops = np.asarray(hops, np.float64)
+    per_grove = grove_energy_pj(grove_size, depth, n_classes)
+    transfer = hop_transfer_energy_pj(n_features, n_classes)
+    # (hops-1) forwards per example; first grove receives from the processor
+    per_ex = hops * per_grove + np.maximum(hops - 1, 0) * transfer
+    return EnergyReport(float(per_ex.sum()), float(per_ex.mean()))
+
+
+def rf_report(batch: int, n_trees: int, depth: int, n_classes: int) -> EnergyReport:
+    e = rf_energy_pj(n_trees, depth, n_classes)
+    return EnergyReport(e * batch, e)
+
+
+# ------------------------------------------------------------ baselines ----
+def svm_lr_energy_pj(n_features: int, n_classes: int) -> float:
+    return n_classes * n_features * (E_FP32_MAC + E_SRAM_R32)
+
+
+def svm_rbf_energy_pj(n_features: int, n_classes: int, n_sv: int) -> float:
+    per_sv = n_features * (E_FP32_ADD + E_FP32_MULT + E_SRAM_R32) + E_EXP + E_FP32_MAC
+    return n_sv * per_sv
+
+
+def mlp_energy_pj(layer_sizes: list[int]) -> float:
+    """layer_sizes: [F, h1, ..., C]."""
+    e = 0.0
+    for a, b in zip(layer_sizes[:-1], layer_sizes[1:]):
+        e += a * b * (E_FP32_MAC + E_SRAM_R32) + b * E_EXP   # matmul + activation
+    return e
+
+
+def cnn_energy_pj(conv_macs: int, dense_macs: int, activations: int) -> float:
+    return (conv_macs + dense_macs) * (E_FP32_MAC + E_SRAM_R32) + activations * E_EXP

@@ -1,0 +1,112 @@
+"""Distributed FoG — the paper's grove ring mapped onto a TPU mesh.
+
+The ASIC pins grove g to a physical PE and forwards uncertain inputs over a
+req/ack handshake to PE g+1 (Figure 3).  The TPU-native equivalent pins
+grove g to mesh shard g and forwards the queue entry {Input Payload,
+Probability Array, hops} with ``jax.lax.ppermute`` — the handshake becomes a
+neighbor-only collective, the cheapest traffic pattern on a torus (no
+all-to-all, no all-gather; each hop crosses one ICI link).
+
+Each shard holds:
+  * its own grove's node tables (grove-parallel: tables are *partitioned*,
+    never replicated or gathered), and
+  * a slice of the batch ("its queue").
+
+Per round every shard evaluates ITS grove on the live lanes it currently
+holds, then the whole lane state rotates one step around the ring.  After j
+rounds a lane that started at shard s has been processed by groves
+s, s+1, ..., s+j — exactly Algorithm 2's (start + j) mod n_groves with
+start == the initial shard, randomized by shuffling the batch before entry.
+Confident lanes die in place (their rotation continues but costs no
+evaluation energy), matching the ASIC's completed-entry drain.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.confidence import maxdiff
+from repro.core.grove import GroveCollection
+from repro.forest.tree import _traverse
+
+
+def _eval_local_grove(feature, threshold, leaf, x, use_kernels: bool):
+    """Bundle evaluation of this shard's grove: [b, F] -> [b, C].
+
+    ``use_kernels=True`` runs the Pallas tree-traversal PE
+    (kernels/tree_traverse.py — node tables VMEM-resident, batch tiled);
+    the jnp path is the oracle-equivalent fallback."""
+    if use_kernels:
+        from repro.kernels import ops
+        b = x.shape[0]
+        blk = b if b <= 128 else 128
+        while b % blk:
+            blk -= 1
+        return ops.tree_traverse(feature[0], threshold[0], leaf[0], x,
+                                 block_b=blk)
+    per_tree = _traverse(feature[0], threshold[0], leaf[0], x)   # [b, k, C]
+    return per_tree.mean(axis=1)
+
+
+def make_fog_ring(mesh: Mesh, axis: str, max_hops: int,
+                  use_kernels: bool = False):
+    """Build the jitted ring evaluator for ``mesh`` (grove axis = ``axis``).
+
+    Returns fn(gc_arrays, x, thresh) -> (proba, hops), where the grove
+    collection's leading G axis and the batch are both sharded over ``axis``.
+    """
+    n_shards = mesh.shape[axis]
+
+    def ring(feature, threshold, leaf, x, thresh):
+        # Everything here is per-shard: feature [1, k, nodes], x [b, F].
+        b = x.shape[0]
+        prob = jnp.zeros((b, leaf.shape[-1]), jnp.float32)
+        hops = jnp.zeros((b,), jnp.int32)
+        live = jnp.ones((b,), bool)
+        perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+        def body(carry, _):
+            x, prob, hops, live = carry
+            contrib = _eval_local_grove(feature, threshold, leaf, x,
+                                        use_kernels)
+            prob = prob + jnp.where(live[:, None], contrib, 0.0)
+            hops = hops + live.astype(jnp.int32)
+            prob_norm = prob / jnp.maximum(hops, 1)[:, None]
+            live = live & (maxdiff(prob_norm) < thresh)
+            # the handshake: rotate the queue entries to the next grove
+            x = jax.lax.ppermute(x, axis, perm)
+            prob = jax.lax.ppermute(prob, axis, perm)
+            hops = jax.lax.ppermute(hops, axis, perm)
+            live = jax.lax.ppermute(live, axis, perm)
+            return (x, prob, hops, live), None
+
+        (x, prob, hops, live), _ = jax.lax.scan(
+            body, (x, prob, hops, live), None, length=max_hops)
+        prob_norm = prob / jnp.maximum(hops, 1)[:, None]
+        return prob_norm, hops
+
+    gspec = P(axis)  # grove tables partitioned over the ring, dim 0
+    fn = shard_map(
+        ring, mesh=mesh,
+        in_specs=(gspec, gspec, gspec, P(axis), P()),
+        out_specs=(P(axis), P(axis)),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def fog_ring_eval(gc: GroveCollection, x: jax.Array, key: jax.Array,
+                  thresh, max_hops: int, mesh: Mesh, axis: str = "grove",
+                  use_kernels: bool = False):
+    """Shuffle the batch (random start grove), run the ring, unshuffle."""
+    B = x.shape[0]
+    perm = jax.random.permutation(key, B)
+    inv = jnp.argsort(perm)
+    fn = make_fog_ring(mesh, axis, max_hops, use_kernels=use_kernels)
+    proba, hops = fn(gc.feature, gc.threshold, gc.leaf, x[perm],
+                     jnp.asarray(thresh, jnp.float32))
+    return proba[inv], hops[inv]

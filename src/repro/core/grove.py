@@ -1,0 +1,96 @@
+"""Algorithm 1 — constructing the Field of Groves classifier.
+
+GCTrain(n, k, X, y): pre-train a conventional RF of n trees, then Split it
+into groves of k trees each.  The grove collection is a single
+``TensorForest`` reshaped to [n_groves, k, ...], so each grove's
+``predict_proba`` is a tensorized bundle evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.forest.tree import TensorForest, _traverse
+from repro.forest.train import TrainConfig, train_random_forest
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GroveCollection:
+    """Split grove ensemble GC: [n_groves, k] trees."""
+
+    feature: jax.Array    # int32   [G, k, 2**d - 1]
+    threshold: jax.Array  # float32 [G, k, 2**d - 1]
+    leaf: jax.Array       # float32 [G, k, 2**d, C]
+
+    def tree_flatten(self):
+        return (self.feature, self.threshold, self.leaf), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_groves(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def grove_size(self) -> int:
+        return self.feature.shape[1]
+
+    @property
+    def depth(self) -> int:
+        return int(np.log2(self.leaf.shape[2]) + 0.5)
+
+    @property
+    def n_classes(self) -> int:
+        return self.leaf.shape[3]
+
+    def grove(self, g: int) -> TensorForest:
+        return TensorForest(self.feature[g], self.threshold[g], self.leaf[g])
+
+    def as_forest(self) -> TensorForest:
+        """Undo the split (for the FoG_max == RF equivalence checks)."""
+        g, k = self.feature.shape[:2]
+        return TensorForest(
+            self.feature.reshape(g * k, -1),
+            self.threshold.reshape(g * k, -1),
+            self.leaf.reshape(g * k, *self.leaf.shape[2:]),
+        )
+
+
+def split(forest: TensorForest, k: int) -> GroveCollection:
+    """Split(RF, k) — Algorithm 1 lines 5-15.  Trees [i..i+k) -> grove i/k."""
+    stacked = forest.stack_groves(k)
+    return GroveCollection(stacked.feature, stacked.threshold, stacked.leaf)
+
+
+def gc_train(n: int, k: int, x: np.ndarray, y: np.ndarray, n_classes: int,
+             train_cfg: TrainConfig | None = None) -> GroveCollection:
+    """GCTrain(n, k, X, y) — Algorithm 1 lines 1-4."""
+    cfg = dataclasses.replace(train_cfg or TrainConfig(), n_trees=n)
+    rf = train_random_forest(x, y, n_classes, cfg)
+    return split(rf, k)
+
+
+def grove_predict_proba(gc: GroveCollection, g_idx: jax.Array,
+                        x: jax.Array) -> jax.Array:
+    """Grove(index).predict_prob(x) for a *batch* with per-example grove ids.
+
+    g_idx: int32 [B]; x: [B, F]  ->  [B, C]
+
+    Gathers each example's grove node tables then runs the bundle walk.  This
+    is the batched equivalent of routing example b to physical grove g_idx[b].
+    """
+    feat = gc.feature[g_idx]      # [B, k, nodes]
+    thr = gc.threshold[g_idx]
+    leaf = gc.leaf[g_idx]
+
+    def one(feat_b, thr_b, leaf_b, x_b):
+        per_tree = _traverse(feat_b, thr_b, leaf_b, x_b[None])   # [1, k, C]
+        return per_tree[0].mean(axis=0)
+
+    return jax.vmap(one)(feat, thr, leaf, x)

@@ -1,0 +1,8 @@
+from repro.forest.tree import TensorForest, forest_proba, forest_votes, pad_forest
+from repro.forest.train import TrainConfig, train_random_forest
+from repro.forest.rf import rf_predict, rf_predict_proba
+
+__all__ = [
+    "TensorForest", "forest_proba", "forest_votes", "pad_forest",
+    "TrainConfig", "train_random_forest", "rf_predict", "rf_predict_proba",
+]

@@ -1,0 +1,24 @@
+"""Conventional random-forest evaluation (the paper's RF baseline).
+
+Per §3.2.1: "in the conventional RF the DTs return class predictions, which
+are later put to a majority vote" — contrast with FoG's probability
+averaging.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.forest.tree import TensorForest, forest_votes, forest_proba
+
+
+@jax.jit
+def rf_predict(forest: TensorForest, x: jax.Array) -> jax.Array:
+    """Majority vote over per-tree hard predictions. [B] int32 labels."""
+    return jnp.argmax(forest_votes(forest, x), axis=-1).astype(jnp.int32)
+
+
+@jax.jit
+def rf_predict_proba(forest: TensorForest, x: jax.Array) -> jax.Array:
+    """Mean per-tree distribution (used by FoG groves). [B, C]."""
+    return forest_proba(forest, x)

@@ -1,0 +1,152 @@
+"""Random-forest training (CART, gini, bootstrap, feature subsampling).
+
+The paper trains with scikit-learn + the feature-budgeted criterion of
+Nan/Wang/Saligrama (ICML'15).  Offline container => we implement CART
+ourselves in numpy (training is offline in the paper too; only *evaluation*
+runs on the accelerator).  The budgeted criterion is the ``feature_cost``
+option: split gain is penalized by the acquisition cost of features not yet
+paid for on that root-to-node path, which is the essence of [11].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.forest.tree import TensorForest, pad_forest
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_trees: int = 16
+    max_depth: int = 8
+    min_samples_leaf: int = 2
+    n_thresholds: int = 16        # candidate thresholds per feature (quantiles)
+    bootstrap: bool = True
+    max_features: str | int = "sqrt"
+    feature_cost: np.ndarray | None = None  # [F] acquisition cost (budgeted RF)
+    cost_weight: float = 0.0                 # lambda in gain - lambda*cost
+    seed: int = 0
+
+
+def _gini(counts: np.ndarray) -> np.ndarray:
+    """Gini impurity for count vectors [..., C]."""
+    n = counts.sum(axis=-1, keepdims=True)
+    n = np.maximum(n, 1)
+    p = counts / n
+    return 1.0 - (p * p).sum(axis=-1)
+
+
+def _best_split(x: np.ndarray, y: np.ndarray, n_classes: int,
+                feat_ids: np.ndarray, cfg: TrainConfig,
+                paid: np.ndarray) -> tuple[int, float, float] | None:
+    """Exhaustive split search over candidate quantile thresholds.
+
+    Returns (feature, threshold, gain) or None if no split improves.
+    """
+    n = len(y)
+    onehot = np.eye(n_classes, dtype=np.float64)[y]           # [n, C]
+    parent_counts = onehot.sum(axis=0)
+    parent_imp = _gini(parent_counts)
+
+    best = None
+    best_gain = 1e-12
+    for f in feat_ids:
+        col = x[:, f]
+        qs = np.quantile(col, np.linspace(0.05, 0.95, cfg.n_thresholds))
+        qs = np.unique(qs)
+        if len(qs) == 0:
+            continue
+        # [n, q] mask of right-going examples
+        right = col[:, None] > qs[None, :]
+        right_counts = np.einsum("nq,nc->qc", right.astype(np.float64), onehot)
+        left_counts = parent_counts[None, :] - right_counts
+        n_r = right_counts.sum(axis=-1)
+        n_l = n - n_r
+        valid = (n_r >= cfg.min_samples_leaf) & (n_l >= cfg.min_samples_leaf)
+        if not valid.any():
+            continue
+        child_imp = (n_l * _gini(left_counts) + n_r * _gini(right_counts)) / n
+        gain = parent_imp - child_imp
+        if cfg.feature_cost is not None and not paid[f]:
+            gain = gain - cfg.cost_weight * cfg.feature_cost[f]
+        gain = np.where(valid, gain, -np.inf)
+        q_best = int(np.argmax(gain))
+        if gain[q_best] > best_gain:
+            best_gain = float(gain[q_best])
+            best = (int(f), float(qs[q_best]), best_gain)
+    return best
+
+
+def _train_tree(x: np.ndarray, y: np.ndarray, n_classes: int,
+                cfg: TrainConfig, rng: np.random.Generator) -> TensorForest:
+    """Train one tree; emit it as a depth-``cfg.max_depth`` complete tree."""
+    d = cfg.max_depth
+    n_internal = 2**d - 1
+    n_leaves = 2**d
+    feature = np.zeros((n_internal,), np.int32)
+    threshold = np.full((n_internal,), np.inf, np.float32)  # default: go left
+    leaf = np.zeros((n_leaves, n_classes), np.float32)
+
+    if cfg.max_features == "sqrt":
+        k_feat = max(1, int(np.sqrt(x.shape[1])))
+    elif cfg.max_features == "all":
+        k_feat = x.shape[1]
+    else:
+        k_feat = int(cfg.max_features)
+
+    def leaf_dist(idx: np.ndarray) -> np.ndarray:
+        counts = np.bincount(y[idx], minlength=n_classes).astype(np.float32)
+        s = counts.sum()
+        return counts / s if s > 0 else np.full((n_classes,), 1.0 / n_classes, np.float32)
+
+    def fill_leaves(node: int, depth: int, dist: np.ndarray) -> None:
+        """Replicate ``dist`` across all leaf slots under ``node``."""
+        first = node
+        for _ in range(depth, d):
+            first = 2 * first + 1
+        first -= n_internal
+        span = 2 ** (d - depth)
+        leaf[first : first + span] = dist
+
+    # iterative DFS: (node_id, depth, sample idx, paid-feature mask)
+    stack = [(0, 0, np.arange(len(y)), np.zeros(x.shape[1], bool))]
+    while stack:
+        node, depth, idx, paid = stack.pop()
+        ys = y[idx]
+        if depth == d or len(idx) < 2 * cfg.min_samples_leaf or len(np.unique(ys)) == 1:
+            dist = leaf_dist(idx)
+            if depth == d:
+                leaf[node - n_internal] = dist
+            else:
+                fill_leaves(node, depth, dist)
+            continue
+        feat_ids = rng.choice(x.shape[1], size=min(k_feat, x.shape[1]), replace=False)
+        split = _best_split(x[idx], ys, n_classes, feat_ids, cfg, paid)
+        if split is None:
+            fill_leaves(node, depth, leaf_dist(idx))
+            continue
+        f, thr, _ = split
+        feature[node] = f
+        threshold[node] = thr
+        go_right = x[idx, f] > thr
+        paid2 = paid.copy()
+        paid2[f] = True
+        stack.append((2 * node + 1, depth + 1, idx[~go_right], paid2))
+        stack.append((2 * node + 2, depth + 1, idx[go_right], paid2))
+
+    return TensorForest(feature[None], threshold[None], leaf[None])
+
+
+def train_random_forest(x: np.ndarray, y: np.ndarray, n_classes: int,
+                        cfg: TrainConfig) -> TensorForest:
+    """RandomForestTrain(n, X, y) — Algorithm 1 line 2."""
+    rng = np.random.default_rng(cfg.seed)
+    trees = []
+    for _ in range(cfg.n_trees):
+        if cfg.bootstrap:
+            idx = rng.integers(0, len(y), size=len(y))
+        else:
+            idx = np.arange(len(y))
+        trees.append(_train_tree(x[idx], y[idx], n_classes, cfg, rng))
+    return pad_forest(trees)

@@ -1,0 +1,134 @@
+"""Tensorized decision trees.
+
+The paper's ASIC walks pointer trees with a per-node comparator; the
+TPU-native equivalent is a *complete* binary tree of depth ``d`` flattened
+into dense tensors, traversed with ``d`` gather-compare steps.  A forest of
+``t`` trees is three arrays:
+
+  feature   int32   [t, 2**d - 1]      feature index tested at each internal node
+  threshold float32 [t, 2**d - 1]      split threshold (x[f] > thr -> right)
+  leaf      float32 [t, 2**d, C]       per-leaf class distribution
+
+Nodes below a "real" leaf are padded: feature = 0, threshold = +inf (always
+go left) and the real leaf's distribution is replicated to every descendant
+leaf slot, so the dense walk returns the same answer as the pointer walk.
+Energy accounting matches the ASIC: ``d`` comparisons + ``d`` node reads per
+tree per example (only *visited* nodes cost energy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TensorForest:
+    """A forest of ``t`` depth-``d`` complete binary trees over ``C`` classes."""
+
+    feature: jax.Array    # int32 [t, 2**d - 1]
+    threshold: jax.Array  # float32 [t, 2**d - 1]
+    leaf: jax.Array       # float32 [t, 2**d, C]
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.feature, self.threshold, self.leaf), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- shape helpers ------------------------------------------------------
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return int(np.log2(self.leaf.shape[1]) + 0.5)
+
+    @property
+    def n_classes(self) -> int:
+        return self.leaf.shape[2]
+
+    def slice_trees(self, start: int, count: int) -> "TensorForest":
+        return TensorForest(
+            self.feature[start : start + count],
+            self.threshold[start : start + count],
+            self.leaf[start : start + count],
+        )
+
+    def stack_groves(self, grove_size: int) -> "TensorForest":
+        """Reshape [t, ...] -> [n_groves, k, ...] (Algorithm 1's Split)."""
+        t = self.n_trees
+        assert t % grove_size == 0, (t, grove_size)
+        g = t // grove_size
+        return TensorForest(
+            self.feature.reshape(g, grove_size, -1),
+            self.threshold.reshape(g, grove_size, -1),
+            self.leaf.reshape(g, grove_size, self.leaf.shape[1], self.leaf.shape[2]),
+        )
+
+
+def traverse_one(feature: jax.Array, threshold: jax.Array, leaf: jax.Array,
+                 x: jax.Array) -> jax.Array:
+    """Walk one tree for one example.  Returns the leaf distribution [C].
+
+    ``d`` iterations of: gather node, compare, descend.  This is the pure-jnp
+    oracle for the Pallas ``tree_traverse`` kernel.
+    """
+    depth = int(np.log2(leaf.shape[0]) + 0.5)
+    idx = jnp.zeros((), jnp.int32)
+    for _ in range(depth):
+        f = feature[idx]
+        thr = threshold[idx]
+        go_right = (x[f] > thr).astype(jnp.int32)
+        idx = 2 * idx + 1 + go_right
+    return leaf[idx - (leaf.shape[0] - 1)]
+
+
+# [t,...] trees x [B,F] batch -> [B, t, C]
+_traverse_tree_batch = jax.vmap(traverse_one, in_axes=(0, 0, 0, None))      # over trees
+_traverse = jax.vmap(_traverse_tree_batch, in_axes=(None, None, None, 0))   # over batch
+
+
+@partial(jax.jit, static_argnames=())
+def forest_proba(forest: TensorForest, x: jax.Array) -> jax.Array:
+    """Mean leaf distribution over trees: [B, C].  (sklearn predict_proba.)"""
+    per_tree = _traverse(forest.feature, forest.threshold, forest.leaf, x)
+    return per_tree.mean(axis=1)
+
+
+@partial(jax.jit, static_argnames=())
+def forest_votes(forest: TensorForest, x: jax.Array) -> jax.Array:
+    """Per-tree hard votes -> one-hot counts [B, C] (conventional RF)."""
+    per_tree = _traverse(forest.feature, forest.threshold, forest.leaf, x)
+    votes = jnp.argmax(per_tree, axis=-1)                      # [B, t]
+    return jax.nn.one_hot(votes, forest.n_classes).sum(axis=1)  # [B, C]
+
+
+def pad_forest(forests: list[TensorForest]) -> TensorForest:
+    """Stack single-tree forests (possibly different depths) to common depth."""
+    max_depth = max(f.depth for f in forests)
+    out = []
+    for f in forests:
+        while f.depth < max_depth:
+            n_int, n_leaf = f.feature.shape[1], f.leaf.shape[1]
+            # graft each leaf as a subtree root: new internal layer always goes left
+            new_feature = jnp.concatenate(
+                [f.feature, jnp.zeros((f.feature.shape[0], n_leaf), jnp.int32)], axis=1)
+            new_threshold = jnp.concatenate(
+                [f.threshold, jnp.full((f.threshold.shape[0], n_leaf), jnp.inf)], axis=1)
+            # duplicate each leaf into (left, right) children; right unused (inf thr)
+            new_leaf = jnp.repeat(f.leaf, 2, axis=1)
+            f = TensorForest(new_feature, new_threshold, new_leaf)
+        out.append(f)
+    return TensorForest(
+        jnp.concatenate([f.feature for f in out], axis=0),
+        jnp.concatenate([f.threshold for f in out], axis=0),
+        jnp.concatenate([f.leaf for f in out], axis=0),
+    )

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused Algorithm-2 inner step (lines 7-11).
+
+Fuses the per-hop state update — masked probability accumulate, hop count,
+normalization, MaxDiff margin, liveness gate — into one VMEM pass so the
+[B, C] probability state is read and written exactly once per hop instead
+of materializing four intermediates in HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _aggregate_kernel(prob_ref, contrib_ref, live_ref, hops_ref, thresh_ref,
+                      prob_out, hops_out, live_out, margin_out):
+    prob = prob_ref[...]           # [BB, C]
+    contrib = contrib_ref[...]     # [BB, C]
+    live = live_ref[...]           # [BB] (int8 mask: pallas bools are awkward)
+    hops = hops_ref[...]           # [BB]
+    thresh = thresh_ref[0]
+
+    livef = live.astype(prob.dtype)
+    prob = prob + contrib * livef[:, None]
+    hops = hops + live.astype(jnp.int32)
+    denom = jnp.maximum(hops, 1).astype(prob.dtype)
+    prob_norm = prob / denom[:, None]
+
+    m1 = jnp.max(prob_norm, axis=-1)
+    is_max = prob_norm == m1[:, None]
+    first = jnp.cumsum(is_max.astype(jnp.int32), axis=-1) == 1
+    m2 = jnp.max(jnp.where(is_max & first, -jnp.inf, prob_norm), axis=-1)
+    margin = jnp.abs(m1 - m2)
+
+    prob_out[...] = prob
+    hops_out[...] = hops
+    live_out[...] = (live.astype(bool) & (margin < thresh)).astype(jnp.int8)
+    margin_out[...] = margin
+
+
+def grove_aggregate_pallas(prob_acc: jax.Array, contrib: jax.Array,
+                           live: jax.Array, hops: jax.Array,
+                           thresh: jax.Array, *, block_b: int = 256,
+                           interpret: bool = True):
+    """Fused hop update.  live is bool [B]; returns (prob, hops, live, margin)."""
+    B, C = prob_acc.shape
+    block_b = min(block_b, B)
+    assert B % block_b == 0, (B, block_b)
+    thresh = jnp.asarray(thresh, prob_acc.dtype).reshape(1)
+    live8 = live.astype(jnp.int8)
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    prob, hops, live8, margin = pl.pallas_call(
+        _aggregate_kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, C), row),
+            pl.BlockSpec((block_b, C), row),
+            pl.BlockSpec((block_b,), vec),
+            pl.BlockSpec((block_b,), vec),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, C), row),
+            pl.BlockSpec((block_b,), vec),
+            pl.BlockSpec((block_b,), vec),
+            pl.BlockSpec((block_b,), vec),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C), prob_acc.dtype),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int8),
+            jax.ShapeDtypeStruct((B,), prob_acc.dtype),
+        ],
+        interpret=interpret,
+    )(prob_acc, contrib, live8, hops, thresh)
+    return prob, hops, live8.astype(bool), margin

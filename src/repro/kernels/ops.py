@@ -1,0 +1,44 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute with ``interpret=True`` (the kernel
+body runs as jnp on CPU — correctness identical, performance irrelevant); on
+a real TPU backend they compile to Mosaic.  Callers never pass ``interpret``
+themselves.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.tree_traverse import tree_traverse_pallas
+from repro.kernels.top2_confidence import top2_confidence_pallas
+from repro.kernels.grove_aggregate import grove_aggregate_pallas
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def tree_traverse(feature, threshold, leaf, x, *, block_b: int = 128):
+    """Grove bundle eval [B,F] -> [B,C] (Pallas; oracle: ref.tree_traverse_ref)."""
+    return tree_traverse_pallas(feature, threshold, leaf, x,
+                                block_b=block_b, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def top2_confidence(prob, *, block_b: int = 256):
+    """MaxDiff margin [B,C] -> [B] (Pallas; oracle: ref.top2_confidence_ref)."""
+    return top2_confidence_pallas(prob, block_b=block_b, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def grove_aggregate(prob_acc, contrib, live, hops, thresh, *, block_b: int = 256):
+    """Fused Algorithm-2 hop update (Pallas; oracle: ref.grove_aggregate_ref)."""
+    return grove_aggregate_pallas(prob_acc, contrib, live, hops, thresh,
+                                  block_b=block_b, interpret=_interpret())
+
+
+__all__ = ["tree_traverse", "top2_confidence", "grove_aggregate", "ref"]

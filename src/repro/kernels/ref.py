@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_traverse_ref(feature: jax.Array, threshold: jax.Array,
+                      leaf: jax.Array, x: jax.Array) -> jax.Array:
+    """Grove bundle evaluation: mean leaf distribution over trees.
+
+    feature   int32   [t, 2**d - 1]
+    threshold float32 [t, 2**d - 1]
+    leaf      float32 [t, 2**d, C]
+    x         float32 [B, F]
+    returns   float32 [B, C]
+    """
+    depth = int(np.log2(leaf.shape[1]) + 0.5)
+    B = x.shape[0]
+    t = feature.shape[0]
+    idx = jnp.zeros((B, t), jnp.int32)
+    for _ in range(depth):
+        f = feature[jnp.arange(t)[None, :], idx]          # [B, t]
+        thr = threshold[jnp.arange(t)[None, :], idx]      # [B, t]
+        xv = jnp.take_along_axis(x, f, axis=1)            # [B, t]
+        idx = 2 * idx + 1 + (xv > thr).astype(jnp.int32)
+    leaf_idx = idx - (leaf.shape[1] - 1)                  # [B, t]
+    dists = leaf[jnp.arange(t)[None, :], leaf_idx]        # [B, t, C]
+    return dists.mean(axis=1)
+
+
+def top2_confidence_ref(prob: jax.Array) -> jax.Array:
+    """MaxDiff margin per row: [B, C] -> [B]."""
+    m1 = jnp.max(prob, axis=-1)
+    is_max = prob == m1[:, None]
+    first = jnp.cumsum(is_max.astype(jnp.int32), axis=-1) == 1
+    m2 = jnp.max(jnp.where(is_max & first, -jnp.inf, prob), axis=-1)
+    return jnp.abs(m1 - m2)
+
+
+def grove_aggregate_ref(prob_acc: jax.Array, contrib: jax.Array,
+                        live: jax.Array, hops: jax.Array,
+                        thresh: jax.Array):
+    """Algorithm 2 lines 7-11 fused: accumulate, normalize, gate.
+
+    prob_acc [B, C], contrib [B, C], live [B] bool, hops [B] int32,
+    thresh scalar -> (prob_acc', hops', live', margin)
+    """
+    prob_acc = prob_acc + jnp.where(live[:, None], contrib, 0.0)
+    hops = hops + live.astype(jnp.int32)
+    prob_norm = prob_acc / jnp.maximum(hops, 1)[:, None].astype(prob_acc.dtype)
+    margin = top2_confidence_ref(prob_norm)
+    live = live & (margin < thresh)
+    return prob_acc, hops, live, margin
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """Naive full-matrix attention oracle (GQA broadcast, Dv may differ)."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Sq, K, G, D)
+    s = jnp.einsum("bqkgd,bpkd->bkgqp", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqp,bpkd->bkgqd", p, v.astype(jnp.float32))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, v.shape[3])
+    return out.astype(q.dtype)
+
+
+def ssd_chunk_ref(xbar, a, Bm, Cm):
+    """Intra-chunk SSD oracle (mirrors models/mamba2.ssd_chunked's
+    y_diag + chunk-state terms).
+
+    xbar [B,nc,Q,H,P], a [B,nc,H,Q], Bm/Cm [B,nc,Q,N]
+    -> (y_diag [B,nc,Q,H,P], states [B,nc,H,P,N])
+    """
+    Q = xbar.shape[2]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask, jnp.exp(diff), 0.0)                   # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xbar)
+    cum = cs
+    decay_end = jnp.exp(cum[..., -1:] - cum)                  # [B,nc,H,Q]
+    states = jnp.einsum("bchj,bcjn,bcjhp->bchpn", decay_end, Bm, xbar)
+    return y_diag, states

@@ -1,0 +1,94 @@
+"""Serving driver: continuous batching + optional FoG early-exit decode.
+
+    python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
+        --requests 8 [--fog --thresh 0.3]
+
+``--smoke`` serves the reduced config on host devices; the full config +
+production mesh path goes through serve/decode.make_serve_step (the same
+functions the dry-run lowers).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_config
+from repro.data.lm_data import DataConfig, batch_at_step
+from repro.models import transformer as T
+from repro.models.fog_exit import decode_step_fog, grove_boundaries
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=160)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--fog", action="store_true")
+    ap.add_argument("--thresh", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
+    if cfg.frontend:
+        raise SystemExit(f"{cfg.name}: stub-frontend archs serve via "
+                         "precomputed embeddings; use serve/decode.py directly")
+    params = T.init_params(cfg, jax.random.key(args.seed), jnp.float32)
+    caches = T.cache_init(cfg, args.slots, args.max_seq, jnp.float32)
+    state = {"caches": caches}
+
+    def prefill_fn(slot: int, prompt: np.ndarray) -> int:
+        _, c = T.prefill(params, cfg, tokens=jnp.asarray(prompt)[None, :],
+                         max_seq=args.max_seq)
+        def splice(batch_leaf, row_leaf):
+            for ax in range(batch_leaf.ndim):
+                if batch_leaf.shape[ax] == args.slots and row_leaf.shape[ax] == 1:
+                    sl = [slice(None)] * batch_leaf.ndim
+                    sl[ax] = slice(slot, slot + 1)
+                    for sax in range(batch_leaf.ndim):
+                        if sax != ax and row_leaf.shape[sax] != batch_leaf.shape[sax]:
+                            sl[sax] = slice(0, row_leaf.shape[sax])
+                    return batch_leaf.at[tuple(sl)].set(row_leaf)
+            return batch_leaf
+        state["caches"] = jax.tree.map(splice, state["caches"], c)
+        return len(prompt)
+
+    def decode_fn(tokens, lengths):
+        length = jnp.int32(int(np.asarray(lengths).max()))
+        if args.fog:
+            logits, state["caches"], hops = decode_step_fog(
+                params, cfg, tokens, state["caches"], length, args.thresh)
+            return logits, hops
+        logits, state["caches"] = T.decode_step(params, cfg, tokens,
+                                                state["caches"], length)
+        return logits, None
+
+    batcher = ContinuousBatcher(args.slots, decode_fn, prefill_fn, eos_id=-1)
+    dcfg = DataConfig(cfg.vocab_size, 32, 8, seed=args.seed + 7)
+    for rid in range(args.requests):
+        prompt = batch_at_step(dcfg, rid)["tokens"][0, :24] % cfg.vocab_size
+        batcher.submit(Request(rid=rid, prompt=prompt,
+                               max_new_tokens=args.max_new))
+    t0 = time.time()
+    done = batcher.run()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.generated) for r in done)
+    print(f"[serve] {len(done)} requests, {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens / dt:.1f} tok/s)")
+    if args.fog:
+        g = len(grove_boundaries(cfg))
+        for r in sorted(done, key=lambda r: r.rid):
+            h = np.asarray(r.hops, np.float64)
+            print(f"  req {r.rid}: groves/token {h.mean():.2f} "
+                  f"(flops frac {h.mean() / g:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs per arch.
+
+Policy (DESIGN.md §6):
+  * TP on the `model` axis: attention heads, d_ff, vocab, MoE experts (EP),
+    Mamba d_inner/state/heads.  Any dim not divisible by the axis size
+    falls back to replication for that dim (e.g. MQA's single KV head).
+  * FSDP (ZeRO-3) on the `data` axis for archs >= `fsdp_threshold` params:
+    each param's largest remaining dim is additionally sharded over `data`;
+    XLA inserts the all-gather-on-use / reduce-scatter-on-grad pair.
+  * The `pod` axis is pure DP: parameters replicated across pods, gradients
+    all-reduced over it once per step (optionally int8-compressed).
+  * MoE with n_experts < model-axis size uses TP-within-expert instead
+    (shard d_ff of each expert): grok's 8 experts on a 16-wide axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, param_count
+from repro.launch.mesh import dp_axes, model_axis_size
+
+FSDP_THRESHOLD = 8e9   # params; above this, weights are FSDP-sharded
+
+
+def _maybe(axis: str | None, dim: int, axis_size: int):
+    """Use `axis` for a dim only if it divides evenly."""
+    if axis is None or axis_size <= 1 or dim % axis_size != 0:
+        return None
+    return axis
+
+
+def use_fsdp(cfg: ArchConfig) -> bool:
+    return param_count(cfg)[0] >= FSDP_THRESHOLD
+
+
+def _leaf_spec(path: tuple, shape: tuple[int, ...], cfg: ArchConfig,
+               mesh, fsdp: bool) -> P:
+    msize = model_axis_size(mesh)
+    dsize = mesh.shape.get("data", 1)
+    names = [getattr(k, "key", getattr(k, "name", None)) or str(getattr(k, "idx", ""))
+             for k in path]
+    name = names[-1]
+    in_stack = "stack" in names
+    # stack leaves carry a leading [n_repeat] axis that is never sharded
+    core_shape = shape[1:] if in_stack else shape
+    d_axis = "data" if fsdp else None
+
+    def spec(*parts) -> P:
+        parts = tuple(parts)
+        assert len(parts) == len(core_shape), (name, parts, core_shape)
+        return P(None, *parts) if in_stack else P(*parts)
+
+    m = lambda i, ax="model": _maybe(ax, core_shape[i], msize)
+    dd = lambda i: _maybe(d_axis, core_shape[i], dsize)
+
+    # ---- embeddings ----
+    if name == "embed":
+        # odd vocabularies (minicpm3 73448, mamba2 50280) don't divide 16:
+        # fall back to sharding d_model
+        if _maybe("model", core_shape[0], msize):
+            return spec("model", dd(1))
+        return spec(dd(0), m(1))
+    if name == "unembed":
+        if _maybe("model", core_shape[1], msize):
+            return spec(dd(0), "model")
+        return spec(m(0), dd(1))
+    # ---- vectors / norms ----
+    if len(core_shape) == 1:
+        if name in ("A_log", "D", "dt_bias"):
+            return spec(m(0))
+        if name in ("conv_b_x", "norm"):
+            return spec(m(0))
+        return spec(None)
+    # ---- attention ----
+    if name == "wq":
+        # few-head models (gemma: 8 heads < 16-way TP): shard d_model
+        # instead (partial-sum AR on the projection — small vs replication)
+        if _maybe("model", core_shape[1], msize):
+            return spec(dd(0), "model", None)
+        return spec(m(0), None, None)
+    if name in ("wk", "wv"):
+        return spec(dd(0), m(1), None)
+    if name == "wo":
+        if _maybe("model", core_shape[0], msize):
+            return spec("model", None, dd(2))
+        return spec(None, None, m(2))
+    # ---- MLA ----
+    # head counts that don't divide the TP width (minicpm3: 40 heads on a
+    # 16-wide axis) fall back to sharding the lora rank / d_model
+    if name == "w_dq":
+        return spec(dd(0), m(1))
+    if name == "w_dkv":
+        # packed [d, rkv + dr]: keep dim 1 whole (the c_kv/k_rope split at
+        # rkv wouldn't align with shard boundaries); it's small anyway
+        return spec(dd(0), None)
+    if name in ("w_uq", "w_uk", "w_uv"):
+        if _maybe("model", core_shape[1], msize):
+            return spec(dd(0), "model", None)
+        return spec(m(0), None, None)
+    if name == "w_o":
+        if _maybe("model", core_shape[0], msize):
+            return spec("model", None, dd(2))
+        return spec(None, None, m(2))
+    # ---- MoE ----
+    if name == "router":
+        # [d, E]: deepseek's 58-layer stacked router is 106M params —
+        # shard the expert dim (top_k then all-gathers [B,S,E] logits)
+        return spec(None, m(1))
+    if len(core_shape) == 3 and name in ("w_gate", "w_up", "w_down"):
+        E = core_shape[0]
+        if E % msize == 0 and not cfg.moe_tp_within_expert:  # expert parallelism
+            if name == "w_down":
+                return spec("model", None, dd(2))
+            return spec("model", dd(1), None)
+        # TP-within-expert (grok: 8 experts on 16-wide axis)
+        if name == "w_down":
+            return spec(None, m(1), dd(2))
+        return spec(None, dd(1), m(2))
+    # ---- dense FFN / shared expert ----
+    if name in ("w_gate", "w_up"):
+        return spec(dd(0), m(1))
+    if name == "w_down":
+        return spec(m(0), dd(1))
+    # ---- mamba ----
+    if name in ("in_z", "in_x"):
+        return spec(dd(0), m(1))
+    if name in ("in_B", "in_C", "in_dt"):
+        return spec(dd(0), m(1))
+    if name in ("conv_x",):
+        return spec(None, m(1))
+    if name in ("conv_B", "conv_C"):
+        return spec(None, m(1))
+    if name == "out_proj":
+        return spec(m(0), dd(1))
+    # ---- MTP ----
+    if name == "proj":
+        return spec(dd(0), m(1))
+    return spec(*([None] * len(core_shape)))
+
+
+def param_shardings(cfg: ArchConfig, mesh, params_shape: Any,
+                    fsdp: bool | None = None):
+    """PartitionSpec pytree matching ``jax.eval_shape(init_params, ...)``."""
+    if fsdp is None:
+        fsdp = use_fsdp(cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf.shape, cfg, mesh, fsdp),
+        params_shape)
+
+
+def batch_spec(mesh) -> P:
+    return P(dp_axes(mesh))
+
+
+def act_spec(mesh) -> P:
+    """[B, S, ...] activations: batch over dp axes."""
+    return P(dp_axes(mesh), None)
+
+
+def cache_shardings(cfg: ArchConfig, mesh, cache_shape: Any):
+    """KV-cache specs: batch over dp axes; kv-heads on model when they
+    divide, otherwise sequence on model (SP — MQA/MLA long-context)."""
+    msize = model_axis_size(mesh)
+    dp = dp_axes(mesh)
+
+    def leaf(path, x) -> P:
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        name = names[-1]
+        in_stack = "stack" in names
+        shape = x.shape[1:] if in_stack else x.shape
+        batch_first = (dp if shape[0] % np.prod([mesh.shape[a] for a in dp]) == 0
+                       else None)
+        if name in ("k", "v"):             # [B, S, K, hd]
+            if shape[2] % msize == 0:
+                parts = (batch_first, None, "model", None)
+            else:
+                parts = (batch_first, _maybe("model", shape[1], msize), None, None)
+        elif name in ("c_kv", "k_rope"):   # [B, S, r] — SP over seq
+            parts = (batch_first, _maybe("model", shape[1], msize), None)
+        elif name == "state":              # [B, H, P, N]
+            parts = (batch_first, _maybe("model", shape[1], msize), None, None)
+        else:                              # conv tails [B, K-1, C]
+            parts = (batch_first, None, _maybe("model", shape[2], msize))
+        return P(None, *parts) if in_stack else P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)

@@ -1,0 +1,169 @@
+"""FoG for LMs — confidence-gated layer-grove early exit (beyond-paper).
+
+The paper's mechanism transplanted to autoregressive decoding: the layer
+stack is split into ``cfg.fog_groups`` *groves* of consecutive blocks.
+After each grove the shared unembedding produces logits; the MaxDiff
+confidence (top-1 minus top-2 softmax probability — identical to
+Algorithm 2 line 9) is compared against a threshold; lanes that clear it
+stop computing.  ``hops`` counts groves used per token, exactly like the
+classifier's hop counter, and drives the same energy/FLOP accounting.
+
+KV-staleness policy (the known early-exit problem: later tokens attend to
+positions whose deep-layer KV was never computed): we use CALM-style state
+propagation — an exited lane's last hidden state h is propagated through
+the remaining groves' KV projections only (cheap linear ops, no
+attention/FFN), so deep caches are filled with the approximation
+KV_l(h_exit).  The compute skipped is the attention+FFN body, which is
+>95% of per-layer FLOPs for the assigned archs.
+
+On SIMD hardware the savings are realized per *grove*: a grove's body is
+wrapped in ``lax.cond`` on ``live.any()``, so whole-batch-confident steps
+skip the remaining groves entirely (wall-clock win); per-lane savings
+inside a mixed batch are statistical and reported via the hops histogram
+(energy win), mirroring DESIGN.md §2's queue->mask argument.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.confidence import maxdiff
+from repro.models import transformer as T
+
+
+def grove_boundaries(cfg: ArchConfig) -> list[int]:
+    """Split the scanned stack's n_repeat blocks into fog_groups segments."""
+    _, _, n_rep = T.layer_plan(cfg)
+    g = max(1, min(cfg.fog_groups, n_rep))
+    base, extra = divmod(n_rep, g)
+    sizes = [base + (1 if i < extra else 0) for i in range(g)]
+    return sizes
+
+
+def _stack_slice(stack, start: int, size: int):
+    return jax.tree.map(lambda x: jax.lax.slice_in_dim(x, start, start + size,
+                                                       axis=0), stack)
+
+
+def decode_step_fog(params, cfg: ArchConfig, token, cache, length,
+                    thresh, embeds=None):
+    """FoG decode step.  Returns (logits [B,V], new_cache, hops [B]).
+
+    Grove g is executed under ``lax.cond(live.any())``; exited lanes keep
+    their grove-g logits via masking (SIMD equivalent of leaving the queue).
+    """
+    prefix, period, n_rep = T.layer_plan(cfg)
+    sizes = grove_boundaries(cfg)
+    B = token.shape[0] if token is not None else embeds.shape[0]
+    h = (T.embed_tokens(params, cfg, token[:, None]) if embeds is None
+         else embeds)
+
+    new_prefix = []
+    for p, s, c in zip(params["prefix"], prefix, cache["prefix"]):
+        h, c = T._apply_layer_decode(p, cfg, s, h, c, length)
+        new_prefix.append(c)
+
+    def run_groves(h):
+        live = jnp.ones((B,), bool)
+        hops = jnp.zeros((B,), jnp.int32)
+        logits = jnp.zeros((B, cfg.vocab_size), jnp.float32)
+        new_stack_parts = []
+        start = 0
+        for g, size in enumerate(sizes):
+            blk_params = _stack_slice(params["stack"], start, size)
+            blk_cache = _stack_slice(cache["stack"], start, size)
+
+            def scan_fn(h):
+                def block(hh, xs):
+                    bp, bc = xs
+                    nc = {}
+                    for j, s in enumerate(period):
+                        hh, nc[f"pos{j}"] = T._apply_layer_decode(
+                            bp[f"pos{j}"], cfg, s, hh, bc[f"pos{j}"], length)
+                    return hh, nc
+                return jax.lax.scan(block, h, (blk_params, blk_cache))
+
+            def skip_fn(h):
+                # CALM-style: propagate h through KV projections only, so
+                # later tokens can attend to this position at deep layers
+                def block(hh, xs):
+                    bp, bc = xs
+                    nc = {}
+                    for j, s in enumerate(period):
+                        nc[f"pos{j}"] = _kv_only_update(
+                            bp[f"pos{j}"], cfg, s, hh, bc[f"pos{j}"], length)
+                    return hh, nc
+                return jax.lax.scan(block, h, (blk_params, blk_cache))
+
+            any_live = live.any()
+            h_new, blk_cache_new = jax.lax.cond(any_live, scan_fn, skip_fn, h)
+            # masked select per lane: exited lanes keep their old hidden state
+            h = jnp.where(live[:, None, None], h_new, h)
+            blk_cache_new = jax.tree.map(
+                lambda n, o: _mask_cache(n, o, live), blk_cache_new, blk_cache)
+            new_stack_parts.append(blk_cache_new)
+            hops = hops + live.astype(jnp.int32)
+
+            g_logits = T.unembed(params, cfg, h[:, 0])
+            logits = jnp.where(live[:, None], g_logits, logits)
+            if g < len(sizes) - 1:
+                probs = jax.nn.softmax(g_logits, axis=-1)
+                live = live & (maxdiff(probs) < thresh)
+            start += size
+        new_stack = jax.tree.map(
+            lambda *parts: jnp.concatenate(parts, axis=0), *new_stack_parts)
+        return logits, new_stack, hops
+
+    logits, new_stack, hops = run_groves(h)
+    return logits, {"prefix": new_prefix, "stack": new_stack}, hops
+
+
+def _mask_cache(new, old, live):
+    """Per-lane cache select.  Cache leaves are [n_blocks, B, ...]."""
+    mask = live.reshape((1, -1) + (1,) * (new.ndim - 2))
+    return jnp.where(mask, new, old)
+
+
+def _kv_only_update(p, cfg: ArchConfig, s, h, cache, length):
+    """Fill grove caches from a propagated hidden state (projections only)."""
+    x = T.rmsnorm(h, p["ln1"])
+    if s.mixer == "mamba":
+        # recurrent state advance is the cheap part of a mamba layer; reuse
+        # the full decode-state update but discard the output
+        _, (st, tail) = __import__("repro.models.mamba2", fromlist=["m"]).mamba_decode(
+            p["mamba"], cfg, x, cache["state"], cache["conv"])
+        return {"state": st, "conv": tail}
+    if s.mixer == "mla":
+        from repro.models import mla as mla_mod
+        B = x.shape[0]
+        pos = jnp.full((B, 1), length, jnp.int32)
+        c_kv_new, k_rope_new = mla_mod._compress_kv(p["attn"], cfg, x, pos)
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), length, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), length, axis=1)
+        return {"c_kv": c_kv, "k_rope": k_rope}
+    from repro.models.layers import apply_rope
+    B = x.shape[0]
+    pos = jnp.full((B, 1), length, jnp.int32)
+    k = apply_rope(jnp.einsum("bsd,dke->bske", x, p["attn"]["wk"]), pos,
+                   cfg.rope_theta)
+    v = jnp.einsum("bsd,dke->bske", x, p["attn"]["wv"])
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), length, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), length, axis=1)
+    return {"k": kc, "v": vc}
+
+
+def fog_flops_per_token(cfg: ArchConfig, mean_hops: float) -> float:
+    """Modeled decode FLOPs/token under FoG vs full stack (energy proxy:
+    the paper's hops x grove-cost accounting, in FLOP units)."""
+    from repro.configs.base import param_count
+    _, active = param_count(cfg)
+    frac = mean_hops / max(1, min(cfg.fog_groups,
+                                  T.layer_plan(cfg)[2]))
+    return 2.0 * active * frac

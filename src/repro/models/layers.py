@@ -1,0 +1,173 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA/MQA attention, gated FFN.
+
+Attention for training/prefill is block-chunked with an online softmax
+(flash-attention schedule in pure JAX): the [S, S] score matrix never
+materializes — only [blk_q, blk_k] tiles — which is what keeps the 4k-train
+and 32k-prefill cells inside HBM at batch 256/32.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (1.0 + w)
+
+
+# ------------------------------------------------------------------ RoPE ---
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                              # [D/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- chunked causal attention ---
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True, blk_q: int = 512,
+                    blk_k: int = 1024, scale: float | None = None) -> jax.Array:
+    """Online-softmax blocked attention.
+
+    q/k [B, S, *, D], v [B, Sk, K, Dv] with H % K == 0 (GQA broadcast).
+    Dv may differ from D (MLA).  Returns [B, Sq, H, Dv].  No [Sq, Sk]
+    materialization.
+    """
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, blk_q, Sk, blk_k)
+    nq, nk = Sq // blk_q, Sk // blk_k
+
+    qb = q.reshape(B, nq, blk_q, K, G, D)
+    kb = k.reshape(B, nk, blk_k, K, D)
+    vb = v.reshape(B, nk, blk_k, K, Dv)
+
+    def q_block(iq, qi):
+        # qi: [B, blk_q, K, G, D]
+        # NOTE: kv_step is rematerialized (nothing_saveable): otherwise the
+        # inner scan stacks per-step residuals for backward — notably the
+        # [blk_q, blk_k] pred masks and p matrices — which dominated temp
+        # memory (21.5 GiB/device for tinyllama train_4k).  Recomputing s/p
+        # in the backward pass is the standard flash-attention trade:
+        # extra QK^T FLOPs for O(blk) instead of O(S) residency.
+        def kv_step(carry, jk):
+            # Perf iteration 1 (EXPERIMENTS.md §Perf): score/probability
+            # tiles stay in the COMPUTE dtype (bf16 on TPU) — only the
+            # running stats (m, l) and the output accumulator are f32.
+            # Forcing f32 tiles doubled the dominant HBM traffic AND made
+            # XLA hoist f32 converts before the TP all-reduces / FSDP
+            # all-gathers (f32 wire payloads).  MXU accumulates qk^T in
+            # f32 internally regardless of the tile dtype.
+            acc, m, l = carry
+            kj = jax.lax.dynamic_index_in_dim(kb, jk, axis=1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vb, jk, axis=1, keepdims=False)
+            s = jnp.einsum("bqkgd,bpkd->bkgqp", qi, kj) * scale
+            s = s.astype(jnp.float32)  # tile-local; fused with the ops below
+            if causal:
+                qpos = iq * blk_q + jnp.arange(blk_q)
+                kpos = jk * blk_k + jnp.arange(blk_k)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows (m_new == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqp,bpkd->bkgqd", p.astype(q.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, K, G, blk_q, Dv), jnp.float32)
+        m0 = jnp.full((B, K, G, blk_q), -jnp.inf)
+        l0 = jnp.zeros((B, K, G, blk_q))
+        if causal:
+            # only key blocks up to the diagonal participate: bound the scan
+            # at this q block's last live key block (the remainder would be
+            # fully masked).  trip count is traced -> use fori via masking:
+            # scan a static nk but weight dead blocks to zero would waste
+            # FLOPs; instead scan exactly ceil((iq+1)*blk_q / blk_k) blocks.
+            n_live = jnp.minimum((iq * blk_q + blk_q + blk_k - 1) // blk_k, nk)
+
+            def bounded_step(carry, jk):
+                new_carry, _ = kv_step(carry, jk)
+                keep = jk < n_live
+                merged = jax.tree.map(
+                    lambda n, o: jnp.where(
+                        keep.reshape((1,) * n.ndim), n, o), new_carry, carry)
+                return merged, None
+
+            (acc, m, l), _ = jax.lax.scan(
+                jax.checkpoint(bounded_step,
+                               policy=jax.checkpoint_policies.nothing_saveable),
+                (acc0, m0, l0), jnp.arange(nk))
+        else:
+            (acc, m, l), _ = jax.lax.scan(
+                jax.checkpoint(kv_step,
+                               policy=jax.checkpoint_policies.nothing_saveable),
+                (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # [B, K, G, blk_q, D]
+
+    out = jax.lax.map(lambda args: q_block(args[0], args[1]),
+                      (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4, 5)))
+    # out: [nq, B, K, G, blk_q, D]
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, K, G, Sq, Dv)
+    out = out.transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array | int, *, scale: float | None = None
+                     ) -> jax.Array:
+    """Single-step decode. q [B, 1, H, D]; caches [B, S, K, D]; returns [B,1,H,D]."""
+    B, _, H, D = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, K, G, D)
+    # keep the CACHE operand in its storage dtype: an explicit .astype(f32)
+    # here made XLA carry the whole [L,B,S,K,D] cache in f32 through the
+    # layer scan (2x cache memory+traffic); preferred_element_type gives
+    # the f32 accumulation without promoting the operand (§Perf iter 7)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    s = jnp.where(pos[None, None, None, :] < length, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ------------------------------------------------------------- gated FFN ---
+def gated_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array | None,
+              w_down: jax.Array, act: str) -> jax.Array:
+    """SwiGLU/GeGLU when w_up is present; plain 2-matrix MLP when None."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    if w_up is not None:
+        a = a * jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", a, w_down)

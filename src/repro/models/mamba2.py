@@ -1,0 +1,228 @@
+"""Mamba-2 (SSD — state-space duality) layer, chunked scan + O(1) decode.
+
+Training/prefill uses the SSD block decomposition (Dao & Gu 2024): the
+sequence is split into chunks of Q tokens; within a chunk the quadratic
+"attention-like" form runs on the MXU, across chunks a [H, P, N] state is
+passed with an O(S/Q) ``lax.scan`` — sub-quadratic in S, which is what makes
+the 512k-token long_500k cell feasible for mamba2/jamba while pure-attention
+archs skip it.  Decode advances the recurrent state in O(1) per token: no KV
+cache, just [B, H, P, N] state + a d_conv-1 conv tail.
+
+Projections are stored UNPACKED (in_z, in_x, in_B, in_C, in_dt and separate
+depthwise convs for x/B/C) rather than as one fused in_proj: the packed
+layout's segment boundaries (di | di | N | N | H) don't align with a 16-way
+`model` shard of the fused output dim, which would force cross-shard
+reslicing after every in_proj.  Unpacked, each matrix shards cleanly on its
+own output dim (TP on d_inner / state / heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 9)
+    init = lambda k, *sh: (jax.random.normal(k, sh) / np.sqrt(sh[0])).astype(dtype)
+    conv = lambda k, c: (jax.random.normal(k, (K, c)) * 0.2).astype(dtype)
+    return {
+        "in_z": init(ks[0], d, di),
+        "in_x": init(ks[1], d, di),
+        "in_B": init(ks[2], d, N),
+        "in_C": init(ks[3], d, N),
+        "in_dt": init(ks[4], d, H),
+        "conv_x": conv(ks[5], di), "conv_b_x": jnp.zeros((di,), dtype),
+        "conv_B": conv(ks[6], N), "conv_b_B": jnp.zeros((N,), dtype),
+        "conv_C": conv(ks[7], N), "conv_b_C": jnp.zeros((N,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": init(ks[8], di, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, width K: [B,S,C] -> [B,S,C] (+SiLU)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _conv_step(window: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """One-token conv: window [B,K,C] -> [B,C] (+SiLU)."""
+    return jax.nn.silu((window * w[None]).sum(axis=1) + b)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., Q] -> lower-tri cumulative sums L[i,j] = sum_{j<m<=i} a_m."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # [.., i, j]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, chunk: int,
+                initial_state: jax.Array | None = None,
+                use_kernels: bool = False):
+    """SSD scan.  x [B,S,H,P], dt [B,S,H], A [H], Bm/Cm [B,S,N] (G=1).
+
+    ``use_kernels=True`` computes the intra-chunk block (y_diag + chunk
+    state summaries — all the [Q,Q] tile work) with the fused Pallas
+    kernel (kernels/ssd_chunk.py); the inter-chunk recurrence and the
+    off-diagonal term stay in jnp either way.
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    a = dt * A[None, None, :]                           # [B,S,H] log-decay (<0)
+    xbar = x * dt[..., None]                            # [B,S,H,P]
+
+    # chunk views
+    ac = a.reshape(Bsz, nc, Q, H).transpose(0, 1, 3, 2)          # [B,nc,H,Q]
+    xc = xbar.reshape(Bsz, nc, Q, H, P)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    cum = jnp.cumsum(ac, axis=-1)                                # [B,nc,H,Q]
+    total = cum[..., -1:]                                        # [B,nc,H,1]
+    if use_kernels:
+        from repro.kernels.ssd_chunk import ssd_chunk_pallas
+        y_diag_k, states = ssd_chunk_pallas(xc, ac, Bc, Cc)
+        y_diag = y_diag_k                                        # [B,nc,Q,H,P]
+    else:
+        # ---- intra-chunk (quadratic, MXU) ----
+        L = jnp.exp(_segsum(ac))                                 # [B,nc,H,Q,Q]
+        scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # [B,nc,Q,Q]
+        y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp",
+                            scores, L, xc)                        # [B,nc,Q,H,P]
+        # ---- chunk states ----
+        decay_to_end = jnp.exp(total - cum)                      # [B,nc,H,Q]
+        states = jnp.einsum("bchj,bcjn,bcjhp->bchpn",
+                            decay_to_end, Bc, xc)                 # [B,nc,H,P,N]
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(total[..., 0])                         # [B,nc,H]
+
+    def step(s_prev, inp):
+        st, dec = inp                                            # [B,H,P,N], [B,H]
+        s_new = s_prev * dec[:, :, None, None].astype(s_prev.dtype) + st
+        return s_new, s_prev                                     # emit state BEFORE chunk
+
+    s0 = (jnp.zeros((Bsz, H, P, N), x.dtype) if initial_state is None
+          else initial_state)
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # [B,nc,H,P,N]
+
+    # ---- inter-chunk output ----
+    in_decay = jnp.exp(cum)                                      # [B,nc,H,Q]
+    y_off = jnp.einsum("bcin,bchi,bchpn->bcihp",
+                       Cc, in_decay, prev_states)                # [B,nc,Q,H,P]
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, Bm: jax.Array, Cm: jax.Array):
+    """One-token recurrence.  state [B,H,P,N], x [B,H,P], dt [B,H],
+    Bm/Cm [B,N] -> (y [B,H,P], new_state)."""
+    decay = jnp.exp(dt * A[None, :])                             # [B,H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, x)
+    state = state * decay[:, :, None, None].astype(state.dtype) + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)
+    return y, state
+
+
+def _rmsnorm_gated(y: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(y.dtype) * (1.0 + w)
+
+
+def _project(p, cfg: ArchConfig, x: jax.Array):
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"])
+    return z, xs, Bm, Cm, dt
+
+
+def mamba_forward(p: dict, cfg: ArchConfig, x: jax.Array,
+                  initial_state=None, conv_tail=None):
+    """Full-sequence forward.  x [B,S,d] -> (out [B,S,d], (state, conv_tails))."""
+    Bsz, S, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt = _project(p, cfg, x)
+    if conv_tail is not None:
+        tx, tB, tC = conv_tail
+        xs_c = _causal_conv(jnp.concatenate([tx, xs], 1), p["conv_x"],
+                            p["conv_b_x"])[:, tx.shape[1]:]
+        Bm_c = _causal_conv(jnp.concatenate([tB, Bm], 1), p["conv_B"],
+                            p["conv_b_B"])[:, tB.shape[1]:]
+        Cm_c = _causal_conv(jnp.concatenate([tC, Cm], 1), p["conv_C"],
+                            p["conv_b_C"])[:, tC.shape[1]:]
+    else:
+        xs_c = _causal_conv(xs, p["conv_x"], p["conv_b_x"])
+        Bm_c = _causal_conv(Bm, p["conv_B"], p["conv_b_B"])
+        Cm_c = _causal_conv(Cm, p["conv_C"], p["conv_b_C"])
+    tail = cfg.ssm_conv - 1
+    new_tail = (xs[:, S - tail:], Bm[:, S - tail:], Cm[:, S - tail:]) \
+        if tail else None
+    xh = xs_c.reshape(Bsz, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+    y, state = ssd_chunked(xh, dt, A, Bm_c, Cm_c, cfg.ssm_chunk, initial_state)
+    y = y + xh * p["D"][None, None, :, None]
+    y = _rmsnorm_gated(y.reshape(Bsz, S, di), z, p["norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), (state, new_tail)
+
+
+def mamba_decode(p: dict, cfg: ArchConfig, x: jax.Array, state, conv_tail):
+    """One-token decode.  x [B,1,d]; state [B,H,P,N];
+    conv_tail (tx [B,K-1,di], tB [B,K-1,N], tC [B,K-1,N])."""
+    Bsz = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt = _project(p, cfg, x)
+    tx, tB, tC = conv_tail
+    wx = jnp.concatenate([tx, xs], axis=1)
+    wB = jnp.concatenate([tB, Bm], axis=1)
+    wC = jnp.concatenate([tC, Cm], axis=1)
+    xs_c = _conv_step(wx, p["conv_x"], p["conv_b_x"])
+    Bm_c = _conv_step(wB, p["conv_B"], p["conv_b_B"])
+    Cm_c = _conv_step(wC, p["conv_C"], p["conv_b_C"])
+    new_tail = (wx[:, 1:], wB[:, 1:], wC[:, 1:])
+    xh = xs_c.reshape(Bsz, H, P)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+    y, state = ssd_decode_step(state, xh, dt1, A, Bm_c, Cm_c)
+    y = y + xh * p["D"][None, :, None]
+    y = _rmsnorm_gated(y.reshape(Bsz, 1, di), z[:, :1], p["norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), (state, new_tail)
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, dtype):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.ssm_conv - 1
+    tails = (jnp.zeros((batch, K, cfg.d_inner), dtype),
+             jnp.zeros((batch, K, N), dtype),
+             jnp.zeros((batch, K, N), dtype))
+    return jnp.zeros((batch, H, P, N), dtype), tails

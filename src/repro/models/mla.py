@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V3).
+
+Train/prefill path expands K/V from the compressed latent and runs the
+blocked flash attention.  Decode path uses the ABSORBED form: W_UK is folded
+into the query and W_UV into the output, so attention runs directly against
+the cached latent c_kv (rank r_kv) + shared k_rope — the cache is
+[B, S, r_kv + d_rope] instead of [B, S, H, (d_nope + d_rope + d_v)]:
+a 128x/~14x cache-bytes reduction for DeepSeek-V3/MiniCPM3 and the reason
+MLA decode is memory-roofline-friendly at 32k context.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, flash_attention, rmsnorm
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    s = lambda *sh: 1.0 / np.sqrt(sh[0])
+    init = lambda k, *sh: (jax.random.normal(k, sh) * s(*sh)).astype(dtype)
+    return {
+        "w_dq": init(ks[0], d, rq),
+        "q_norm": jnp.zeros((rq,), dtype),
+        "w_uq": init(ks[1], rq, H, dn + dr),
+        "w_dkv": init(ks[2], d, rkv + dr),
+        "kv_norm": jnp.zeros((rkv,), dtype),
+        "w_uk": init(ks[3], rkv, H, dn),
+        "w_uv": init(ks[4], rkv, H, dv),
+        "w_o": init(ks[5], H, dv, d),
+    }
+
+
+def _project_q(p, cfg: ArchConfig, x, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p, cfg: ArchConfig, x, positions):
+    rkv = cfg.kv_lora_rank
+    ckv_rope = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rmsnorm(ckv_rope[..., :rkv], p["kv_norm"])
+    k_rope = apply_rope(ckv_rope[..., None, rkv:], positions, cfg.rope_theta)
+    return c_kv, k_rope[..., 0, :]                       # [B,S,rkv], [B,S,dr]
+
+
+def mla_attention_train(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence path: expand K/V, blocked flash attention."""
+    B, S, _ = x.shape
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv, k_rope = _compress_kv(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, cfg.n_heads, dr))], axis=-1)
+    out = flash_attention(q, k, v, causal=True,
+                          scale=1.0 / np.sqrt(dn + dr))    # [B,S,H,dv]
+    return jnp.einsum("bshe,hed->bsd", out, p["w_o"])
+
+
+def mla_attention_decode(p, cfg: ArchConfig, x: jax.Array,
+                         cache: dict, length) -> tuple[jax.Array, dict]:
+    """Absorbed single-step decode against the compressed cache.
+
+    x: [B, 1, d]; cache: {"c_kv": [B, S, rkv], "k_rope": [B, S, dr]}.
+    """
+    B = x.shape[0]
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    positions = jnp.full((B, 1), length, jnp.int32)
+    q_nope, q_rope = _project_q(p, cfg, x, positions)      # [B,1,H,dn],[B,1,H,dr]
+    c_kv_new, k_rope_new = _compress_kv(p, cfg, x, positions)
+
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), length, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), length, axis=1)
+
+    # absorb W_UK into q: q_lat [B,H,rkv].  Cache operands (c_kv, k_rope)
+    # stay in storage dtype — preferred_element_type gives f32 accumulation
+    # without promoting the carried cache buffers (§Perf iter 7)
+    f32 = jnp.float32
+    q_lat = jnp.einsum("bhe,rhe->bhr", q_nope[:, 0], p["w_uk"],
+                       preferred_element_type=f32)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat.astype(c_kv.dtype), c_kv,
+                       preferred_element_type=f32)
+    s_rope = jnp.einsum("bhe,bse->bhs", q_rope[:, 0], k_rope,
+                        preferred_element_type=f32)
+    s = (s_lat + s_rope) / np.sqrt(dn + dr)
+    pos = jnp.arange(s.shape[-1])
+    s = jnp.where(pos[None, None, :] <= length, s, -jnp.inf)
+    attn = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", attn.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=f32)
+    # absorb W_UV on the way out
+    ctx = jnp.einsum("bhr,rhe->bhe", ctx_lat.astype(p["w_uv"].dtype),
+                     p["w_uv"], preferred_element_type=f32)
+    out = jnp.einsum("bhe,hed->bd", ctx.astype(x.dtype), p["w_o"])
+    return out[:, None, :], {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }

@@ -1,0 +1,13 @@
+from repro.optim.optim import (
+    OptState, adamw, sgd, clip_by_global_norm, cosine_schedule,
+    linear_warmup_cosine, global_norm,
+)
+from repro.optim.compression import (
+    CompressionState, compress_int8, decompress_int8, ef_compress_grads,
+)
+
+__all__ = [
+    "OptState", "adamw", "sgd", "clip_by_global_norm", "cosine_schedule",
+    "linear_warmup_cosine", "global_norm",
+    "CompressionState", "compress_int8", "decompress_int8", "ef_compress_grads",
+]

@@ -1,0 +1,58 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor-scaled quantization before the cross-pod all-reduce; the
+quantization residual is carried in an error-feedback buffer so compression
+bias doesn't accumulate (Seide et al. / EF-SGD).  Used on the ``pod`` axis
+only — intra-pod ICI is fast, the pod-to-pod DCN hop is the thin pipe this
+is worth 4x on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CompressionState:
+    error: Any   # pytree of residuals, same structure as grads
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_compression(grads) -> CompressionState:
+    return CompressionState(error=jax.tree.map(
+        lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+def ef_compress_grads(grads, state: CompressionState | None):
+    """Quantize grads with error feedback.  Returns (dequantized_grads, state).
+
+    The round trip models what crosses the wire: callers all-reduce the
+    *dequantized* tensors (bitwise what the receiving pod reconstructs).
+    """
+    if state is None:
+        state = init_compression(grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = compress_int8(g32)
+        deq = decompress_int8(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat = jax.tree.map(one, grads, state.error)
+    out = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return out, CompressionState(error=err)

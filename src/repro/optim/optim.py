@@ -1,0 +1,119 @@
+"""Optimizers: AdamW + momentum SGD, global-norm clipping, LR schedules.
+
+Self-contained (no optax in the container).  States are pytrees mirroring
+the parameter tree, so they shard with the parameters under pjit (ZeRO-style
+optimizer-state sharding falls out of the same in_shardings rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("step", "mu", "nu"), meta_fields=())
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    mu: Any      # first moment (or momentum buffer for sgd)
+    nu: Any      # second moment (None-like zeros for sgd)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        t = jnp.minimum(step, total_steps) / max(total_steps, 1)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         min_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
+    def lr(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return lr
+
+
+def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          moment_dtype=jnp.float32):
+    """Returns (init_fn, update_fn).  update: (grads, state, params) -> (new_params, new_state)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** stepf
+        bc2 = 1 - b2 ** stepf
+        lr_t = lr_fn(stepf)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p - lr_t * delta.astype(p.dtype)).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step=step, mu=new_mu, nu=new_nu)
+
+    return init, update
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.9,
+        weight_decay: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params) -> OptState:
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step.astype(jnp.float32))
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g32
+            return (p - lr_t * m.astype(p.dtype)).astype(p.dtype), m
+
+        flat = jax.tree.map(upd, grads, state.mu, params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step=step, mu=new_mu, nu=state.nu)
+
+    return init, update

@@ -1,0 +1,95 @@
+"""Serving steps: prefill + decode (+ FoG early-exit decode), pjit-ready."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import dp_axes
+from repro.launch.sharding import cache_shardings, param_shardings
+from repro.models import transformer as T
+from repro.models.fog_exit import decode_step_fog
+from repro.train.loop import SHAPES, input_specs
+
+
+def make_serve_step(cfg: ArchConfig, mesh, shape: str, *, fog: bool = False,
+                    fog_thresh: float = 0.5, param_dtype=jnp.bfloat16):
+    """Jitted one-token decode with in/out shardings.
+
+    Returns (jitted_fn, (params_shape, cache_shape, inputs_shape)).
+    fn(params, cache, token|embeds, length) -> (logits, new_cache[, hops])
+    """
+    sp = SHAPES[shape]
+    assert sp.kind == "decode", shape
+    B, S = sp.global_batch, sp.seq_len
+
+    params_shape = jax.eval_shape(
+        lambda k: T.init_params(cfg, k, param_dtype), jax.random.key(0))
+    p_specs = param_shardings(cfg, mesh, params_shape)
+    cache_shape = jax.eval_shape(
+        partial(T.cache_init, cfg, B, S, param_dtype))
+    c_specs = cache_shardings(cfg, mesh, cache_shape)
+    inp = input_specs(cfg, shape)
+    dp = dp_axes(mesh)
+    import numpy as np
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    bdp = dp if B % dp_size == 0 else ()   # batch=1 (long_500k): replicate
+    i_specs = {k: (P(bdp, *([None] * (len(v.shape) - 1))) if v.shape else P())
+               for k, v in inp.items()}
+
+    logit_m = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    if fog:
+        def step(params, cache, token, length, embeds=None):
+            logits, cache, hops = decode_step_fog(
+                params, cfg, token, cache, length, fog_thresh, embeds=embeds)
+            return logits, cache, hops
+        out_specs = (P(bdp, logit_m), c_specs, P(bdp))
+    else:
+        def step(params, cache, token, length, embeds=None):
+            logits, cache = T.decode_step(params, cfg, token, cache, length,
+                                          embeds=embeds)
+            return logits, cache
+        out_specs = (P(bdp, logit_m), c_specs)
+
+    if cfg.frontend:
+        def wrapped(params, cache, embeds, length):
+            return step(params, cache, None, length, embeds=embeds)
+        jitted = jax.jit(wrapped,
+                         in_shardings=(p_specs, c_specs, i_specs["embeds"], P()),
+                         out_shardings=out_specs)
+    else:
+        def wrapped(params, cache, token, length):
+            return step(params, cache, token, length)
+        jitted = jax.jit(wrapped,
+                         in_shardings=(p_specs, c_specs, i_specs["token"], P()),
+                         out_shardings=out_specs)
+    return jitted, (params_shape, cache_shape, inp)
+
+
+def make_prefill_step(cfg: ArchConfig, mesh, shape: str, *,
+                      param_dtype=jnp.bfloat16):
+    """Jitted prefill for the prefill_32k cells."""
+    sp = SHAPES[shape]
+    assert sp.kind == "prefill", shape
+    params_shape = jax.eval_shape(
+        lambda k: T.init_params(cfg, k, param_dtype), jax.random.key(0))
+    p_specs = param_shardings(cfg, mesh, params_shape)
+    inp = input_specs(cfg, shape)
+    dp = dp_axes(mesh)
+    i_specs = {k: P(dp, *([None] * (len(v.shape) - 1))) for k, v in inp.items()}
+
+    def step(params, **inputs):
+        return T.prefill(params, cfg, tokens=inputs.get("tokens"),
+                         embeds=inputs.get("embeds"))
+
+    key = "embeds" if cfg.frontend else "tokens"
+
+    def wrapped(params, x):
+        return step(params, **{key: x})
+
+    jitted = jax.jit(wrapped, in_shardings=(p_specs, i_specs[key]),
+                     out_shardings=None)
+    return jitted, (params_shape, inp)

@@ -1,0 +1,105 @@
+"""Batched request scheduler for serving (continuous batching + FoG).
+
+A slot-based continuous-batching scheduler: a fixed decode batch of
+``n_slots`` lanes; finished/empty lanes are refilled from the request queue
+each step (the standard vLLM-style slot model, minus paged KV — caches here
+are dense per-slot rings).  With FoG decode enabled, per-step grove usage
+(hops) is accumulated per request, giving the per-request energy/FLOP
+accounting that mirrors the paper's per-input hop counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [P] int32
+    max_new_tokens: int = 32
+    # filled by the scheduler:
+    generated: list = dataclasses.field(default_factory=list)
+    hops: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SlotState:
+    request: Request | None = None
+    length: int = 0               # tokens already in this slot's cache
+
+
+class ContinuousBatcher:
+    """Drives decode_fn over a fixed slot batch, refilling as lanes finish.
+
+    decode_fn(tokens [n_slots] int32, lengths [n_slots] int32)
+        -> (logits [n_slots, V], hops [n_slots] | None)
+    prefill_fn(slot, prompt) -> int  (returns prompt length in cache)
+    """
+
+    def __init__(self, n_slots: int, decode_fn: Callable,
+                 prefill_fn: Callable, eos_id: int = 1):
+        self.slots = [SlotState() for _ in range(n_slots)]
+        self.queue: deque[Request] = deque()
+        self.decode_fn = decode_fn
+        self.prefill_fn = prefill_fn
+        self.eos_id = eos_id
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _refill(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.request is None and self.queue:
+                req = self.queue.popleft()
+                slot.request = req
+                slot.length = self.prefill_fn(i, req.prompt)
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.request is not None)
+
+    def step(self) -> int:
+        """One decode step across all active slots.  Returns #active."""
+        self._refill()
+        if self.active == 0:
+            return 0
+        tokens = np.zeros((len(self.slots),), np.int32)
+        lengths = np.zeros((len(self.slots),), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.request is not None:
+                last = (s.request.generated[-1] if s.request.generated
+                        else s.request.prompt[-1])
+                tokens[i] = last
+                lengths[i] = s.length
+        logits, hops = self.decode_fn(jnp.asarray(tokens), jnp.asarray(lengths))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        hops = np.asarray(hops) if hops is not None else None
+        for i, s in enumerate(self.slots):
+            req = s.request
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            if hops is not None:
+                req.hops.append(int(hops[i]))
+            s.length += 1
+            if tok == self.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.completed.append(req)
+                self.slots[i] = SlotState()
+        return self.active
+
+    def run(self, max_steps: int = 10000) -> list[Request]:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed

@@ -1,0 +1,98 @@
+"""Fault tolerance: heartbeats, failure detection, restart, elastic re-mesh.
+
+On a real multi-pod deployment each host runs a ``Heartbeat`` writer and the
+coordinator a ``FleetMonitor``; here the same logic is exercised in-process
+by the tests (the container is one host).  The contract:
+
+  * every host touches  <dir>/hb_<host>.json  every ``interval`` seconds
+  * a host is DEAD if its heartbeat is older than ``timeout``
+  * on death the monitor returns a RestartPlan: newest committed checkpoint
+    + the surviving host set; launch/train.py re-enters its main loop with
+    a mesh rebuilt from the surviving hosts (elastic: data-parallel extent
+    shrinks, model extent must stay — enforced here)
+  * stragglers (heartbeat fresh but step counter stale vs the fleet median)
+    are reported for eviction — the FoG ring tolerates them natively
+    (neighbor-only dependency); the training all-reduce does not.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class HostState:
+    host: str
+    last_beat: float
+    step: int
+
+
+class Heartbeat:
+    def __init__(self, directory: str, host: str):
+        self.path = Path(directory) / f"hb_{host}.json"
+        self.host = host
+
+    def beat(self, step: int) -> None:
+        self.path.write_text(json.dumps(
+            {"host": self.host, "time": time.time(), "step": step}))
+
+
+@dataclasses.dataclass
+class RestartPlan:
+    restore_step: int | None
+    alive_hosts: list[str]
+    dead_hosts: list[str]
+    stragglers: list[str]
+    new_data_extent: int
+
+
+class FleetMonitor:
+    """Coordinator-side failure detection + elastic restart planning."""
+
+    def __init__(self, directory: str, *, timeout: float = 60.0,
+                 straggler_factor: float = 0.5):
+        self.dir = Path(directory)
+        self.timeout = timeout
+        self.straggler_factor = straggler_factor
+
+    def poll(self) -> list[HostState]:
+        out = []
+        for p in self.dir.glob("hb_*.json"):
+            try:
+                d = json.loads(p.read_text())
+                out.append(HostState(d["host"], d["time"], d["step"]))
+            except (json.JSONDecodeError, KeyError):
+                continue   # torn write: treat as missing this round
+        return out
+
+    def plan(self, *, now: float | None = None,
+             model_extent: int = 16, chips_per_host: int = 4) -> RestartPlan:
+        now = time.time() if now is None else now
+        hosts = self.poll()
+        alive = [h for h in hosts if now - h.last_beat <= self.timeout]
+        dead = [h for h in hosts if now - h.last_beat > self.timeout]
+        steps = sorted(h.step for h in alive)
+        median = steps[len(steps) // 2] if steps else 0
+        stragglers = [h.host for h in alive
+                      if median > 10 and h.step < median * self.straggler_factor]
+        # elastic: the data axis shrinks to what the alive hosts support;
+        # the model axis is fixed by the sharded parameter layout
+        total_chips = len(alive) * chips_per_host
+        new_data = max(1, total_chips // model_extent)
+        return RestartPlan(
+            restore_step=ckpt.latest_step(self.dir),
+            alive_hosts=sorted(h.host for h in alive),
+            dead_hosts=sorted(h.host for h in dead),
+            stragglers=stragglers,
+            new_data_extent=new_data,
+        )
+
+
+def deterministic_data_key(base_seed: int, step: int) -> int:
+    """Step-indexed PRNG stream: after restart the data order at step N is
+    identical regardless of crash history."""
+    return (base_seed * 1_000_003 + step) % (2**31 - 1)

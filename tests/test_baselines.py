@@ -1,0 +1,49 @@
+"""Baseline classifiers: sanity accuracy + Table-1 orderings on one dataset."""
+import numpy as np
+import pytest
+
+from repro.baselines import train_cnn, train_mlp, train_svm_lr, train_svm_rbf
+from repro.data import make_dataset
+from repro.forest import TrainConfig, rf_predict, train_random_forest
+
+
+@pytest.fixture(scope="module")
+def seg():
+    return make_dataset("segmentation")
+
+
+@pytest.fixture(scope="module")
+def models(seg):
+    return {
+        "svm_lr": train_svm_lr(seg),
+        "svm_rbf": train_svm_rbf(seg),
+        "mlp": train_mlp(seg),
+        "cnn": train_cnn(seg),
+    }
+
+
+def test_baselines_learn(models):
+    for name, m in models.items():
+        assert m.accuracy > 0.5, (name, m.accuracy)
+
+
+def test_nonlinear_beats_linear(models):
+    """Table 1's central ordering: RBF/MLP/CNN > linear SVM on these tasks."""
+    assert models["svm_rbf"].accuracy > models["svm_lr"].accuracy + 0.05
+    assert models["mlp"].accuracy > models["svm_lr"].accuracy
+
+
+def test_rf_competitive_with_nonlinear(seg, models):
+    rf = train_random_forest(seg.x_train, seg.y_train, seg.n_classes,
+                             TrainConfig(n_trees=16, max_depth=8, seed=0))
+    import jax.numpy as jnp
+    acc = float(np.mean(np.asarray(rf_predict(rf, jnp.asarray(seg.x_test))) == seg.y_test))
+    assert acc > models["svm_lr"].accuracy
+    assert acc > models["svm_rbf"].accuracy - 0.06
+
+
+def test_energy_ordering(models):
+    """Table 1 energies: SVM_LR cheapest; CNN and RBF the most expensive."""
+    e = {k: m.energy_nj for k, m in models.items()}
+    assert e["svm_lr"] < e["mlp"] < e["cnn"]
+    assert e["svm_rbf"] > e["svm_lr"] * 5

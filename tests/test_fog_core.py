@@ -1,0 +1,193 @@
+"""Behaviour tests for the paper's core claims (Algorithms 1-2, §3.2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    fog_eval, fog_eval_lazy, fog_energy, gc_train, maxdiff,
+    maxdiff_multioutput, rf_report, split, top2,
+)
+from repro.core.grove import grove_predict_proba
+from repro.data import make_dataset
+from repro.forest import (
+    TensorForest, TrainConfig, forest_proba, rf_predict, train_random_forest,
+)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    ds = make_dataset("penbased")
+    rf = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                             TrainConfig(n_trees=16, max_depth=6, seed=1))
+    return ds, rf
+
+
+# --------------------------------------------------------------- MaxDiff ---
+def test_maxdiff_basic():
+    ar = jnp.asarray([[0.32, 0.35, 0.33]])
+    np.testing.assert_allclose(maxdiff(ar), [0.35 - 0.33], atol=1e-7)
+
+
+def test_maxdiff_paper_example():
+    # §3.2.2 worked example: G0+G1 averaged -> {0.3, 0.4, 0.3}, conf 0.1
+    p0 = jnp.asarray([0.32, 0.35, 0.33])
+    p1 = jnp.asarray([0.28, 0.45, 0.27])
+    avg = (p0 + p1) / 2
+    assert float(maxdiff(avg[None])[0]) >= 0.1 - 1e-6
+    assert int(jnp.argmax(avg)) == 1
+
+
+def test_maxdiff_multioutput_min_rule():
+    ar = jnp.asarray([[[0.9, 0.1], [0.55, 0.45]]])  # margins 0.8, 0.1
+    np.testing.assert_allclose(maxdiff_multioutput(ar), [0.1], atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_top2_property(C, B, seed):
+    rng = np.random.default_rng(seed)
+    ar = jnp.asarray(rng.normal(size=(B, C)).astype(np.float32))
+    m1, m2 = top2(ar)
+    srt = np.sort(np.asarray(ar), axis=-1)
+    np.testing.assert_allclose(np.asarray(m1), srt[:, -1], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), srt[:, -2], atol=1e-6)
+
+
+# ------------------------------------------------------------ Algorithm 1 ---
+def test_split_partition(trained):
+    """Groves are disjoint and cover the forest (Algorithm 1)."""
+    _, rf = trained
+    gc = split(rf, 4)
+    assert gc.n_groves == 4 and gc.grove_size == 4
+    back = gc.as_forest()
+    np.testing.assert_array_equal(np.asarray(back.feature), np.asarray(rf.feature))
+    np.testing.assert_array_equal(np.asarray(back.leaf), np.asarray(rf.leaf))
+
+
+def test_grove_predict_proba_matches_subforest(trained):
+    ds, rf = trained
+    gc = split(rf, 4)
+    x = jnp.asarray(ds.x_test[:32])
+    for g in range(gc.n_groves):
+        want = forest_proba(gc.grove(g), x)
+        got = grove_predict_proba(gc, jnp.full((32,), g, jnp.int32), x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------ Algorithm 2 ---
+def test_fog_max_threshold_uses_every_grove(trained):
+    """thresh > 1 forces every input through every grove (FoG_max == RF-like)."""
+    ds, rf = trained
+    gc = split(rf, 2)
+    res = fog_eval(gc, jnp.asarray(ds.x_test[:256]), jax.random.key(0),
+                   1.1, gc.n_groves)
+    assert (np.asarray(res.hops) == gc.n_groves).all()
+    # FoG_max probability == full-forest predict_proba (grove mean of means,
+    # equal grove sizes => same as forest mean)
+    want = forest_proba(rf, jnp.asarray(ds.x_test[:256]))
+    np.testing.assert_allclose(np.asarray(res.proba), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fog_hops_monotone_in_threshold(trained):
+    """Higher confidence demand => more groves per input (Fig 5 mechanism)."""
+    ds, rf = trained
+    gc = split(rf, 2)
+    x = jnp.asarray(ds.x_test[:512])
+    hops = []
+    for thr in [0.05, 0.2, 0.5, 0.9]:
+        res = fog_eval(gc, x, jax.random.key(0), thr, gc.n_groves)
+        hops.append(float(np.asarray(res.hops).mean()))
+    assert hops == sorted(hops), hops
+    assert hops[0] < hops[-1]
+
+
+def test_fog_energy_below_rf_at_moderate_threshold(trained):
+    """The paper's headline: FoG_opt ~1.5x below conventional RF energy."""
+    ds, rf = trained
+    gc = split(rf, 2)
+    res = fog_eval(gc, jnp.asarray(ds.x_test), jax.random.key(0), 0.3, gc.n_groves)
+    e_fog = fog_energy(np.asarray(res.hops), gc.grove_size, gc.depth,
+                       gc.n_classes, ds.n_features)
+    e_rf = rf_report(len(ds.y_test), rf.n_trees, rf.depth, gc.n_classes)
+    assert e_fog.per_example_nj < e_rf.per_example_nj
+    # and accuracy must stay comparable (within 3.2% per paper)
+    rf_acc = float(np.mean(np.asarray(rf_predict(rf, jnp.asarray(ds.x_test))) == ds.y_test))
+    fog_acc = float(np.mean(np.asarray(res.label) == ds.y_test))
+    assert fog_acc >= rf_acc - 0.05
+
+
+def test_fog_lazy_matches_scan(trained):
+    ds, rf = trained
+    gc = split(rf, 4)
+    x = jnp.asarray(ds.x_test[:128])
+    a = fog_eval(gc, x, jax.random.key(3), 0.25, gc.n_groves)
+    b = fog_eval_lazy(gc, x, jax.random.key(3), 0.25, gc.n_groves)
+    np.testing.assert_array_equal(np.asarray(a.hops), np.asarray(b.hops))
+    np.testing.assert_allclose(np.asarray(a.proba), np.asarray(b.proba),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_max_hops_cap(trained):
+    ds, rf = trained
+    gc = split(rf, 2)
+    res = fog_eval(gc, jnp.asarray(ds.x_test[:64]), jax.random.key(0), 1.1, 3)
+    assert (np.asarray(res.hops) == 3).all()
+
+
+def test_gc_train_end_to_end():
+    ds = make_dataset("segmentation")
+    gc = gc_train(8, 2, ds.x_train, ds.y_train, ds.n_classes,
+                  TrainConfig(max_depth=6, seed=2))
+    assert gc.n_groves == 4
+    res = fog_eval(gc, jnp.asarray(ds.x_test), jax.random.key(0), 0.3, 4)
+    acc = float(np.mean(np.asarray(res.label) == ds.y_test))
+    assert acc > 0.7, acc
+
+
+# ------------------------------------------------------- budgeted training ---
+def test_budgeted_training_prefers_cheap_features():
+    ds = make_dataset("penbased")
+    cost = np.ones(ds.n_features)
+    cost[: ds.n_features // 2] = 100.0   # first half expensive
+    cfg = dataclasses.replace(TrainConfig(n_trees=8, max_depth=5, seed=3),
+                              feature_cost=cost, cost_weight=0.002)
+    rf = train_random_forest(ds.x_train, ds.y_train, ds.n_classes, cfg)
+    used = np.asarray(rf.feature).ravel()
+    thr = np.asarray(rf.threshold).ravel()
+    real = used[np.isfinite(thr)]        # padded nodes have thr=inf
+    frac_expensive = (real < ds.n_features // 2).mean()
+    assert frac_expensive < 0.35, frac_expensive
+
+
+def test_fog_multioutput_min_rule_gates_on_weakest_output():
+    """Paper footnote 1: confidence = Min over outputs of the margins; a
+    single uncertain output must keep the input hopping."""
+    from repro.core import fog_eval_multioutput
+    ds = make_dataset("penbased")
+    # output 0: the real labels; output 1: noisy labels (hard task)
+    rng = np.random.default_rng(0)
+    y2 = np.where(rng.random(len(ds.y_train)) < 0.45,
+                  rng.integers(0, ds.n_classes, len(ds.y_train)), ds.y_train)
+    rf1 = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                              TrainConfig(n_trees=8, max_depth=6, seed=1))
+    rf2 = train_random_forest(ds.x_train, y2.astype(np.int32), ds.n_classes,
+                              TrainConfig(n_trees=8, max_depth=6, seed=2))
+    gcs = (split(rf1, 2), split(rf2, 2))
+    x = jnp.asarray(ds.x_test[:256])
+
+    res_mo = fog_eval_multioutput(gcs, x, jax.random.key(0), 0.3, 4)
+    assert res_mo.proba.shape == (256, 2, ds.n_classes)
+    assert res_mo.label.shape == (256, 2)
+    # single-output on the easy head alone exits earlier than the joint
+    res_easy = fog_eval(gcs[0], x, jax.random.key(0), 0.3, 4)
+    assert float(np.asarray(res_mo.hops).mean()) >= \
+        float(np.asarray(res_easy.hops).mean())
+    # easy-head accuracy survives the joint gating
+    acc = float(np.mean(np.asarray(res_mo.label[:, 0]) == ds.y_test[:256]))
+    assert acc > 0.8, acc

@@ -1,0 +1,75 @@
+"""FoG layer-grove early exit (models/fog_exit.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.models.fog_exit import decode_step_fog, grove_boundaries
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("tinyllama-1.1b").scaled(n_layers=4, fog_groups=4)
+    params = T.init_params(cfg, jax.random.key(0), jnp.float32)
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    _, cache = T.prefill(params, cfg, tokens=tokens, max_seq=S + 8)
+    return cfg, params, tokens, cache, S
+
+
+def test_grove_boundaries_cover_stack():
+    cfg = smoke_config("tinyllama-1.1b").scaled(n_layers=4, fog_groups=4)
+    sizes = grove_boundaries(cfg)
+    _, _, n_rep = T.layer_plan(cfg)
+    assert sum(sizes) == n_rep
+    assert all(s > 0 for s in sizes)
+
+
+def test_fog_exit_max_threshold_matches_full_decode(setup):
+    """thresh > 1: no lane exits -> logits identical to plain decode_step."""
+    cfg, params, tokens, cache, S = setup
+    tok = tokens[:, -1]
+    want, cache_w = T.decode_step(params, cfg, tok, cache, jnp.int32(S))
+    got, cache_g, hops = decode_step_fog(params, cfg, tok, cache,
+                                         jnp.int32(S), 2.0)
+    assert (np.asarray(hops) == len(grove_boundaries(cfg))).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # caches updated identically when nothing exits
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5),
+        cache_w, cache_g)
+
+
+def test_fog_exit_low_threshold_uses_one_grove(setup):
+    cfg, params, tokens, cache, S = setup
+    got, _, hops = decode_step_fog(params, cfg, tokens[:, -1], cache,
+                                   jnp.int32(S), 0.0)
+    assert (np.asarray(hops) == 1).all()
+    assert not np.isnan(np.asarray(got)).any()
+
+
+def test_fog_exit_hops_monotone_in_threshold(setup):
+    cfg, params, tokens, cache, S = setup
+    means = []
+    for thr in [0.0, 0.01, 0.5, 2.0]:
+        _, _, hops = decode_step_fog(params, cfg, tokens[:, -1], cache,
+                                     jnp.int32(S), thr)
+        means.append(float(np.asarray(hops).mean()))
+    assert means == sorted(means), means
+
+
+def test_fog_exit_kv_propagation_keeps_decoding_sane(setup):
+    """After an early-exit step, later full steps must still work (the
+    skipped groves' caches were filled from the propagated state)."""
+    cfg, params, tokens, cache, S = setup
+    tok = tokens[:, -1]
+    logits, cache, hops = decode_step_fog(params, cfg, tok, cache,
+                                          jnp.int32(S), 0.0)
+    assert (np.asarray(hops) == 1).all()
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache, _ = decode_step_fog(params, cfg, nxt, cache,
+                                        jnp.int32(S + 1), 2.0)
+    assert not np.isnan(np.asarray(logits2)).any()

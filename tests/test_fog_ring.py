@@ -1,0 +1,95 @@
+"""Distributed FoG ring (shard_map + ppermute) — needs >1 device, so the
+actual check runs in a subprocess with forced host devices."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+RING_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.core import split, fog_eval
+    from repro.core.fog_ring import fog_ring_eval
+    from repro.data import make_dataset
+    from repro.forest import TrainConfig, train_random_forest
+
+    ds = make_dataset("penbased")
+    rf = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                             TrainConfig(n_trees=16, max_depth=6, seed=1))
+    gc = split(rf, 2)   # 8 groves -> 8 shards
+    assert gc.n_groves == 8
+    mesh = jax.make_mesh((8,), ("grove",))
+    x = jnp.asarray(ds.x_test[:512])
+
+    proba, hops = fog_ring_eval(gc, x, jax.random.key(0), 0.3, 8, mesh)
+    label = np.argmax(np.asarray(proba), axis=-1)
+    acc = (label == ds.y_test[:512]).mean()
+    assert acc > 0.8, acc
+
+    # FoG_max on the ring == full forest probabilities for every lane
+    proba_max, hops_max = fog_ring_eval(gc, x, jax.random.key(0), 1.1, 8, mesh)
+    assert (np.asarray(hops_max) == 8).all()
+    from repro.forest import forest_proba
+    want = np.asarray(forest_proba(rf, x))
+    np.testing.assert_allclose(np.asarray(proba_max), want, rtol=1e-5, atol=1e-6)
+
+    # ring statistics match the batched evaluator distributionally: the
+    # mean hop count is a property of (forest, data, threshold), not of
+    # which grove an example starts at
+    res = fog_eval(gc, x, jax.random.key(0), 0.3, 8)
+    m_ring = float(np.asarray(hops).mean())
+    m_batch = float(np.asarray(res.hops).mean())
+    assert abs(m_ring - m_batch) / m_batch < 0.15, (m_ring, m_batch)
+    print("RING-OK", acc, m_ring, m_batch)
+""")
+
+
+def test_fog_ring_subprocess():
+    repo = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, "-c", RING_SCRIPT],
+        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "RING-OK" in proc.stdout
+
+
+KERNEL_RING_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.core import split
+    from repro.core.fog_ring import fog_ring_eval
+    from repro.data import make_dataset
+    from repro.forest import TrainConfig, train_random_forest
+
+    ds = make_dataset("penbased")
+    rf = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                             TrainConfig(n_trees=16, max_depth=6, seed=1))
+    gc = split(rf, 2)
+    mesh = jax.make_mesh((8,), ("grove",))
+    x = jnp.asarray(ds.x_test[:512])
+
+    # Pallas tree-traversal PE inside the ring == jnp path, bit-for-bit hops
+    pk, hk = fog_ring_eval(gc, x, jax.random.key(0), 0.3, 8, mesh,
+                           use_kernels=True)
+    pj, hj = fog_ring_eval(gc, x, jax.random.key(0), 0.3, 8, mesh,
+                           use_kernels=False)
+    np.testing.assert_array_equal(np.asarray(hk), np.asarray(hj))
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pj),
+                               rtol=1e-5, atol=1e-6)
+    print("KERNEL-RING-OK")
+""")
+
+
+def test_fog_ring_kernel_backend_subprocess():
+    repo = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, "-c", KERNEL_RING_SCRIPT],
+        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "KERNEL-RING-OK" in proc.stdout

@@ -1,0 +1,225 @@
+"""Per-kernel allclose vs the pure-jnp oracle, across shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _random_forest_arrays(rng, t, depth, C, F):
+    n_nodes = 2**depth - 1
+    feature = rng.integers(0, F, size=(t, n_nodes)).astype(np.int32)
+    threshold = rng.normal(size=(t, n_nodes)).astype(np.float32)
+    leaf = rng.dirichlet(np.ones(C), size=(t, 2**depth)).astype(np.float32)
+    return feature, threshold, leaf
+
+
+@pytest.mark.parametrize("t,depth,C,F,B", [
+    (1, 1, 2, 3, 4),
+    (4, 3, 5, 10, 32),
+    (8, 6, 10, 64, 128),
+    (16, 8, 26, 617, 256),
+    (2, 4, 7, 19, 64),
+])
+def test_tree_traverse_matches_ref(t, depth, C, F, B):
+    rng = np.random.default_rng(42 + t)
+    feature, threshold, leaf = _random_forest_arrays(rng, t, depth, C, F)
+    x = rng.normal(size=(B, F)).astype(np.float32)
+    got = ops.tree_traverse(feature, threshold, leaf, x, block_b=min(64, B))
+    want = ref.tree_traverse_ref(jnp.asarray(feature), jnp.asarray(threshold),
+                                 jnp.asarray(leaf), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,C", [(4, 2), (32, 10), (256, 26), (128, 7), (64, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_top2_confidence_matches_ref(B, C, dtype):
+    rng = np.random.default_rng(B + C)
+    prob = jnp.asarray(rng.dirichlet(np.ones(C), size=B), dtype)
+    got = ops.top2_confidence(prob, block_b=min(64, B))
+    want = ref.top2_confidence_ref(prob)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-6,
+                               atol=1e-6)
+
+
+def test_top2_handles_ties():
+    prob = jnp.asarray([[0.4, 0.4, 0.2], [1.0, 0.0, 0.0], [1 / 3] * 3])
+    got = ops.top2_confidence(prob, block_b=3)
+    np.testing.assert_allclose(np.asarray(got), [0.0, 1.0, 0.0], atol=1e-7)
+
+
+@pytest.mark.parametrize("B,C", [(8, 3), (64, 10), (256, 26)])
+def test_grove_aggregate_matches_ref(B, C):
+    rng = np.random.default_rng(7)
+    prob_acc = jnp.asarray(rng.random((B, C)), jnp.float32)
+    contrib = jnp.asarray(rng.dirichlet(np.ones(C), size=B), jnp.float32)
+    live = jnp.asarray(rng.random(B) > 0.3)
+    hops = jnp.asarray(rng.integers(0, 5, B), jnp.int32)
+    thresh = jnp.float32(0.15)
+    got = ops.grove_aggregate(prob_acc, contrib, live, hops, thresh,
+                              block_b=min(64, B))
+    want = ref.grove_aggregate_ref(prob_acc, contrib, live, hops, thresh)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 8), depth=st.integers(1, 6),
+    C=st.integers(2, 12), F=st.integers(2, 40),
+    log_b=st.integers(0, 6), seed=st.integers(0, 2**31 - 1),
+)
+def test_tree_traverse_property(t, depth, C, F, log_b, seed):
+    B = 2**log_b
+    rng = np.random.default_rng(seed)
+    feature, threshold, leaf = _random_forest_arrays(rng, t, depth, C, F)
+    x = rng.normal(size=(B, F)).astype(np.float32)
+    got = np.asarray(ops.tree_traverse(feature, threshold, leaf, x, block_b=B))
+    want = np.asarray(ref.tree_traverse_ref(
+        jnp.asarray(feature), jnp.asarray(threshold), jnp.asarray(leaf),
+        jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # invariant: output rows are distributions (leaves are dirichlet rows)
+    np.testing.assert_allclose(got.sum(-1), 1.0, rtol=1e-5)
+    assert (got >= -1e-7).all()
+
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.models.layers import flash_attention as flash_jnp
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,K,D,Dv,causal", [
+    (1, 8, 8, 2, 1, 4, 4, True),
+    (2, 64, 64, 4, 2, 16, 16, True),
+    (2, 128, 128, 8, 8, 32, 32, True),
+    (1, 64, 64, 4, 1, 32, 16, True),    # MQA + Dv != D (MLA-style)
+    (2, 64, 64, 4, 2, 16, 16, False),
+])
+def test_flash_attention_pallas_matches_ref(B, Sq, Sk, H, K, D, Dv, causal):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sk, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sk, K, Dv)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, blk_q=32, blk_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_jnp_matches_ref():
+    """The pure-JAX blocked path (used in the dry-run) vs the oracle."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.float32)
+    got = flash_jnp(q, k, v, causal=True, blk_q=16, blk_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([16, 32, 64]),
+       st.sampled_from([(4, 2), (4, 1), (8, 8)]),
+       st.sampled_from([8, 16, 32]), st.integers(0, 2**31 - 1))
+def test_flash_attention_property(B, S, HK, D, seed):
+    H, K = HK
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, blk_q=16, blk_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    # row-stochastic invariant: attention output of constant v is constant
+    vc = jnp.ones_like(v)
+    out_c = flash_attention_pallas(q, k, vc, causal=True, blk_q=16, blk_k=16)
+    np.testing.assert_allclose(np.asarray(out_c), 1.0, rtol=1e-5)
+
+
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+
+@pytest.mark.parametrize("B,nc,Q,H,P,N", [
+    (1, 1, 8, 1, 4, 4),
+    (2, 2, 16, 3, 8, 8),
+    (1, 4, 32, 5, 16, 16),
+    (2, 2, 64, 2, 32, 32),
+])
+def test_ssd_chunk_matches_ref(B, nc, Q, H, P, N):
+    rng = np.random.default_rng(B * 100 + Q)
+    xbar = jnp.asarray(rng.normal(size=(B, nc, Q, H, P)), jnp.float32)
+    # negative log-decays, like softplus(dt) * (-exp(A_log))
+    a = jnp.asarray(-rng.uniform(0.01, 0.5, size=(B, nc, H, Q)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, nc, Q, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, nc, Q, N)), jnp.float32)
+    y, st = ssd_chunk_pallas(xbar, a, Bm, Cm)
+    y_ref, st_ref = ref.ssd_chunk_ref(xbar, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_chunk_consistent_with_mamba_layer():
+    """Kernel output plugged into the inter-chunk recurrence must equal the
+    pure-jnp ssd_chunked end to end."""
+    from repro.models.mamba2 import ssd_chunked
+    rng = np.random.default_rng(5)
+    B, S, H, P, N, Q = 2, 64, 3, 8, 8, 16
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(B, S, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    y_want, final_want = ssd_chunked(x, dt, A, Bm, Cm, Q)
+
+    nc = S // Q
+    a = (dt * A[None, None, :]).reshape(B, nc, Q, H).transpose(0, 1, 3, 2)
+    xbar = (x * dt[..., None]).reshape(B, nc, Q, H, P)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+    y_diag, states = ssd_chunk_pallas(xbar, a, Bc, Cc)
+
+    # inter-chunk recurrence (same as models/mamba2.py)
+    cum = jnp.cumsum(a, axis=-1)
+    chunk_decay = jnp.exp(cum[..., -1])
+    def step(s_prev, inp):
+        st, dec = inp
+        return s_prev * dec[:, :, None, None] + st, s_prev
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    final, prev = jax.lax.scan(step, s0,
+                               (states.transpose(1, 0, 2, 3, 4),
+                                chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)
+    y_off = jnp.einsum("bcin,bchi,bchpn->bcihp", Cc, jnp.exp(cum), prev)
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(final_want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunked_kernel_backend_equivalence():
+    """ssd_chunked(use_kernels=True) == jnp path, including final state."""
+    from repro.models.mamba2 import ssd_chunked
+    rng = np.random.default_rng(11)
+    B, S, H, P, N, Q = 2, 64, 4, 8, 8, 16
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(B, S, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    y0, s0 = ssd_chunked(x, dt, A, Bm, Cm, Q, use_kernels=False)
+    y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, Q, use_kernels=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                               rtol=1e-4, atol=1e-5)

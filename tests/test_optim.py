@@ -1,0 +1,81 @@
+"""Optimizers, clipping, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adamw, clip_by_global_norm, ef_compress_grads, global_norm,
+    linear_warmup_cosine, sgd,
+)
+from repro.optim.compression import compress_int8, decompress_int8
+
+
+def _rosenbrock_min(opt_init, opt_update, steps=400):
+    params = {"x": jnp.asarray(-1.0), "y": jnp.asarray(1.5)}
+    state = opt_init(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: (1 - p["x"]) ** 2 + 5 * (p["y"] - p["x"] ** 2) ** 2)(params)
+        params, state = opt_update(g, state, params)
+        return params, state, loss
+
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+    return float(loss)
+
+
+def test_adamw_converges():
+    init, update = adamw(lr=3e-2)
+    assert _rosenbrock_min(init, update) < 1e-2
+
+
+def test_sgd_converges():
+    init, update = sgd(lr=2e-3, momentum=0.9)
+    assert _rosenbrock_min(init, update, steps=800) < 0.3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    # below the cap: untouched
+    g2 = {"a": jnp.asarray([0.1])}
+    out, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), [0.1])
+
+
+def test_warmup_cosine_schedule():
+    lr = linear_warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(60)) < 1.0
+    assert float(lr(1000)) <= float(lr(60))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 200))
+def test_int8_roundtrip_bounded_error(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * rng.uniform(0.01, 100))
+    q, scale = compress_int8(x)
+    err = np.abs(np.asarray(decompress_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-9   # half-ULP of the grid
+
+
+def test_error_feedback_reduces_bias():
+    """EF: averaged over steps, compressed grads converge to true grads."""
+    rng = np.random.default_rng(0)
+    true = {"w": jnp.asarray(rng.normal(size=(64,)))}
+    state = None
+    acc = np.zeros(64)
+    n = 50
+    for _ in range(n):
+        deq, state = ef_compress_grads(true, state)
+        acc += np.asarray(deq["w"])
+    np.testing.assert_allclose(acc / n, np.asarray(true["w"]),
+                               rtol=2e-2, atol=2e-3)

@@ -1,0 +1,78 @@
+"""HLO cost model unit tests against hand-crafted HLO text."""
+import numpy as np
+
+from repro.launch.roofline import (
+    HloCostModel, _shape_bytes, analytic_model_flops, collective_bytes_from_hlo,
+)
+
+HLO = """\
+HloModule test
+
+%fused_inner (p0: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  ROOT %e = f32[128,64]{1,0} exponential(%p0)
+}
+
+%body (arg: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+  %arg = (s32[], f32[128,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[128,64]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[64,64]{1,0} constant({...})
+  %d = f32[128,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %f = f32[128,64]{1,0} fusion(%d), kind=kLoop, calls=%fused_inner
+  %ar = f32[128,64]{1,0} all-reduce(%f), replica_groups={}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,64]{1,0}) tuple(%ip, %ar)
+}
+
+%cond (arg: (s32[], f32[128,64])) -> pred[] {
+  %arg = (s32[], f32[128,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,64]) -> f32[128,64] {
+  %x = f32[128,64]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[128,64]{1,0}) tuple(%z, %x)
+  %w = (s32[], f32[128,64]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[128,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,64]{1,0}") == 128 * 64 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], s32[2])") == 24
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_cost_model_scales_loop_body():
+    m = HloCostModel(HLO)
+    assert m.entry == "main"
+    t = m.totals()
+    # dot: 2 * 128*64 * 64 contracted = 1,048,576 flops x 10 trips
+    assert t["flops"] == 10 * 2 * 128 * 64 * 64
+    # collective: all-reduce result 32 KiB x 10 trips
+    assert t["collective_bytes"] == 10 * 128 * 64 * 4
+    assert t["collective_by_kind"] == {"all-reduce": 10 * 128 * 64 * 4}
+
+
+def test_collective_regex_fallback():
+    got = collective_bytes_from_hlo(HLO)
+    assert got["all-reduce"] == 128 * 64 * 4   # unscaled single-pass parse
+
+
+def test_analytic_model_flops_train_vs_decode():
+    from repro.configs import get_arch
+    cfg = get_arch("tinyllama-1.1b")
+    train = analytic_model_flops(cfg, "train_4k")
+    dec = analytic_model_flops(cfg, "decode_32k")
+    assert train > dec * 1000
+    # train = 6 * N * D
+    from repro.configs.base import param_count
+    _, active = param_count(cfg)
+    assert abs(train - 6 * active * 256 * 4096) / train < 1e-9

@@ -1,0 +1,57 @@
+"""Sharding rules: every param/cache leaf gets a valid, divisible spec."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs import ARCHS
+    from repro.launch.mesh import make_production_mesh, dp_axes
+    from repro.launch.sharding import param_shardings, cache_shardings
+    from repro.models import transformer as T
+    from functools import partial
+
+    for multi in (False, True):
+        mesh = make_production_mesh(multi_pod=multi)
+        for name, cfg in ARCHS.items():
+            params_shape = jax.eval_shape(
+                lambda k: T.init_params(cfg, k, jnp.bfloat16), jax.random.key(0))
+            specs = param_shardings(cfg, mesh, params_shape)
+            # validity: every named axis dim divides the leaf dim
+            def check(leaf, spec):
+                shape = leaf.shape
+                for i, part in enumerate(spec):
+                    if part is None:
+                        continue
+                    axes = part if isinstance(part, tuple) else (part,)
+                    size = int(np.prod([mesh.shape[a] for a in axes]))
+                    assert shape[i] % size == 0, (name, shape, spec, i)
+            jax.tree.map(check, params_shape, specs)
+            # at least the big leaves are sharded (not fully replicated)
+            # kv projections with n_kv_heads < TP width replicate by
+            # design (GQA); everything >=50M elements must shard
+            big = [(l, s) for l, s in zip(jax.tree.leaves(params_shape),
+                                          jax.tree.leaves(specs))
+                   if np.prod(l.shape) > 5e7]
+            assert all(any(p is not None for p in s) for _, s in big), name
+            cache_shape = jax.eval_shape(
+                partial(T.cache_init, cfg, 128, 1024, jnp.bfloat16))
+            cspecs = cache_shardings(cfg, mesh, cache_shape)
+            jax.tree.map(check, cache_shape, cspecs)
+    print("SHARDING-OK")
+""")
+
+
+def test_sharding_rules_subprocess():
+    repo = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDING-OK" in proc.stdout
