@@ -1,0 +1,22 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-all bench quickstart
+
+# tier-1 gate: fast default suite (slow marks + hypothesis sweeps excluded)
+test:
+	$(PY) -m pytest -x -q
+
+# everything, including the >minutes integration paths and property sweeps
+test-all:
+	$(PY) -m pytest -q -m ""
+
+# benchmark runner; the engine section writes BENCH_engine.json
+bench:
+	$(PY) -m benchmarks.run --quick
+
+bench-full:
+	$(PY) -m benchmarks.run
+
+quickstart:
+	$(PY) examples/quickstart.py

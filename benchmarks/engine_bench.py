@@ -1,0 +1,83 @@
+"""FogEngine backend matrix benchmark -> CSV rows + BENCH_engine.json.
+
+Times one full Algorithm-2 evaluation per backend on a fixed trained
+forest/batch and records wall time, mean hops, and accuracy, so every
+future PR has a perf trajectory for the unified hot path.  Backends:
+
+  reference        pure-jnp scan (the oracle)
+  reference-lazy   early-exit while_loop
+  pallas           fused hop-update kernel (interpreted on CPU, Mosaic on TPU)
+  pallas-chunked   same, batch evaluated in chunk_b slices (VMEM-bounded)
+
+The ring backend is timed separately in fog_ring_bench (needs forced
+multi-device XLA in a subprocess).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+
+
+def _time_engine(engine, x, key, thresh, max_hops, reps=3):
+    res = engine.eval(x, key, thresh, max_hops=max_hops)   # compile + warm
+    res.proba.block_until_ready()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = engine.eval(x, key, thresh, max_hops=max_hops)
+        res.proba.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best, res
+
+
+def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import FogEngine, split
+    from repro.data import make_dataset
+    from repro.forest import TrainConfig, train_random_forest
+
+    ds = make_dataset("penbased")
+    rf = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                             TrainConfig(n_trees=16, max_depth=8, seed=1))
+    gc = split(rf, 2)
+    x = jnp.asarray(ds.x_test)
+    key = jax.random.key(0)
+    thresh, max_hops = 0.3, gc.n_groves
+
+    engines = {
+        "reference": FogEngine(gc),
+        "reference-lazy": FogEngine(gc, lazy=True),
+        "pallas": FogEngine(gc, backend="pallas"),
+        "pallas-chunked": FogEngine(gc, backend="pallas", chunk_b=256),
+    }
+    rows, record = [], {"bench": "engine_backends", "B": int(x.shape[0]),
+                        "n_groves": gc.n_groves, "thresh": thresh,
+                        "backend_us": {}, "mean_hops": {}, "acc": {}}
+    base_hops = None
+    for name, eng in engines.items():
+        dt, res = _time_engine(eng, x, key, thresh, max_hops)
+        hops = np.asarray(res.hops)
+        acc = float((np.asarray(res.label) == ds.y_test).mean())
+        if base_hops is None:
+            base_hops = hops
+        else:
+            # all backends must preserve the hop-count energy accounting
+            assert (hops == base_hops).all(), f"{name} diverged on hops"
+        record["backend_us"][name] = round(dt * 1e6)
+        record["mean_hops"][name] = float(hops.mean())
+        record["acc"][name] = acc
+        rows.append(f"CSV,engine,backend={name},us={dt * 1e6:.0f},"
+                    f"acc={acc:.4f},mean_hops={hops.mean():.2f}")
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(record, indent=2) + "\n")
+        rows.append(f"CSV,engine,wrote={out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

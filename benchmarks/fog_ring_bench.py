@@ -1,9 +1,11 @@
 """FoG ring on a device mesh (§3.2.2 scaled): per-hop wall time + traffic.
 
-Runs the shard_map + ppermute ring evaluator on 8 forced host devices and
-reports lane occupancy decay (how fast confident lanes die -> the load
-self-balancing the paper's queue priority scheme provides).  Run as a
-subprocess to get its own XLA device count.
+Runs the FogEngine ring backend (shard_map + ppermute) on 8 forced host
+devices and reports lane occupancy decay (how fast confident lanes die ->
+the load self-balancing the paper's queue priority scheme provides), for
+both the classic 1-grove-per-shard ring and the generalized
+multiple-groves-per-shard placement.  Run as a subprocess to get its own
+XLA device count.
 """
 from __future__ import annotations
 
@@ -17,8 +19,7 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import time
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import split, fog_eval
-    from repro.core.fog_ring import fog_ring_eval
+    from repro.core import FogEngine, split
     from repro.data import make_dataset
     from repro.forest import TrainConfig, train_random_forest
 
@@ -26,21 +27,23 @@ SCRIPT = textwrap.dedent("""
     rf = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
                              TrainConfig(n_trees=16, max_depth=8, seed=1))
     gc = split(rf, 2)
-    mesh = jax.make_mesh((8,), ("grove",))
     x = jnp.asarray(ds.x_test[:1024] if len(ds.x_test) >= 1024 else ds.x_test)
 
-    for thresh in [0.1, 0.3, 0.5]:
-        t0 = time.perf_counter()
-        proba, hops = fog_ring_eval(gc, x, jax.random.key(0), thresh, 8, mesh)
-        proba.block_until_ready()
-        dt = (time.perf_counter() - t0) * 1e6
-        hops = np.asarray(hops)
-        label = np.argmax(np.asarray(proba), -1)
-        acc = (label == ds.y_test[: len(label)]).mean()
-        occ = [float((hops > j).mean()) for j in range(8)]
-        print(f"CSV,fog_ring,thresh={thresh},us={dt:.0f},acc={acc:.4f},"
-              f"mean_hops={hops.mean():.2f},occupancy=" +
-              "|".join(f"{o:.2f}" for o in occ))
+    for n_shards in [8, 4]:
+        mesh = jax.make_mesh((n_shards,), ("grove",))
+        engine = FogEngine(gc, backend="ring", mesh=mesh)
+        for thresh in [0.1, 0.3, 0.5]:
+            t0 = time.perf_counter()
+            res = engine.eval(x, jax.random.key(0), thresh, max_hops=8)
+            res.proba.block_until_ready()
+            dt = (time.perf_counter() - t0) * 1e6
+            hops = np.asarray(res.hops)
+            acc = (np.asarray(res.label) == ds.y_test[: len(hops)]).mean()
+            occ = [float((hops > j).mean()) for j in range(8)]
+            print(f"CSV,fog_ring,shards={n_shards},thresh={thresh},"
+                  f"us={dt:.0f},acc={acc:.4f},"
+                  f"mean_hops={hops.mean():.2f},occupancy=" +
+                  "|".join(f"{o:.2f}" for o in occ))
 """)
 
 
@@ -49,7 +52,10 @@ def run() -> list[str]:
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # forced-host-device scripts must not probe a real TPU: the
+             # libtpu worker handshake hangs ~8 min before falling back
+             "JAX_PLATFORMS": "cpu"},
         capture_output=True, text=True, timeout=900)
     if proc.returncode != 0:
         return [f"fog_ring_bench FAILED: {proc.stderr[-500:]}"]

@@ -21,8 +21,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
-        ablation_adaptive, fig4_topology, fig5_threshold, fog_ring_bench,
-        lm_fog_exit, table1_accuracy, table1_energy,
+        ablation_adaptive, engine_bench, fig4_topology, fig5_threshold,
+        fog_ring_bench, lm_fog_exit, table1_accuracy, table1_energy,
     )
     import benchmarks.common as common
 
@@ -30,6 +30,7 @@ def main() -> None:
         common.DATASETS = ["penbased", "segmentation"]
 
     sections = {
+        "engine": engine_bench.run,
         "table1_accuracy": table1_accuracy.run,
         "table1_energy": table1_energy.run,
         "fig4_topology": fig4_topology.run,

@@ -1,5 +1,6 @@
 """The paper's micro-architecture on a device mesh: groves pinned to shards,
-the req/ack handshake as a ppermute ring (DESIGN.md §2 mapping).
+the req/ack handshake as a ppermute ring (README §Design mapping), driven
+through the unified FogEngine.
 
 Needs multiple devices; forces 8 host devices, so run it directly:
 
@@ -13,8 +14,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import split  # noqa: E402
-from repro.core.fog_ring import fog_ring_eval  # noqa: E402
+from repro.core import FogEngine, split  # noqa: E402
 from repro.data import make_dataset  # noqa: E402
 from repro.forest import TrainConfig, train_random_forest  # noqa: E402
 
@@ -25,11 +25,11 @@ gc = split(rf, 2)                       # 8 groves -> one per device
 mesh = jax.make_mesh((8,), ("grove",))
 print(f"mesh: {mesh}")
 
+engine = FogEngine(gc, backend="ring", mesh=mesh)
 x = jnp.asarray(ds.x_test[:512])
-proba, hops = fog_ring_eval(gc, x, jax.random.key(0), 0.3, 8, mesh)
-label = np.argmax(np.asarray(proba), axis=-1)
-hops = np.asarray(hops)
-print(f"accuracy          : {(label == ds.y_test[:512]).mean():.3f}")
+res = engine.eval(x, jax.random.key(0), 0.3, max_hops=8)
+hops = np.asarray(res.hops)
+print(f"accuracy          : {(np.asarray(res.label) == ds.y_test[:512]).mean():.3f}")
 print(f"mean hops         : {hops.mean():.2f} of 8 groves")
 print("ring occupancy    :", " ".join(
     f"hop{j}:{(hops > j).mean():.2f}" for j in range(8)))

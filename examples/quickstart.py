@@ -1,5 +1,6 @@
 """Quickstart: train a random forest, split it into a Field of Groves,
-classify with confidence-gated early exit, and read the energy meter.
+classify with confidence-gated early exit through the unified FogEngine,
+and read the energy meter.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fog_eval, fog_energy, gc_train, rf_report, split
+from repro.core import FogEngine, fog_energy, rf_report, split
 from repro.data import make_dataset
 from repro.forest import TrainConfig, rf_predict, train_random_forest
 
@@ -24,11 +25,16 @@ print(f"conventional RF : acc={rf_acc:.3f}  energy={rf_energy:.2f} nJ/example")
 # 3. split into a Field of Groves: 8 groves x 2 trees (Algorithm 1 Split)
 gc = split(rf, 2)
 
-# 4. evaluate with Algorithm 2: random start grove, MaxDiff confidence,
+# 4. one engine owns Algorithm 2; the hop update is a pluggable backend —
+#    "reference" (pure jnp), "pallas" (fused VMEM kernel), or "ring"
+#    (shard_map mesh; see examples/fog_ring_demo.py).  All backends return
+#    identical labels and hop counts.
+engine = FogEngine(gc, backend="pallas")
+
+# 5. evaluate with Algorithm 2: random start grove, MaxDiff confidence,
 #    hop to the next grove while confidence < threshold
 for thresh in [0.1, 0.3, 0.6, 1.1]:
-    res = fog_eval(gc, jnp.asarray(ds.x_test), jax.random.key(0),
-                   thresh, max_hops=gc.n_groves)
+    res = engine.eval(jnp.asarray(ds.x_test), jax.random.key(0), thresh)
     acc = np.mean(np.asarray(res.label) == ds.y_test)
     hops = np.asarray(res.hops)
     e = fog_energy(hops, gc.grove_size, gc.depth, gc.n_classes, ds.n_features)

@@ -1,0 +1,62 @@
+"""Version compatibility shims for the jax APIs this repo leans on.
+
+The codebase targets the modern public surface (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``); older jax (e.g. the 0.4.x baked into
+the CPU container) only exposes those under ``jax._src.mesh`` and returns
+a bare ``()`` sentinel when no mesh is set.  Everything routes through
+here so model/launch code stays version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def get_abstract_mesh():
+    """The ambient (abstract) mesh, or None when no mesh context is set."""
+    try:
+        from jax.sharding import get_abstract_mesh as _get
+        mesh = _get()
+    except ImportError:                      # jax < 0.6
+        from jax._src.mesh import get_abstract_mesh as _get
+        mesh = _get()
+        if isinstance(mesh, tuple):          # old-jax unset sentinel: ()
+            mesh = None
+        if mesh is None:
+            # legacy `with mesh:` context sets the physical resource env
+            from jax._src.mesh import thread_resources
+            phys = thread_resources.env.physical_mesh
+            mesh = None if phys.empty else phys
+    if mesh is None or getattr(mesh, "empty", False):
+        return None
+    return mesh
+
+
+def set_mesh(mesh):
+    """Context manager pinning ``mesh`` as the ambient mesh.
+
+    New jax: ``jax.set_mesh``.  Old jax: the legacy ``with mesh:`` physical
+    mesh context (its private ``set_mesh`` turns on the unfinished
+    sharding-in-types mode, which breaks 0.4.x tracing — avoid it).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def jit_shardings(mesh, tree):
+    """Make a PartitionSpec pytree acceptable to jax.jit in/out_shardings.
+
+    New jax resolves bare PartitionSpecs against the ambient mesh; old jax
+    requires concrete ``NamedSharding``s, so bind ``mesh`` here.  ``None``
+    leaves (= infer) pass through on both.
+    """
+    if hasattr(jax, "set_mesh"):
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def bind(s):
+        return NamedSharding(mesh, s) if isinstance(s, PartitionSpec) else s
+
+    return jax.tree.map(
+        bind, tree,
+        is_leaf=lambda s: s is None or isinstance(s, PartitionSpec))

@@ -1,7 +1,8 @@
 from repro.core.confidence import maxdiff, maxdiff_multioutput, top2
 from repro.core.grove import GroveCollection, gc_train, split, grove_predict_proba
-from repro.core.fog_eval import (FogResult, fog_eval, fog_eval_lazy,
-                                 fog_eval_multioutput)
+from repro.core.engine import (BACKENDS, FogEngine, FogResult, HopMeter,
+                               confidence_margin, hop_update, sample_starts)
+from repro.core.fog_eval import fog_eval, fog_eval_lazy, fog_eval_multioutput
 from repro.core.energy import (
     EnergyReport, fog_energy, rf_report, dt_energy_pj, rf_energy_pj,
     grove_energy_pj, svm_lr_energy_pj, svm_rbf_energy_pj, mlp_energy_pj,
@@ -15,7 +16,9 @@ from repro.core.budget import (
 __all__ = [
     "maxdiff", "maxdiff_multioutput", "top2",
     "GroveCollection", "gc_train", "split", "grove_predict_proba",
-    "FogResult", "fog_eval", "fog_eval_lazy", "fog_eval_multioutput",
+    "BACKENDS", "FogEngine", "FogResult", "HopMeter", "confidence_margin",
+    "hop_update", "sample_starts",
+    "fog_eval", "fog_eval_lazy", "fog_eval_multioutput",
     "EnergyReport", "fog_energy", "rf_report", "dt_energy_pj",
     "rf_energy_pj", "grove_energy_pj", "svm_lr_energy_pj",
     "svm_rbf_energy_pj", "mlp_energy_pj", "cnn_energy_pj",

@@ -1,0 +1,338 @@
+"""FogEngine — the single owner of Algorithm 2 with pluggable backends.
+
+The paper's hop-until-confident loop used to live in four divergent copies
+(``fog_eval``, ``fog_eval_multioutput``, ``fog_eval_lazy`` and the ring in
+``fog_ring.py``).  This module collapses them into one state machine whose
+*per-hop update* — masked accumulate, hop count, normalize, MaxDiff gate —
+is a pluggable backend:
+
+==============  =============================================================
+backend         per-hop update implementation
+==============  =============================================================
+``reference``   pure jnp (``kernels.ref.grove_aggregate_ref``), the oracle
+``pallas``      fused VMEM kernel (``kernels.ops.grove_aggregate``);
+                interpreted on CPU, Mosaic-compiled on TPU
+``ring``        ``shard_map`` + ``ppermute`` mesh ring (``fog_ring``) — the
+                grove tables are partitioned over devices and queue entries
+                rotate one ICI hop per round
+==============  =============================================================
+
+Every backend runs the *identical* update math, so labels and — critically —
+per-example hop counts (the paper's energy quantity) are bit-identical across
+backends for the same starting groves.  ``sample_starts`` is the one place
+start groves are drawn: on a single shard it reproduces the legacy
+``fog_eval`` draw exactly; on an n-shard ring it stratifies starts so each
+shard begins with an equal slice of the queue.
+
+Batches larger than VMEM are evaluated in fixed-size chunks (``chunk_b``)
+with one compiled program reused across chunks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.confidence import maxdiff
+from repro.core.grove import GroveCollection, grove_predict_proba
+from repro.kernels import ops, ref
+
+BACKENDS = ("reference", "pallas", "ring")
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("proba", "label", "hops"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class FogResult:
+    """The one result contract every backend returns.
+
+    proba: [B, C] (or [B, O, C] multi-output) final normalized probabilities
+    label: [B]    (or [B, O]) argmax labels
+    hops:  [B]    groves that processed each example, 1-based — the energy
+                  quantity (the paper's `hops` counts forwards = groves-1)
+    """
+    proba: jax.Array
+    label: jax.Array
+    hops: jax.Array
+
+
+def sample_starts(key: jax.Array, B: int, G: int,
+                  n_shards: int = 1) -> jax.Array:
+    """Random start grove per example (Algorithm 2 line 3).
+
+    ``n_shards == 1`` reproduces the legacy ``fog_eval`` draw bit-exactly.
+    For an n-shard ring the draw is stratified — exactly B/n lanes start in
+    each shard residue class (start % n == shard) so the queue slices are
+    equal-sized — while staying uniform over all G groves marginally.
+    """
+    if n_shards == 1:
+        return jax.random.randint(key, (B,), 0, G)
+    if B % n_shards or G % n_shards:
+        raise ValueError(
+            f"batch B={B} and n_groves G={G} must both divide over "
+            f"{n_shards} ring shards")
+    kp, ko = jax.random.split(key)
+    shard = jax.random.permutation(
+        kp, jnp.tile(jnp.arange(n_shards), B // n_shards))
+    offset = jax.random.randint(ko, (B,), 0, G // n_shards)
+    return shard + n_shards * offset
+
+
+def hop_update(prob, contrib, live, hops, thresh, *, backend: str = "reference",
+               block_b: int = 256):
+    """One Algorithm-2 hop update (lines 7-11), dispatched by backend.
+
+    Returns (prob, hops, live, margin).  This is the single shared update
+    both FogEngine loops and the distributed ring build on.
+    """
+    _check_step_backend(backend)
+    if backend == "pallas":
+        return ops.grove_aggregate(prob, contrib, live, hops, thresh,
+                                   block_b=block_b)
+    return ref.grove_aggregate_ref(prob, contrib, live, hops, thresh)
+
+
+def confidence_margin(probs: jax.Array, *, backend: str = "reference",
+                      block_b: int = 256) -> jax.Array:
+    """MaxDiff margin [..., C] -> [...]; pallas routes the top-2 kernel."""
+    _check_step_backend(backend)
+    if backend == "pallas" and probs.ndim == 2:
+        return ops.top2_confidence(probs, block_b=min(block_b, probs.shape[0]))
+    return maxdiff(probs)
+
+
+def _check_step_backend(backend: str) -> None:
+    # the per-step primitives have no ring variant (the ring composes them)
+    if backend not in ("reference", "pallas"):
+        raise ValueError(f"unknown step backend {backend!r}; "
+                         "pick 'reference' or 'pallas'")
+
+
+# --------------------------------------------------------------------------
+# jitted evaluation cores (reference / pallas).  Multi-output heads are
+# flattened to [B*O, C] so the same fused update serves both; the min-over-
+# outputs confidence rule (paper footnote 1) is applied on the margins.
+# --------------------------------------------------------------------------
+
+def _contrib(gcs, g_idx, x):
+    """Per-hop grove contribution, flattened over output heads: [B*O, C]."""
+    if len(gcs) == 1:
+        return grove_predict_proba(gcs[0], g_idx, x)
+    rows = [grove_predict_proba(gc, g_idx, x) for gc in gcs]
+    return jnp.stack(rows, axis=1).reshape(-1, gcs[0].n_classes)
+
+
+def _repeat_lanes(v, n_out):
+    """[B] lane state -> [B*O] (each head shares its lane's liveness)."""
+    return v if n_out == 1 else jnp.repeat(v, n_out)
+
+
+def _step(gcs, x, start, thresh, j, prob, live, hops, backend, block_b):
+    """Shared hop body: returns updated (prob, live, hops) for [B*O, C]."""
+    O = len(gcs)
+    G = gcs[0].n_groves
+    g_idx = (start + j) % G
+    contrib = _contrib(gcs, g_idx, x)
+    prob, hops_f, live_f, margin = hop_update(
+        prob, contrib, _repeat_lanes(live, O), _repeat_lanes(hops, O),
+        thresh, backend=backend, block_b=block_b)
+    if O == 1:
+        return prob, live_f, hops_f
+    # min-over-outputs rule: a lane stays live until EVERY head is confident
+    margin = margin.reshape(-1, O).min(axis=1)
+    hops = hops_f.reshape(-1, O)[:, 0]
+    live = live & (margin < thresh)
+    return prob, live, hops
+
+
+@partial(jax.jit, static_argnames=("max_hops", "backend", "block_b", "lazy"))
+def _eval_core(gcs: tuple, x, start, thresh, max_hops: int, backend: str,
+               block_b: int, lazy: bool):
+    B = x.shape[0]
+    O = len(gcs)
+    C = gcs[0].n_classes
+    prob0 = jnp.zeros((B * O, C), jnp.float32)
+    live0 = jnp.ones((B,), bool)
+    hops0 = jnp.zeros((B,), jnp.int32)
+
+    if lazy:
+        def cond(state):
+            j, _, live, _ = state
+            return (j < max_hops) & live.any()
+
+        def body(state):
+            j, prob, live, hops = state
+            prob, live, hops = _step(gcs, x, start, thresh, j, prob, live,
+                                     hops, backend, block_b)
+            return (j + 1, prob, live, hops)
+
+        _, prob, _, hops = jax.lax.while_loop(
+            cond, body, (jnp.zeros((), jnp.int32), prob0, live0, hops0))
+    else:
+        def body(carry, j):
+            prob, live, hops = carry
+            prob, live, hops = _step(gcs, x, start, thresh, j, prob, live,
+                                     hops, backend, block_b)
+            return (prob, live, hops), None
+
+        (prob, _, hops), _ = jax.lax.scan(
+            body, (prob0, live0, hops0), jnp.arange(max_hops))
+
+    denom = jnp.maximum(_repeat_lanes(hops, O), 1)[:, None]
+    prob_norm = prob / denom
+    if O > 1:
+        prob_norm = prob_norm.reshape(B, O, C)
+    return FogResult(proba=prob_norm,
+                     label=jnp.argmax(prob_norm, axis=-1).astype(jnp.int32),
+                     hops=hops)
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+
+class FogEngine:
+    """Owns the Algorithm-2 state machine; backends plug in the hop update.
+
+    gc:        GroveCollection, or a tuple of them (multi-output heads with
+               identical (n_groves, grove_size)).
+    backend:   "reference" | "pallas" | "ring".
+    block_b:   pallas batch tile (rows of [B, C] state per VMEM block).
+    chunk_b:   evaluate the batch in chunks of this many examples (bounds
+               VMEM/working-set for huge batches); None = whole batch.
+    mesh/axis: required for the ring backend; n_groves % mesh.shape[axis]
+               must be 0 (each shard hosts a strided subset of groves).
+    use_kernels: ring only — run the Pallas tree-traversal PE per shard.
+    lazy:      early-exit while_loop instead of a fixed-trip scan (same
+               results; saves wall clock when the whole batch is easy).
+    """
+
+    def __init__(self, gc, *, backend: str = "reference",
+                 block_b: int = 256, chunk_b: int | None = None,
+                 mesh=None, axis: str = "grove", use_kernels: bool = False,
+                 lazy: bool = False):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+        self.gcs: tuple[GroveCollection, ...] = (
+            tuple(gc) if isinstance(gc, (tuple, list)) else (gc,))
+        g0 = self.gcs[0]
+        for g in self.gcs[1:]:
+            if (g.n_groves, g.grove_size) != (g0.n_groves, g0.grove_size):
+                raise ValueError(
+                    "multi-output heads need identical (n_groves, "
+                    f"grove_size); got {(g.n_groves, g.grove_size)} vs "
+                    f"{(g0.n_groves, g0.grove_size)}")
+        self.backend = backend
+        self.block_b = block_b
+        self.chunk_b = chunk_b
+        self.mesh = mesh
+        self.axis = axis
+        self.use_kernels = use_kernels
+        self.lazy = lazy
+        if use_kernels and backend != "ring":
+            raise ValueError("use_kernels applies to the ring backend only "
+                             "(the pallas backend always runs the fused "
+                             "hop-update kernel)")
+        if backend == "ring":
+            if mesh is None:
+                raise ValueError("ring backend needs a mesh")
+            if len(self.gcs) > 1:
+                raise NotImplementedError("ring backend is single-output")
+            if lazy or chunk_b is not None:
+                raise ValueError("lazy/chunk_b are not supported on the "
+                                 "ring backend (the ring always runs the "
+                                 "fixed max_hops rotation schedule)")
+            self.n_shards = mesh.shape[axis]
+            if g0.n_groves % self.n_shards:
+                raise ValueError(
+                    f"n_groves={g0.n_groves} not divisible by "
+                    f"{self.n_shards} ring shards")
+            if use_kernels and g0.n_groves != self.n_shards:
+                raise ValueError(
+                    "use_kernels needs one grove per shard (the multi-"
+                    "grove gather path has no Pallas tree-traversal PE)")
+            from repro.core.fog_ring import reorder_tables
+            self._ring_tables = reorder_tables(g0, self.n_shards)
+        else:
+            self.n_shards = 1
+
+    # -- properties ------------------------------------------------------
+    @property
+    def n_groves(self) -> int:
+        return self.gcs[0].n_groves
+
+    @property
+    def multi_output(self) -> bool:
+        return len(self.gcs) > 1
+
+    # -- evaluation ------------------------------------------------------
+    def eval(self, x: jax.Array, key: jax.Array, thresh,
+             max_hops: int | None = None) -> FogResult:
+        """GCEval(X, thresh, max_hops) — Algorithm 2, any backend."""
+        max_hops = self.n_groves if max_hops is None else max_hops
+        thresh = jnp.asarray(thresh, jnp.float32)
+        x = jnp.asarray(x)
+        start = sample_starts(key, x.shape[0], self.n_groves, self.n_shards)
+        if self.backend == "ring":
+            return self._eval_ring(x, start, thresh, max_hops)
+        return self._eval_chunked(x, start, thresh, max_hops)
+
+    __call__ = eval
+
+    def _eval_chunked(self, x, start, thresh, max_hops) -> FogResult:
+        B = x.shape[0]
+        cb = self.chunk_b
+        if cb is None or B <= cb:
+            return _eval_core(self.gcs, x, start, thresh, max_hops,
+                              self.backend, min(self.block_b, B), self.lazy)
+        pad = (-B) % cb
+        if pad:  # dead-pad the tail chunk so every chunk hits one compile
+            x = jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)])
+            start = jnp.concatenate([start, jnp.zeros((pad,), start.dtype)])
+        chunks = [
+            _eval_core(self.gcs, x[i:i + cb], start[i:i + cb], thresh,
+                       max_hops, self.backend, min(self.block_b, cb),
+                       self.lazy)
+            for i in range(0, B + pad, cb)
+        ]
+        out = jax.tree.map(lambda *ls: jnp.concatenate(ls)[:B], *chunks)
+        return out
+
+    def _eval_ring(self, x, start, thresh, max_hops) -> FogResult:
+        from repro.core.fog_ring import ring_eval
+        proba, hops = ring_eval(
+            self.gcs[0], x, start, thresh, max_hops, self.mesh, self.axis,
+            use_kernels=self.use_kernels, tables=self._ring_tables)
+        return FogResult(proba=proba,
+                         label=jnp.argmax(proba, axis=-1).astype(jnp.int32),
+                         hops=hops)
+
+
+# --------------------------------------------------------------------------
+# hop accounting shared with the serving path
+# --------------------------------------------------------------------------
+
+class HopMeter:
+    """Streaming hop/energy accounting (the paper's per-input hop counter,
+    reused by the continuous-batching scheduler for per-request stats)."""
+
+    def __init__(self) -> None:
+        self.total_hops = 0
+        self.n_events = 0
+
+    def update(self, hops) -> None:
+        import numpy as np
+        h = np.asarray(hops)
+        self.total_hops += int(h.sum())
+        self.n_events += int(h.size)
+
+    @property
+    def mean_hops(self) -> float:
+        return self.total_hops / max(1, self.n_events)
+
+    def summary(self, n_groves: int) -> str:
+        return (f"hops/event {self.mean_hops:.2f} "
+                f"(grove fraction {self.mean_hops / max(1, n_groves):.2f}, "
+                f"{self.n_events} events)")

@@ -1,4 +1,10 @@
-"""Algorithm 2 — evaluating the Field of Groves classifier (batched).
+"""Algorithm 2 — legacy entry points, now thin shims over ``FogEngine``.
+
+.. deprecated::
+    The hop-until-confident loop lives in :mod:`repro.core.engine`; these
+    wrappers exist so the original ``fog_eval*`` call sites keep working.
+    New code should build a ``FogEngine`` (which also exposes the pallas
+    fused-update and mesh-ring backends) instead.
 
 The ASIC processes examples as queue entries hopping grove-to-grove with a
 req/ack handshake.  On a SIMD machine the identical math is a batched
@@ -6,137 +12,38 @@ fixed-point: at step j every *live* example evaluates grove
 (start + j) mod n_groves (gathered node tables), accumulates the probability
 array, and dies once MaxDiff(prob / (j+1)) >= thresh.  Hop counts — and
 therefore the energy accounting — are bit-identical to the sequential queue
-semantics; only the execution order differs (see DESIGN.md §2).
+semantics; only the execution order differs (see README §Design).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.confidence import maxdiff
-from repro.core.grove import GroveCollection, grove_predict_proba
-
-
-@partial(jax.tree_util.register_dataclass,
-         data_fields=("proba", "label", "hops"), meta_fields=())
-@dataclasses.dataclass(frozen=True)
-class FogResult:
-    proba: jax.Array   # [B, C] final normalized probability array
-    label: jax.Array   # [B]    argmax label
-    hops: jax.Array    # [B]    number of groves that processed each example
-    # hops is 1-based: hops == j+1 groves contributed (paper's `hops` counts
-    # the forwards, i.e. groves-1; we report groves-used, the energy quantity)
+from repro.core.engine import FogEngine, FogResult  # noqa: F401  (re-export)
+from repro.core.grove import GroveCollection
 
 
-@partial(jax.jit, static_argnames=("max_hops",))
 def fog_eval(gc: GroveCollection, x: jax.Array, key: jax.Array,
              thresh: float | jax.Array, max_hops: int) -> FogResult:
-    """GCEval(X, thresh, max_hops) — Algorithm 2.
-
-    x: [B, F].  ``key`` seeds the random start grove (line 3, "start at
-    random grove to avoid bias").  ``max_hops`` is static (it bounds the
-    unrolled/scan trip count); ``thresh`` may be a traced scalar so the
-    run-time tunability of §3.2.2 is a cheap re-dispatch, not a recompile.
-    """
-    B = x.shape[0]
-    G = gc.n_groves
-    start = jax.random.randint(key, (B,), 0, G)                  # line 3
-
-    def body(carry, j):
-        prob, live, hops = carry
-        g_idx = (start + j) % G                                   # line 6
-        contrib = grove_predict_proba(gc, g_idx, x)               # line 7
-        prob = prob + jnp.where(live[:, None], contrib, 0.0)
-        hops = hops + live.astype(jnp.int32)
-        prob_norm = prob / jnp.maximum(hops, 1)[:, None]          # line 8
-        confident = maxdiff(prob_norm) >= thresh                  # line 9
-        live = live & ~confident
-        return (prob, live, hops), None
-
-    prob0 = jnp.zeros((B, gc.n_classes), jnp.float32)             # line 4
-    live0 = jnp.ones((B,), bool)
-    hops0 = jnp.zeros((B,), jnp.int32)
-    (prob, _, hops), _ = jax.lax.scan(
-        body, (prob0, live0, hops0), jnp.arange(max_hops))
-    prob_norm = prob / jnp.maximum(hops, 1)[:, None]
-    return FogResult(proba=prob_norm,
-                     label=jnp.argmax(prob_norm, axis=-1).astype(jnp.int32),
-                     hops=hops)
+    """GCEval(X, thresh, max_hops) — deprecated shim for the reference
+    backend; use ``FogEngine(gc).eval(x, key, thresh, max_hops)``."""
+    return FogEngine(gc, backend="reference").eval(x, key, thresh,
+                                                   max_hops=max_hops)
 
 
-@partial(jax.jit, static_argnames=("max_hops",))
 def fog_eval_multioutput(gcs, x: jax.Array, key: jax.Array,
                          thresh: float | jax.Array, max_hops: int) -> FogResult:
-    """Algorithm 2 for MULTI-OUTPUT classification (paper footnote 1):
-    one grove collection per output head; confidence = Min over outputs of
-    the per-output MaxDiff ("minimum difference of the maximum values"), so
-    an input keeps hopping until EVERY output is confident.
-
-    gcs: tuple of GroveCollection with identical (n_groves, grove_size).
-    Returns FogResult with proba [B, O, C] and label [B, O].
-    """
-    from repro.core.confidence import maxdiff_multioutput
-    G = gcs[0].n_groves
-    C = gcs[0].n_classes
-    O = len(gcs)
-    B = x.shape[0]
-    start = jax.random.randint(key, (B,), 0, G)
-
-    def body(carry, j):
-        prob, live, hops = carry                    # prob [B, O, C]
-        g_idx = (start + j) % G
-        contrib = jnp.stack(
-            [grove_predict_proba(gc, g_idx, x) for gc in gcs], axis=1)
-        prob = prob + jnp.where(live[:, None, None], contrib, 0.0)
-        hops = hops + live.astype(jnp.int32)
-        prob_norm = prob / jnp.maximum(hops, 1)[:, None, None]
-        confident = maxdiff_multioutput(prob_norm) >= thresh
-        live = live & ~confident
-        return (prob, live, hops), None
-
-    prob0 = jnp.zeros((B, O, C), jnp.float32)
-    (prob, _, hops), _ = jax.lax.scan(
-        body, (prob0, jnp.ones((B,), bool), jnp.zeros((B,), jnp.int32)),
-        jnp.arange(max_hops))
-    prob_norm = prob / jnp.maximum(hops, 1)[:, None, None]
-    return FogResult(proba=prob_norm,
-                     label=jnp.argmax(prob_norm, axis=-1).astype(jnp.int32),
-                     hops=hops)
+    """Multi-output Algorithm 2 (paper footnote 1) — deprecated shim; use
+    ``FogEngine(tuple_of_gcs)``.  Confidence is the Min over outputs of the
+    per-output MaxDiff, so an input hops until EVERY head is confident."""
+    return FogEngine(tuple(gcs), backend="reference").eval(
+        x, key, thresh, max_hops=max_hops)
 
 
-@partial(jax.jit, static_argnames=("max_hops",))
 def fog_eval_lazy(gc: GroveCollection, x: jax.Array, key: jax.Array,
                   thresh: float | jax.Array, max_hops: int) -> FogResult:
-    """Early-terminating variant: a ``while_loop`` that stops as soon as the
+    """Early-terminating variant — deprecated shim for
+    ``FogEngine(gc, lazy=True)``: a ``while_loop`` that stops as soon as the
     whole batch is confident.  Same results as :func:`fog_eval`; saves wall
     clock (not modeled energy) when the batch is easy."""
-    B = x.shape[0]
-    G = gc.n_groves
-    start = jax.random.randint(key, (B,), 0, G)
-
-    def cond(state):
-        j, _, live, _ = state
-        return (j < max_hops) & live.any()
-
-    def body(state):
-        j, prob, live, hops = state
-        g_idx = (start + j) % G
-        contrib = grove_predict_proba(gc, g_idx, x)
-        prob = prob + jnp.where(live[:, None], contrib, 0.0)
-        hops = hops + live.astype(jnp.int32)
-        prob_norm = prob / jnp.maximum(hops, 1)[:, None]
-        live = live & (maxdiff(prob_norm) < thresh)
-        return (j + 1, prob, live, hops)
-
-    state0 = (jnp.zeros((), jnp.int32),
-              jnp.zeros((B, gc.n_classes), jnp.float32),
-              jnp.ones((B,), bool),
-              jnp.zeros((B,), jnp.int32))
-    _, prob, _, hops = jax.lax.while_loop(cond, body, state0)
-    prob_norm = prob / jnp.maximum(hops, 1)[:, None]
-    return FogResult(proba=prob_norm,
-                     label=jnp.argmax(prob_norm, axis=-1).astype(jnp.int32),
-                     hops=hops)
+    return FogEngine(gc, backend="reference", lazy=True).eval(
+        x, key, thresh, max_hops=max_hops)

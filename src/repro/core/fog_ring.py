@@ -2,40 +2,59 @@
 
 The ASIC pins grove g to a physical PE and forwards uncertain inputs over a
 req/ack handshake to PE g+1 (Figure 3).  The TPU-native equivalent pins
-grove g to mesh shard g and forwards the queue entry {Input Payload,
-Probability Array, hops} with ``jax.lax.ppermute`` — the handshake becomes a
-neighbor-only collective, the cheapest traffic pattern on a torus (no
-all-to-all, no all-gather; each hop crosses one ICI link).
+groves to mesh shards and forwards the queue entry {Input Payload,
+Probability Array, hops, grove index} with ``jax.lax.ppermute`` — the
+handshake becomes a neighbor-only collective, the cheapest traffic pattern
+on a torus (no all-to-all, no all-gather; each hop crosses one ICI link).
+
+Grove placement is STRIDED: with n shards and G groves (G % n == 0), shard
+s hosts groves {s, s+n, s+2n, ...}.  Grove g+1 therefore always lives on
+shard (g+1) % n — one ring step from grove g's shard — so every lane
+rotates exactly one neighbor per round regardless of how many groves each
+shard holds.  With n == G this degenerates to the classic one-grove-per-PE
+ring; with n == 1 the "ring" is a self-permute and the evaluation is
+bit-identical to the batched reference path (same starts, same update).
 
 Each shard holds:
-  * its own grove's node tables (grove-parallel: tables are *partitioned*,
+  * the node tables of ITS groves (grove-parallel: tables are *partitioned*,
     never replicated or gathered), and
-  * a slice of the batch ("its queue").
+  * a slice of the batch ("its queue") — lanes are placed on the shard that
+    owns their start grove.
 
-Per round every shard evaluates ITS grove on the live lanes it currently
-holds, then the whole lane state rotates one step around the ring.  After j
-rounds a lane that started at shard s has been processed by groves
-s, s+1, ..., s+j — exactly Algorithm 2's (start + j) mod n_groves with
-start == the initial shard, randomized by shuffling the batch before entry.
 Confident lanes die in place (their rotation continues but costs no
-evaluation energy), matching the ASIC's completed-entry drain.
+evaluation energy), matching the ASIC's completed-entry drain.  The per-hop
+update is the shared ``kernels.ref.grove_aggregate_ref`` — the same math
+every FogEngine backend runs — so hop counts (the energy quantity) are
+bit-identical to Algorithm 2's sequential queue semantics.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.confidence import maxdiff
 from repro.core.grove import GroveCollection
 from repro.forest.tree import _traverse
+from repro.kernels import ref
 
 
-def _eval_local_grove(feature, threshold, leaf, x, use_kernels: bool):
-    """Bundle evaluation of this shard's grove: [b, F] -> [b, C].
+def _grove_order(G: int, n_shards: int) -> np.ndarray:
+    """Reorder groves so shard s's contiguous block is {s, s+n, s+2n, ...}.
+
+    shard_map partitions dim 0 in contiguous blocks; after this reorder,
+    grove g sits on shard g % n at local offset g // n.
+    """
+    m = G // n_shards
+    return np.arange(G).reshape(m, n_shards).T.reshape(-1)
+
+
+def _eval_block_grove(feature, threshold, leaf, x, use_kernels: bool):
+    """One grove per shard: whole-block bundle eval [b, F] -> [b, C].
 
     ``use_kernels=True`` runs the Pallas tree-traversal PE
     (kernels/tree_traverse.py — node tables VMEM-resident, batch tiled);
@@ -52,61 +71,140 @@ def _eval_local_grove(feature, threshold, leaf, x, use_kernels: bool):
     return per_tree.mean(axis=1)
 
 
-def make_fog_ring(mesh: Mesh, axis: str, max_hops: int,
+def _eval_gather_grove(feature, threshold, leaf, x, local_idx):
+    """Multiple groves per shard: per-lane gathered bundle eval.
+
+    feature [m, k, nodes]; local_idx [b] selects each lane's grove — the
+    same gather+walk as ``grove_predict_proba``, restricted to this shard's
+    table slice."""
+    feat = feature[local_idx]
+    thr = threshold[local_idx]
+    lf = leaf[local_idx]
+
+    def one(feat_b, thr_b, leaf_b, x_b):
+        per_tree = _traverse(feat_b, thr_b, leaf_b, x_b[None])   # [1, k, C]
+        return per_tree[0].mean(axis=0)
+
+    return jax.vmap(one)(feat, thr, lf, x)
+
+
+@lru_cache(maxsize=64)
+def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
                   use_kernels: bool = False):
     """Build the jitted ring evaluator for ``mesh`` (grove axis = ``axis``).
 
-    Returns fn(gc_arrays, x, thresh) -> (proba, hops), where the grove
-    collection's leading G axis and the batch are both sharded over ``axis``.
+    Returns fn(feature, threshold, leaf, x, start, thresh) -> (proba, hops)
+    where the grove tables (strided-reordered, see ``_grove_order``) and the
+    batch are sharded over ``axis``, and ``start`` is each lane's global
+    start grove (lane already placed on shard start % n_shards).
     """
     n_shards = mesh.shape[axis]
+    assert n_groves % n_shards == 0, (n_groves, n_shards)
 
-    def ring(feature, threshold, leaf, x, thresh):
-        # Everything here is per-shard: feature [1, k, nodes], x [b, F].
+    def ring(feature, threshold, leaf, x, start, thresh):
+        # Per-shard views: feature [m, k, nodes], x [b, F], start [b].
         b = x.shape[0]
+        m = feature.shape[0]
         prob = jnp.zeros((b, leaf.shape[-1]), jnp.float32)
         hops = jnp.zeros((b,), jnp.int32)
         live = jnp.ones((b,), bool)
+        gidx = start                          # lane's current global grove
         perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
 
         def body(carry, _):
-            x, prob, hops, live = carry
-            contrib = _eval_local_grove(feature, threshold, leaf, x,
-                                        use_kernels)
-            prob = prob + jnp.where(live[:, None], contrib, 0.0)
-            hops = hops + live.astype(jnp.int32)
-            prob_norm = prob / jnp.maximum(hops, 1)[:, None]
-            live = live & (maxdiff(prob_norm) < thresh)
-            # the handshake: rotate the queue entries to the next grove
-            x = jax.lax.ppermute(x, axis, perm)
-            prob = jax.lax.ppermute(prob, axis, perm)
-            hops = jax.lax.ppermute(hops, axis, perm)
-            live = jax.lax.ppermute(live, axis, perm)
-            return (x, prob, hops, live), None
+            x, prob, hops, live, gidx = carry
+            if m == 1:
+                contrib = _eval_block_grove(feature, threshold, leaf, x,
+                                            use_kernels)
+            else:
+                contrib = _eval_gather_grove(feature, threshold, leaf, x,
+                                             gidx // n_shards)
+            prob, hops, live, _ = ref.grove_aggregate_ref(
+                prob, contrib, live, hops, thresh)
+            # the handshake: rotate queue entries to the next grove's shard
+            gidx = (gidx + 1) % n_groves
+            carry = tuple(jax.lax.ppermute(v, axis, perm)
+                          for v in (x, prob, hops, live, gidx))
+            return carry, None
 
-        (x, prob, hops, live), _ = jax.lax.scan(
-            body, (x, prob, hops, live), None, length=max_hops)
+        (x, prob, hops, live, gidx), _ = jax.lax.scan(
+            body, (x, prob, hops, live, gidx), None, length=max_hops)
+        # after max_hops rotations a lane's state sits max_hops shards
+        # downstream of where it entered; rotate it back so the gathered
+        # output rows line up with the input batch order (identity permute
+        # when n_shards divides max_hops)
+        back = [(i, (i - max_hops) % n_shards) for i in range(n_shards)]
+        prob = jax.lax.ppermute(prob, axis, back)
+        hops = jax.lax.ppermute(hops, axis, back)
         prob_norm = prob / jnp.maximum(hops, 1)[:, None]
         return prob_norm, hops
 
     gspec = P(axis)  # grove tables partitioned over the ring, dim 0
     fn = shard_map(
         ring, mesh=mesh,
-        in_specs=(gspec, gspec, gspec, P(axis), P()),
+        in_specs=(gspec, gspec, gspec, P(axis), P(axis), P()),
         out_specs=(P(axis), P(axis)),
         check_rep=False,
     )
     return jax.jit(fn)
 
 
+def reorder_tables(gc: GroveCollection, n_shards: int):
+    """Strided-reordered (feature, threshold, leaf) ready to shard over the
+    ring — invariant per (gc, n_shards), so callers evaluating repeatedly
+    (FogEngine) compute it once."""
+    order = _grove_order(gc.n_groves, n_shards)
+    return gc.feature[order], gc.threshold[order], gc.leaf[order]
+
+
+def ring_eval(gc: GroveCollection, x: jax.Array, start: jax.Array,
+              thresh, max_hops: int, mesh: Mesh, axis: str = "grove",
+              use_kernels: bool = False, tables=None):
+    """Run the ring with explicit per-lane start groves.
+
+    ``start`` must contain exactly B/n_shards lanes per residue class
+    (start % n_shards) — ``engine.sample_starts`` produces such draws.
+    Lanes are placed on their start grove's shard, evaluated, and returned
+    in the original batch order.  ``tables`` is an optional precomputed
+    ``reorder_tables(gc, n_shards)`` result.
+    """
+    B = x.shape[0]
+    G = gc.n_groves
+    n_shards = mesh.shape[axis]
+    if B % n_shards:
+        raise ValueError(
+            f"batch B={B} must divide over {n_shards} ring shards")
+    if not isinstance(start, jax.core.Tracer):
+        # each shard's queue slice must be exactly B/n lanes or shard_map's
+        # positional split would hand lanes the wrong grove tables
+        counts = np.bincount(np.asarray(start) % n_shards,
+                             minlength=n_shards)
+        if not (counts == B // n_shards).all():
+            raise ValueError(
+                f"start groves not stratified over {n_shards} shards "
+                f"(per-shard lane counts {counts.tolist()}); draw them "
+                "with engine.sample_starts(key, B, G, n_shards)")
+    feature, threshold, leaf = (tables if tables is not None
+                                else reorder_tables(gc, n_shards))
+    # stable sort by owning shard -> contiguous equal-size per-shard queues
+    perm = jnp.argsort(start % n_shards, stable=True)
+    inv = jnp.argsort(perm)
+    fn = make_fog_ring(mesh, axis, max_hops, G, use_kernels=use_kernels)
+    proba, hops = fn(feature, threshold, leaf,
+                     x[perm], start[perm], jnp.asarray(thresh, jnp.float32))
+    return proba[inv], hops[inv]
+
+
 def fog_ring_eval(gc: GroveCollection, x: jax.Array, key: jax.Array,
                   thresh, max_hops: int, mesh: Mesh, axis: str = "grove",
                   use_kernels: bool = False):
-    """Shuffle the batch (random start grove), run the ring, unshuffle."""
-    B = x.shape[0]
-    perm = jax.random.permutation(key, B)
-    inv = jnp.argsort(perm)
-    fn = make_fog_ring(mesh, axis, max_hops, use_kernels=use_kernels)
-    proba, hops = fn(gc.feature, gc.threshold, gc.leaf, x[perm],
-                     jnp.asarray(thresh, jnp.float32))
-    return proba[inv], hops[inv]
+    """Legacy entry point: draw stratified random starts, run the ring.
+
+    Prefer ``FogEngine(gc, backend="ring", mesh=mesh)`` — this shim remains
+    for callers that manage their own meshes.
+    """
+    from repro.core.engine import sample_starts
+    start = sample_starts(key, x.shape[0], gc.n_groves,
+                          mesh.shape[axis])
+    return ring_eval(gc, x, start, thresh, max_hops, mesh, axis,
+                     use_kernels=use_kernels)

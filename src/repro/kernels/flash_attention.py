@@ -40,8 +40,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, blk_q: int,
 
     def body(jk, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.dslice(jk * blk_k, blk_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.dslice(jk * blk_k, blk_k), slice(None)))
+        k = pl.load(k_ref,
+                    (pl.dslice(0, 1), pl.dslice(jk * blk_k, blk_k),
+                     slice(None)))[0]
+        v = pl.load(v_ref,
+                    (pl.dslice(0, 1), pl.dslice(jk * blk_k, blk_k),
+                     slice(None)))[0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale      # [blk_q, blk_k]

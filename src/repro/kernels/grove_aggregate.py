@@ -42,12 +42,23 @@ def grove_aggregate_pallas(prob_acc: jax.Array, contrib: jax.Array,
                            live: jax.Array, hops: jax.Array,
                            thresh: jax.Array, *, block_b: int = 256,
                            interpret: bool = True):
-    """Fused hop update.  live is bool [B]; returns (prob, hops, live, margin)."""
+    """Fused hop update.  live is bool [B]; returns (prob, hops, live, margin).
+
+    ``B`` need not divide ``block_b``: the batch is dead-lane padded up to
+    the next block boundary (padded lanes carry live=0, so their garbage
+    margins never gate anything) and the outputs are sliced back to ``B``.
+    """
     B, C = prob_acc.shape
     block_b = min(block_b, B)
-    assert B % block_b == 0, (B, block_b)
+    pad = (-B) % block_b
     thresh = jnp.asarray(thresh, prob_acc.dtype).reshape(1)
     live8 = live.astype(jnp.int8)
+    if pad:
+        prob_acc = jnp.pad(prob_acc, ((0, pad), (0, 0)))
+        contrib = jnp.pad(contrib, ((0, pad), (0, 0)))
+        live8 = jnp.pad(live8, (0, pad))
+        hops = jnp.pad(hops, (0, pad))
+        B = B + pad
     row = lambda i: (i, 0)
     vec = lambda i: (i,)
     prob, hops, live8, margin = pl.pallas_call(
@@ -74,4 +85,7 @@ def grove_aggregate_pallas(prob_acc: jax.Array, contrib: jax.Array,
         ],
         interpret=interpret,
     )(prob_acc, contrib, live8, hops, thresh)
+    if pad:
+        prob, hops, live8, margin = (prob[:-pad], hops[:-pad], live8[:-pad],
+                                     margin[:-pad])
     return prob, hops, live8.astype(bool), margin

@@ -22,15 +22,22 @@ def _top2_kernel(prob_ref, out_ref):
 
 def top2_confidence_pallas(prob: jax.Array, *, block_b: int = 256,
                            interpret: bool = True) -> jax.Array:
-    """[B, C] -> [B] top-2 margin."""
+    """[B, C] -> [B] top-2 margin.
+
+    ``B`` need not divide ``block_b``: the batch is zero-padded to the next
+    block boundary and the padded rows' margins sliced off.
+    """
     B, C = prob.shape
     block_b = min(block_b, B)
-    assert B % block_b == 0, (B, block_b)
-    return pl.pallas_call(
+    pad = (-B) % block_b
+    if pad:
+        prob = jnp.pad(prob, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
         _top2_kernel,
-        grid=(B // block_b,),
+        grid=((B + pad) // block_b,),
         in_specs=[pl.BlockSpec((block_b, C), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((B,), prob.dtype),
+        out_shape=jax.ShapeDtypeStruct((B + pad,), prob.dtype),
         interpret=interpret,
     )(prob)
+    return out[:B] if pad else out

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, smoke_config
+from repro.core.engine import HopMeter
 from repro.data.lm_data import DataConfig, batch_at_step
 from repro.models import transformer as T
 from repro.models.fog_exit import decode_step_fog, grove_boundaries
@@ -32,6 +33,9 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=160)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fog", action="store_true")
+    ap.add_argument("--fog-backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="confidence-margin backend for the exit gate")
     ap.add_argument("--thresh", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -64,13 +68,15 @@ def main() -> None:
         length = jnp.int32(int(np.asarray(lengths).max()))
         if args.fog:
             logits, state["caches"], hops = decode_step_fog(
-                params, cfg, tokens, state["caches"], length, args.thresh)
+                params, cfg, tokens, state["caches"], length, args.thresh,
+                backend=args.fog_backend)
             return logits, hops
         logits, state["caches"] = T.decode_step(params, cfg, tokens,
                                                 state["caches"], length)
         return logits, None
 
-    batcher = ContinuousBatcher(args.slots, decode_fn, prefill_fn, eos_id=-1)
+    batcher = ContinuousBatcher(args.slots, decode_fn, prefill_fn, eos_id=-1,
+                                meter=HopMeter())
     dcfg = DataConfig(cfg.vocab_size, 32, 8, seed=args.seed + 7)
     for rid in range(args.requests):
         prompt = batch_at_step(dcfg, rid)["tokens"][0, :24] % cfg.vocab_size
@@ -88,6 +94,7 @@ def main() -> None:
             h = np.asarray(r.hops, np.float64)
             print(f"  req {r.rid}: groves/token {h.mean():.2f} "
                   f"(flops frac {h.mean() / g:.2f})")
+        print(f"[serve] fleet {batcher.meter.summary(g)}")
 
 
 if __name__ == "__main__":

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.confidence import maxdiff
+from repro.core.engine import confidence_margin
 from repro.models import transformer as T
 
 
@@ -49,11 +49,14 @@ def _stack_slice(stack, start: int, size: int):
 
 
 def decode_step_fog(params, cfg: ArchConfig, token, cache, length,
-                    thresh, embeds=None):
+                    thresh, embeds=None, *, backend: str = "reference"):
     """FoG decode step.  Returns (logits [B,V], new_cache, hops [B]).
 
     Grove g is executed under ``lax.cond(live.any())``; exited lanes keep
     their grove-g logits via masking (SIMD equivalent of leaving the queue).
+    ``backend`` selects the confidence-margin implementation from the shared
+    FogEngine surface ("reference" jnp or the "pallas" top-2 kernel) — the
+    gate semantics and hop accounting are identical either way.
     """
     prefix, period, n_rep = T.layer_plan(cfg)
     sizes = grove_boundaries(cfg)
@@ -111,7 +114,8 @@ def decode_step_fog(params, cfg: ArchConfig, token, cache, length,
             logits = jnp.where(live[:, None], g_logits, logits)
             if g < len(sizes) - 1:
                 probs = jax.nn.softmax(g_logits, axis=-1)
-                live = live & (maxdiff(probs) < thresh)
+                live = live & (confidence_margin(probs, backend=backend)
+                               < thresh)
             start += size
         new_stack = jax.tree.map(
             lambda *parts: jnp.concatenate(parts, axis=0), *new_stack_parts)

@@ -43,9 +43,10 @@ def constrain_batch(x: jax.Array) -> jax.Array:
     deepseek-v3: full-batch [256,4096,*] f32 buffers -> 460 GiB/device).
     No-op when no mesh is set (unit tests) or batch doesn't divide.
     """
-    from jax.sharding import get_abstract_mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import get_abstract_mesh
     mesh = get_abstract_mesh()
-    if mesh is None or mesh.empty or "data" not in mesh.axis_names:
+    if mesh is None or "data" not in mesh.axis_names:
         return x
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     import numpy as _np

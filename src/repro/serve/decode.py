@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.launch.mesh import dp_axes
 from repro.launch.sharding import cache_shardings, param_shardings
@@ -16,7 +17,8 @@ from repro.train.loop import SHAPES, input_specs
 
 
 def make_serve_step(cfg: ArchConfig, mesh, shape: str, *, fog: bool = False,
-                    fog_thresh: float = 0.5, param_dtype=jnp.bfloat16):
+                    fog_thresh: float = 0.5, fog_backend: str = "reference",
+                    param_dtype=jnp.bfloat16):
     """Jitted one-token decode with in/out shardings.
 
     Returns (jitted_fn, (params_shape, cache_shape, inputs_shape)).
@@ -44,7 +46,8 @@ def make_serve_step(cfg: ArchConfig, mesh, shape: str, *, fog: bool = False,
     if fog:
         def step(params, cache, token, length, embeds=None):
             logits, cache, hops = decode_step_fog(
-                params, cfg, token, cache, length, fog_thresh, embeds=embeds)
+                params, cfg, token, cache, length, fog_thresh, embeds=embeds,
+                backend=fog_backend)
             return logits, cache, hops
         out_specs = (P(bdp, logit_m), c_specs, P(bdp))
     else:
@@ -57,15 +60,19 @@ def make_serve_step(cfg: ArchConfig, mesh, shape: str, *, fog: bool = False,
     if cfg.frontend:
         def wrapped(params, cache, embeds, length):
             return step(params, cache, None, length, embeds=embeds)
-        jitted = jax.jit(wrapped,
-                         in_shardings=(p_specs, c_specs, i_specs["embeds"], P()),
-                         out_shardings=out_specs)
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=compat.jit_shardings(
+                mesh, (p_specs, c_specs, i_specs["embeds"], P())),
+            out_shardings=compat.jit_shardings(mesh, out_specs))
     else:
         def wrapped(params, cache, token, length):
             return step(params, cache, token, length)
-        jitted = jax.jit(wrapped,
-                         in_shardings=(p_specs, c_specs, i_specs["token"], P()),
-                         out_shardings=out_specs)
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=compat.jit_shardings(
+                mesh, (p_specs, c_specs, i_specs["token"], P())),
+            out_shardings=compat.jit_shardings(mesh, out_specs))
     return jitted, (params_shape, cache_shape, inp)
 
 
@@ -90,6 +97,8 @@ def make_prefill_step(cfg: ArchConfig, mesh, shape: str, *,
     def wrapped(params, x):
         return step(params, **{key: x})
 
-    jitted = jax.jit(wrapped, in_shardings=(p_specs, i_specs[key]),
-                     out_shardings=None)
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=compat.jit_shardings(mesh, (p_specs, i_specs[key])),
+        out_shardings=None)
     return jitted, (params_shape, inp)

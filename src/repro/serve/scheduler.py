@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import HopMeter
+
 
 @dataclasses.dataclass
 class Request:
@@ -44,13 +46,17 @@ class ContinuousBatcher:
     """
 
     def __init__(self, n_slots: int, decode_fn: Callable,
-                 prefill_fn: Callable, eos_id: int = 1):
+                 prefill_fn: Callable, eos_id: int = 1,
+                 meter: HopMeter | None = None):
         self.slots = [SlotState() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
         self.decode_fn = decode_fn
         self.prefill_fn = prefill_fn
         self.eos_id = eos_id
         self.completed: list[Request] = []
+        # fleet-level FoG accounting: hop counts of every decoded token feed
+        # the same meter the engine's energy model reads
+        self.meter = meter if meter is not None else HopMeter()
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -89,7 +95,9 @@ class ContinuousBatcher:
             tok = int(nxt[i])
             req.generated.append(tok)
             if hops is not None:
-                req.hops.append(int(hops[i]))
+                h = int(hops[i])
+                req.hops.append(h)
+                self.meter.update(h)
             s.length += 1
             if tok == self.eos_id or len(req.generated) >= req.max_new_tokens:
                 req.done = True

@@ -1,0 +1,46 @@
+"""Shared fixtures: expensive trained-forest artifacts are session-scoped so
+the whole suite trains each forest exactly once."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def ds_penbased():
+    from repro.data import make_dataset
+    return make_dataset("penbased")
+
+
+@pytest.fixture(scope="session")
+def rf16_penbased(ds_penbased):
+    """16-tree depth-6 forest on penbased — the workhorse FoG fixture."""
+    from repro.forest import TrainConfig, train_random_forest
+    return train_random_forest(
+        ds_penbased.x_train, ds_penbased.y_train, ds_penbased.n_classes,
+        TrainConfig(n_trees=16, max_depth=6, seed=1))
+
+
+@pytest.fixture(scope="session")
+def trained(ds_penbased, rf16_penbased):
+    """(dataset, forest) pair used across fog-core and engine tests."""
+    return ds_penbased, rf16_penbased
+
+
+@pytest.fixture(scope="session")
+def rf8_penbased(ds_penbased):
+    """8-tree clean-label forest (the easy multi-output head)."""
+    from repro.forest import TrainConfig, train_random_forest
+    return train_random_forest(
+        ds_penbased.x_train, ds_penbased.y_train, ds_penbased.n_classes,
+        TrainConfig(n_trees=8, max_depth=6, seed=1))
+
+
+@pytest.fixture(scope="session")
+def rf8_noisy_penbased(ds_penbased):
+    """Forest trained on 45%-noised labels — the hard multi-output head."""
+    from repro.forest import TrainConfig, train_random_forest
+    ds = ds_penbased
+    rng = np.random.default_rng(0)
+    y2 = np.where(rng.random(len(ds.y_train)) < 0.45,
+                  rng.integers(0, ds.n_classes, len(ds.y_train)), ds.y_train)
+    return train_random_forest(ds.x_train, y2.astype(np.int32), ds.n_classes,
+                               TrainConfig(n_trees=8, max_depth=6, seed=2))

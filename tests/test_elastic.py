@@ -38,7 +38,10 @@ def test_elastic_remesh(tmp_path):
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT, str(tmp_path)],
         env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # forced-host-device scripts must not probe a real TPU: the
+             # libtpu worker handshake hangs ~8 min before falling back
+             "JAX_PLATFORMS": "cpu"},
         capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "ELASTIC-OK" in proc.stdout

@@ -1,0 +1,123 @@
+"""FogEngine backend conformance: every backend must reproduce the legacy
+``fog_eval`` / ``fog_eval_lazy`` results — identical labels AND identical
+per-example hop counts (the paper's energy quantity) — for fixed seeds.
+
+The multi-device ring path is covered in test_fog_ring.py (subprocess with
+forced host devices); here the ring backend runs on a 1-device mesh, which
+exercises the shard_map + ppermute + strided-placement machinery with
+multiple groves per shard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FogEngine, fog_eval, fog_eval_lazy,
+                        fog_eval_multioutput, split)
+
+
+THRESHES = [0.1, 0.3, 1.1]
+
+
+def _assert_conforms(res, want, *, exact_proba=False):
+    np.testing.assert_array_equal(np.asarray(res.hops), np.asarray(want.hops))
+    np.testing.assert_array_equal(np.asarray(res.label),
+                                  np.asarray(want.label))
+    kw = {} if exact_proba else {"rtol": 1e-6, "atol": 1e-7}
+    np.testing.assert_allclose(np.asarray(res.proba), np.asarray(want.proba),
+                               **kw)
+
+
+@pytest.fixture(scope="module")
+def gc(trained):
+    _, rf = trained
+    return split(rf, 2)          # 8 groves x 2 trees
+
+
+@pytest.fixture(scope="module")
+def x257(trained):
+    # 257 is prime: never divisible by block_b/chunk_b -> exercises both the
+    # kernel's dead-lane block padding and the engine's chunk padding
+    ds, _ = trained
+    return jnp.asarray(ds.x_test[:257])
+
+
+@pytest.mark.parametrize("thresh", THRESHES)
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_backend_matches_legacy(gc, x257, backend, thresh):
+    key = jax.random.key(7)
+    want = fog_eval(gc, x257, key, thresh, gc.n_groves)
+    res = FogEngine(gc, backend=backend, block_b=64).eval(
+        x257, key, thresh, max_hops=gc.n_groves)
+    _assert_conforms(res, want)
+    lazy = FogEngine(gc, backend=backend, block_b=64, lazy=True).eval(
+        x257, key, thresh, max_hops=gc.n_groves)
+    want_lazy = fog_eval_lazy(gc, x257, key, thresh, gc.n_groves)
+    _assert_conforms(lazy, want_lazy)
+    _assert_conforms(lazy, want)     # lazy == fixed-trip, any backend
+
+
+@pytest.mark.parametrize("thresh", THRESHES)
+def test_ring_backend_matches_legacy_on_one_device_mesh(gc, x257, thresh):
+    # B must divide the shard count; 1-device mesh accepts the prime batch
+    mesh = jax.make_mesh((1,), ("grove",))
+    key = jax.random.key(7)
+    want = fog_eval(gc, x257, key, thresh, gc.n_groves)
+    res = FogEngine(gc, backend="ring", mesh=mesh).eval(
+        x257, key, thresh, max_hops=gc.n_groves)
+    _assert_conforms(res, want)
+
+
+@pytest.mark.parametrize("chunk_b", [64, 100])
+def test_chunked_eval_matches_unchunked(gc, x257, chunk_b):
+    """B % chunk_b != 0: the tail chunk is dead-padded; results must be
+    bit-identical to the whole-batch evaluation."""
+    key = jax.random.key(3)
+    want = fog_eval(gc, x257, key, 0.3, gc.n_groves)
+    for backend in ["reference", "pallas"]:
+        res = FogEngine(gc, backend=backend, chunk_b=chunk_b,
+                        block_b=32).eval(x257, key, 0.3,
+                                         max_hops=gc.n_groves)
+        _assert_conforms(res, want)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_multioutput_matches_legacy(trained, rf8_penbased,
+                                    rf8_noisy_penbased, backend):
+    ds, _ = trained
+    gcs = (split(rf8_penbased, 2), split(rf8_noisy_penbased, 2))
+    x = jnp.asarray(ds.x_test[:130])          # 130 % 64 != 0
+    key = jax.random.key(11)
+    want = fog_eval_multioutput(gcs, x, key, 0.3, 4)
+    res = FogEngine(gcs, backend=backend, block_b=64).eval(
+        x, key, 0.3, max_hops=4)
+    assert res.proba.shape == (130, 2, ds.n_classes)
+    assert res.label.shape == (130, 2)
+    _assert_conforms(res, want)
+
+
+def test_unaligned_kernel_block(gc, trained):
+    """The old `assert B % block_b == 0` case: a batch smaller than and not
+    divisible by the pallas block must work and agree with reference."""
+    ds, _ = trained
+    x = jnp.asarray(ds.x_test[:37])
+    key = jax.random.key(0)
+    ref_res = FogEngine(gc).eval(x, key, 0.3)
+    pal_res = FogEngine(gc, backend="pallas", block_b=256).eval(x, key, 0.3)
+    _assert_conforms(pal_res, ref_res)
+
+
+def test_default_max_hops_is_n_groves(gc, x257):
+    key = jax.random.key(1)
+    a = FogEngine(gc).eval(x257, key, 1.1)
+    assert (np.asarray(a.hops) == gc.n_groves).all()
+
+
+def test_engine_rejects_bad_config(gc):
+    with pytest.raises(ValueError):
+        FogEngine(gc, backend="asic")
+    with pytest.raises(ValueError):
+        FogEngine(gc, backend="ring")        # no mesh
+    mesh = jax.make_mesh((1,), ("grove",))
+    with pytest.raises(NotImplementedError):
+        FogEngine((gc, gc), backend="ring", mesh=mesh)

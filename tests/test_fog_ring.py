@@ -1,5 +1,6 @@
 """Distributed FoG ring (shard_map + ppermute) — needs >1 device, so the
-actual check runs in a subprocess with forced host devices."""
+actual check runs in a subprocess with forced host devices (the 1-device
+ring conformance lives in test_engine_conformance.py)."""
 import subprocess
 import sys
 import textwrap
@@ -41,6 +42,19 @@ RING_SCRIPT = textwrap.dedent("""
     m_ring = float(np.asarray(hops).mean())
     m_batch = float(np.asarray(res.hops).mean())
     assert abs(m_ring - m_batch) / m_batch < 0.15, (m_ring, m_batch)
+
+    # max_hops NOT a multiple of n_shards: lane state ends mid-ring and must
+    # be rotated back to its home shard; per-lane hops/proba must equal the
+    # reference engine run with identical start groves
+    from repro.core.engine import _eval_core, sample_starts
+    from repro.core.fog_ring import ring_eval
+    start = sample_starts(jax.random.key(0), 512, 8, 8)
+    pr, hr = ring_eval(gc, x, start, 0.3, 5, mesh)
+    want = _eval_core((gc,), x, start, jnp.float32(0.3), 5, "reference",
+                      256, False)
+    np.testing.assert_array_equal(np.asarray(hr), np.asarray(want.hops))
+    np.testing.assert_allclose(np.asarray(pr), np.asarray(want.proba),
+                               rtol=1e-6, atol=1e-7)
     print("RING-OK", acc, m_ring, m_batch)
 """)
 
@@ -50,7 +64,10 @@ def test_fog_ring_subprocess():
     proc = subprocess.run(
         [sys.executable, "-c", RING_SCRIPT],
         env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # forced-host-device scripts must not probe a real TPU: the
+             # libtpu worker handshake hangs ~8 min before falling back
+             "JAX_PLATFORMS": "cpu"},
         capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "RING-OK" in proc.stdout
@@ -89,7 +106,10 @@ def test_fog_ring_kernel_backend_subprocess():
     proc = subprocess.run(
         [sys.executable, "-c", KERNEL_RING_SCRIPT],
         env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # forced-host-device scripts must not probe a real TPU: the
+             # libtpu worker handshake hangs ~8 min before falling back
+             "JAX_PLATFORMS": "cpu"},
         capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "KERNEL-RING-OK" in proc.stdout

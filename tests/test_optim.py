@@ -3,8 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-
 from repro.optim import (
     adamw, clip_by_global_norm, ef_compress_grads, global_norm,
     linear_warmup_cosine, sgd,
@@ -57,9 +55,9 @@ def test_warmup_cosine_schedule():
     assert float(lr(1000)) <= float(lr(60))
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.integers(1, 200))
+@pytest.mark.parametrize("seed,n", [(0, 1), (1, 3), (2, 17), (3, 64), (4, 200)])
 def test_int8_roundtrip_bounded_error(seed, n):
+    """Deterministic slice of the hypothesis sweep in test_properties.py."""
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=(n,)) * rng.uniform(0.01, 100))
     q, scale = compress_int8(x)

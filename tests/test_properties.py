@@ -1,0 +1,145 @@
+"""Hypothesis property sweeps for kernels and core math.
+
+This whole module is gated on ``pytest.importorskip("hypothesis")`` so a
+bare interpreter (no dev deps) still collects the suite cleanly; the
+deterministic slices of these sweeps live in test_fog_core / test_kernels /
+test_optim and always run.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import top2  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+from repro.kernels.flash_attention import flash_attention_pallas  # noqa: E402
+from repro.optim.compression import compress_int8, decompress_int8  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+
+# ----------------------------------------------------------------- top2 ---
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_top2_property(C, B, seed):
+    rng = np.random.default_rng(seed)
+    ar = jnp.asarray(rng.normal(size=(B, C)).astype(np.float32))
+    m1, m2 = top2(ar)
+    srt = np.sort(np.asarray(ar), axis=-1)
+    np.testing.assert_allclose(np.asarray(m1), srt[:, -1], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), srt[:, -2], atol=1e-6)
+
+
+# ------------------------------------------------- grove_aggregate fused ---
+@st.composite
+def _hop_states(draw):
+    """Hop state with tie-heavy prob rows and a mixed live mask.
+
+    Probabilities are drawn from a SMALL discrete grid, so exact m1 == m2
+    ties (the margin-zero case) and near-threshold margins are common —
+    exactly the paths the fused kernel's first-max masking must get right.
+    """
+    B = draw(st.integers(1, 97))
+    C = draw(st.integers(2, 27))
+    seed = draw(st.integers(0, 2**31 - 1))
+    block_b = draw(st.sampled_from([8, 16, 64, 256]))
+    thresh = draw(st.sampled_from([0.0, 0.1, 0.25, 0.5, 1.0]))
+    rng = np.random.default_rng(seed)
+    # grid-valued accumulators: every value in {0, .125, ..., 1} * hops
+    prob_acc = rng.integers(0, 9, size=(B, C)).astype(np.float32) / 8.0
+    contrib = rng.integers(0, 5, size=(B, C)).astype(np.float32) / 4.0
+    live = rng.random(B) > 0.35
+    hops = rng.integers(0, 6, size=B).astype(np.int32)
+    return prob_acc, contrib, live, hops, np.float32(thresh), block_b
+
+
+@settings(max_examples=60, deadline=None)
+@given(_hop_states())
+def test_grove_aggregate_property(state):
+    """Fused Pallas hop update == pure-jnp reference on tie-heavy, partly
+    dead batches of every alignment (B need not divide block_b)."""
+    prob_acc, contrib, live, hops, thresh, block_b = state
+    args = (jnp.asarray(prob_acc), jnp.asarray(contrib), jnp.asarray(live),
+            jnp.asarray(hops), jnp.asarray(thresh))
+    got = ops.grove_aggregate(*args, block_b=block_b)
+    want = ref.grove_aggregate_ref(*args)
+    for g, w in zip(got, want):
+        assert g.shape == w.shape
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+    prob, hops2, live2, margin = got
+    # dead-lane masking invariants, independent of the reference:
+    dead = ~live
+    np.testing.assert_array_equal(np.asarray(prob)[dead], prob_acc[dead])
+    np.testing.assert_array_equal(np.asarray(hops2)[dead], hops[dead])
+    assert not np.asarray(live2)[dead].any()
+    # exact ties must yield margin 0 for live lanes (keep hopping)
+    prob_n = np.asarray(prob) / np.maximum(np.asarray(hops2), 1)[:, None]
+    srt = np.sort(prob_n, axis=-1)
+    tie = (srt[:, -1] == srt[:, -2]) & live
+    np.testing.assert_allclose(np.asarray(margin)[tie], 0.0, atol=1e-7)
+
+
+# -------------------------------------------------------- tree traversal ---
+def _random_forest_arrays(rng, t, depth, C, F):
+    n_nodes = 2**depth - 1
+    feature = rng.integers(0, F, size=(t, n_nodes)).astype(np.int32)
+    threshold = rng.normal(size=(t, n_nodes)).astype(np.float32)
+    leaf = rng.dirichlet(np.ones(C), size=(t, 2**depth)).astype(np.float32)
+    return feature, threshold, leaf
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 8), depth=st.integers(1, 6),
+    C=st.integers(2, 12), F=st.integers(2, 40),
+    log_b=st.integers(0, 6), seed=st.integers(0, 2**31 - 1),
+)
+def test_tree_traverse_property(t, depth, C, F, log_b, seed):
+    B = 2**log_b
+    rng = np.random.default_rng(seed)
+    feature, threshold, leaf = _random_forest_arrays(rng, t, depth, C, F)
+    x = rng.normal(size=(B, F)).astype(np.float32)
+    got = np.asarray(ops.tree_traverse(feature, threshold, leaf, x, block_b=B))
+    want = np.asarray(ref.tree_traverse_ref(
+        jnp.asarray(feature), jnp.asarray(threshold), jnp.asarray(leaf),
+        jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # invariant: output rows are distributions (leaves are dirichlet rows)
+    np.testing.assert_allclose(got.sum(-1), 1.0, rtol=1e-5)
+    assert (got >= -1e-7).all()
+
+
+# ------------------------------------------------------- flash attention ---
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([16, 32, 64]),
+       st.sampled_from([(4, 2), (4, 1), (8, 8)]),
+       st.sampled_from([8, 16, 32]), st.integers(0, 2**31 - 1))
+def test_flash_attention_property(B, S, HK, D, seed):
+    H, K = HK
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, blk_q=16, blk_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    # row-stochastic invariant: attention output of constant v is constant
+    vc = jnp.ones_like(v)
+    out_c = flash_attention_pallas(q, k, vc, causal=True, blk_q=16, blk_k=16)
+    np.testing.assert_allclose(np.asarray(out_c), 1.0, rtol=1e-5)
+
+
+# ----------------------------------------------------------- compression ---
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 200))
+def test_int8_roundtrip_bounded_error(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * rng.uniform(0.01, 100))
+    q, scale = compress_int8(x)
+    err = np.abs(np.asarray(decompress_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-9   # half-ULP of the grid

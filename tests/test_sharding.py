@@ -51,7 +51,10 @@ def test_sharding_rules_subprocess():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # forced-host-device scripts must not probe a real TPU: the
+             # libtpu worker handshake hangs ~8 min before falling back
+             "JAX_PLATFORMS": "cpu"},
         capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "SHARDING-OK" in proc.stdout
