@@ -15,7 +15,7 @@ import numpy as np
 
 import benchmarks.common as common
 from benchmarks.common import dataset, forest_for
-from repro.core import fog_energy, fog_eval, split
+from repro.core import FogEngine, FogPolicy, fog_energy, split
 from repro.forest import forest_votes
 
 
@@ -25,9 +25,11 @@ def run(datasets=("penbased", "letter")) -> list[str]:
         ds = dataset(name)
         rf = forest_for(name)
         gc = split(rf, 2)
+        engine = FogEngine(gc)
         x = jnp.asarray(ds.x_test)
         for thresh in [0.1, 0.3, 0.5, 0.7]:
-            res = fog_eval(gc, x, jax.random.key(0), thresh, gc.n_groves)
+            res = engine.eval(x, jax.random.key(0),
+                              policy=FogPolicy(threshold=thresh))
             fog_acc = float(np.mean(np.asarray(res.label) == ds.y_test))
             mean_trees = float(np.asarray(res.hops).mean()) * gc.grove_size
             k = max(2, round(mean_trees / gc.grove_size) * gc.grove_size)

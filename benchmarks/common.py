@@ -11,9 +11,9 @@ import numpy as np
 
 from repro.baselines import train_cnn, train_mlp, train_svm_lr, train_svm_rbf
 from repro.core import (
-    find_opt_threshold, fog_energy, rf_report, split, threshold_sweep,
+    FogEngine, FogPolicy, find_opt_threshold, fog_energy, rf_report, split,
+    threshold_sweep,
 )
-from repro.core.fog_eval import fog_eval
 from repro.data import Dataset, make_dataset
 from repro.forest import TensorForest, TrainConfig, rf_predict, train_random_forest
 
@@ -68,7 +68,8 @@ def evaluate_all(name: str) -> dict[str, ClassifierResult]:
 
     gc = split(rf, 2)   # 8x2 topology (the paper's min-EDP pick)
     # FoG_max: threshold above 1 -> every grove votes
-    res = fog_eval(gc, x_test, jax.random.key(0), 1.1, gc.n_groves)
+    res = FogEngine(gc).eval(x_test, jax.random.key(0),
+                             policy=FogPolicy(threshold=1.1))
     acc = float(np.mean(np.asarray(res.label) == ds.y_test))
     e = fog_energy(np.asarray(res.hops), gc.grove_size, gc.depth,
                    gc.n_classes, ds.n_features)

@@ -21,13 +21,13 @@ from pathlib import Path
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 
 
-def _time_engine(engine, x, key, thresh, max_hops, reps=3):
-    res = engine.eval(x, key, thresh, max_hops=max_hops)   # compile + warm
+def _time_engine(engine, x, key, policy, reps=3):
+    res = engine.eval(x, key, policy=policy)   # compile + warm
     res.proba.block_until_ready()
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        res = engine.eval(x, key, thresh, max_hops=max_hops)
+        res = engine.eval(x, key, policy=policy)
         res.proba.block_until_ready()
         best = min(best, time.perf_counter() - t0)
     return best, res
@@ -37,7 +37,7 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from repro.core import FogEngine, split
+    from repro.core import FogEngine, FogPolicy, split
     from repro.data import make_dataset
     from repro.forest import TrainConfig, train_random_forest
 
@@ -47,7 +47,8 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
     gc = split(rf, 2)
     x = jnp.asarray(ds.x_test)
     key = jax.random.key(0)
-    thresh, max_hops = 0.3, gc.n_groves
+    thresh = 0.3
+    policy = FogPolicy(threshold=thresh, max_hops=gc.n_groves)
 
     engines = {
         "reference": FogEngine(gc),
@@ -60,7 +61,7 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
                         "backend_us": {}, "mean_hops": {}, "acc": {}}
     base_hops = None
     for name, eng in engines.items():
-        dt, res = _time_engine(eng, x, key, thresh, max_hops)
+        dt, res = _time_engine(eng, x, key, policy)
         hops = np.asarray(res.hops)
         acc = float((np.asarray(res.label) == ds.y_test).mean())
         if base_hops is None:

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from benchmarks.common import DATASETS, dataset, forest_for
-from repro.core import select_min_edp, topology_sweep
+from repro.core import FogPolicy, select_min_edp, topology_sweep
 
 
 def run(datasets=("isolet", "penbased")) -> list[str]:
@@ -10,7 +10,8 @@ def run(datasets=("isolet", "penbased")) -> list[str]:
     for name in datasets:
         ds = dataset(name)
         rf = forest_for(name)
-        pts = topology_sweep(rf, ds.x_test, ds.y_test, thresh=0.3)
+        pts = topology_sweep(rf, ds.x_test, ds.y_test,
+                             policy=FogPolicy(threshold=0.3))
         for p in pts:
             rows.append(f"{name},{p.n_groves}x{p.grove_size},{p.threshold},"
                         f"{p.accuracy:.4f},{p.energy_nj:.3f},{p.delay:.2f},"

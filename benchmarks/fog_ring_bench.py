@@ -19,7 +19,7 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import time
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import FogEngine, split
+    from repro.core import FogEngine, FogPolicy, split
     from repro.data import make_dataset
     from repro.forest import TrainConfig, train_random_forest
 
@@ -34,7 +34,8 @@ SCRIPT = textwrap.dedent("""
         engine = FogEngine(gc, backend="ring", mesh=mesh)
         for thresh in [0.1, 0.3, 0.5]:
             t0 = time.perf_counter()
-            res = engine.eval(x, jax.random.key(0), thresh, max_hops=8)
+            res = engine.eval(x, jax.random.key(0),
+                              policy=FogPolicy(threshold=thresh, max_hops=8))
             res.proba.block_until_ready()
             dt = (time.perf_counter() - t0) * 1e6
             hops = np.asarray(res.hops)

@@ -14,7 +14,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import FogEngine, split  # noqa: E402
+from repro.core import FogEngine, FogPolicy, split  # noqa: E402
 from repro.data import make_dataset  # noqa: E402
 from repro.forest import TrainConfig, train_random_forest  # noqa: E402
 
@@ -27,7 +27,8 @@ print(f"mesh: {mesh}")
 
 engine = FogEngine(gc, backend="ring", mesh=mesh)
 x = jnp.asarray(ds.x_test[:512])
-res = engine.eval(x, jax.random.key(0), 0.3, max_hops=8)
+res = engine.eval(x, jax.random.key(0),
+                  policy=FogPolicy(threshold=0.3, max_hops=8))
 hops = np.asarray(res.hops)
 print(f"accuracy          : {(np.asarray(res.label) == ds.y_test[:512]).mean():.3f}")
 print(f"mean hops         : {hops.mean():.2f} of 8 groves")

@@ -8,9 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FogEngine, fog_energy, rf_report, split
+from repro.core import FogEngine, FogPolicy, fog_energy, rf_report, split
 from repro.data import make_dataset
 from repro.forest import TrainConfig, rf_predict, train_random_forest
+from repro.sklearn import FogClassifier
 
 # 1. a dataset (synthetic twin of UCI Pen-based digits: 16 features, 10 classes)
 ds = make_dataset("penbased")
@@ -32,15 +33,37 @@ gc = split(rf, 2)
 engine = FogEngine(gc, backend="pallas")
 
 # 5. evaluate with Algorithm 2: random start grove, MaxDiff confidence,
-#    hop to the next grove while confidence < threshold
+#    hop to the next grove while confidence < threshold.  Every runtime
+#    knob travels in a FogPolicy — the one contract shared by the engine,
+#    the serving path, and the sklearn facade.
 for thresh in [0.1, 0.3, 0.6, 1.1]:
-    res = engine.eval(jnp.asarray(ds.x_test), jax.random.key(0), thresh)
+    res = engine.eval(jnp.asarray(ds.x_test), jax.random.key(0),
+                      policy=FogPolicy(threshold=thresh))
     acc = np.mean(np.asarray(res.label) == ds.y_test)
     hops = np.asarray(res.hops)
     e = fog_energy(hops, gc.grove_size, gc.depth, gc.n_classes, ds.n_features)
     tag = " (== RF, every grove votes)" if thresh > 1 else ""
     print(f"FoG thresh={thresh:<4} acc={acc:.3f}  mean_hops={hops.mean():.2f}  "
           f"energy={e.per_example_nj:.2f} nJ/example{tag}")
+
+# 6. per-lane policies: one batch, two QoS tiers — the first half classifies
+#    cheaply, the second half buys full confidence
+B = len(ds.y_test)
+tiers = jnp.where(jnp.arange(B) < B // 2, 0.1, 0.6)
+res = engine.eval(jnp.asarray(ds.x_test), jax.random.key(0),
+                  policy=FogPolicy(threshold=tiers))
+hops = np.asarray(res.hops)
+print(f"mixed QoS batch  : mean_hops lo-tier={hops[:B//2].mean():.2f} "
+      f"hi-tier={hops[B//2:].mean():.2f}")
+
+# 7. or skip the plumbing entirely: the sklearn-style facade owns
+#    train -> split -> engine, and meters energy as it classifies
+clf = FogClassifier(n_trees=16, grove_size=2, max_depth=8).fit(
+    ds.x_train, ds.y_train)
+print(f"FogClassifier    : acc={clf.score(ds.x_test, ds.y_test):.3f}  "
+      f"profile={clf.profile()['energy_nj_per_classification']:.2f} "
+      f"nJ/classification at "
+      f"{clf.profile()['mean_hops']:.2f} mean hops")
 
 print("\nThe run-time knob: lower threshold -> fewer groves per input -> "
       "less energy, graceful accuracy decay (paper Fig. 5).")

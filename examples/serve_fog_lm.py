@@ -2,9 +2,13 @@
 
     PYTHONPATH=src python examples/serve_fog_lm.py
 
-Demonstrates the continuous-batching scheduler driving decode_step_fog:
-per-request grove usage (hops) is the LM analogue of the paper's energy
-meter — easy tokens exit after 1 grove, hard tokens use the full stack.
+Demonstrates the continuous-batching scheduler driving decode_step_fog
+with MIXED-QOS traffic: every request carries its own FogPolicy (threshold
++ hop budget), the batcher assembles them into per-lane vectors, and one
+compiled decode step serves the whole batch.  Per-request grove usage
+(hops) is the LM analogue of the paper's energy meter — easy tokens exit
+after 1 grove, hard tokens use the full stack, and budget-capped requests
+never exceed their energy contract.
 """
 import dataclasses
 
@@ -13,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config
+from repro.core.policy import FogPolicy
 from repro.data.lm_data import DataConfig, batch_at_step
 from repro.models import transformer as T
 from repro.models.fog_exit import decode_step_fog, grove_boundaries
@@ -59,27 +64,41 @@ def _splice_cache(batch_leaf, row_leaf, slot):
     return batch_leaf
 
 
-def decode_fn(tokens, lengths):
+def decode_fn(tokens, lengths, policy):
     global caches
-    # the batch shares one position counter in this demo: use max length
+    # the batch shares one position counter in this demo: use max length;
+    # policy carries the per-lane thresholds/budgets the batcher assembled
     length = jnp.int32(int(lengths.max()))
     logits, caches, hops = decode_step_fog(params, cfg, tokens, caches,
-                                           length, THRESH)
+                                           length, policy)
     return logits, hops
 
 
-batcher = ContinuousBatcher(N_SLOTS, decode_fn, prefill_fn, eos_id=-1)
+# three QoS tiers sharing ONE continuous batch: premium (hop until really
+# confident), standard, and a budget tier capped at 2 groves per token
+TIERS = {
+    "premium": FogPolicy(threshold=0.05),
+    "standard": FogPolicy(threshold=THRESH),
+    "budget": FogPolicy(threshold=0.05, hop_budget=2),
+}
+batcher = ContinuousBatcher(N_SLOTS, decode_fn, prefill_fn, eos_id=-1,
+                            default_policy=TIERS["standard"])
 rng = np.random.default_rng(0)
 dcfg = DataConfig(cfg.vocab_size, 32, 8, seed=7)
+tier_of = {}
 for rid in range(8):
     prompt = batch_at_step(dcfg, rid)["tokens"][0, :24]
-    batcher.submit(Request(rid=rid, prompt=prompt, max_new_tokens=16))
+    tier = list(TIERS)[rid % len(TIERS)]
+    tier_of[rid] = tier
+    batcher.submit(Request(rid=rid, prompt=prompt, max_new_tokens=16,
+                           policy=TIERS[tier]))
 
 done = batcher.run(max_steps=200)
 n_groups = len(grove_boundaries(cfg))
-print(f"served {len(done)} requests, {n_groups} groves, thresh={THRESH}")
+print(f"served {len(done)} requests, {n_groups} groves, mixed QoS tiers")
 for req in sorted(done, key=lambda r: r.rid):
     h = np.asarray(req.hops, np.float64)
-    print(f"  req {req.rid}: {len(req.generated)} tokens, "
+    print(f"  req {req.rid} [{tier_of[req.rid]:>8}]: "
+          f"{len(req.generated)} tokens, "
           f"mean groves/token {h.mean():.2f}  "
           f"(flops frac vs full stack: {h.mean() / n_groups:.2f})")

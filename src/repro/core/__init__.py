@@ -1,6 +1,7 @@
 from repro.core.confidence import maxdiff, maxdiff_multioutput, top2
 from repro.core.grove import GroveCollection, gc_train, split, grove_predict_proba
-from repro.core.engine import (BACKENDS, FogEngine, FogResult, HopMeter,
+from repro.core.policy import BACKENDS, NO_BUDGET, FogPolicy, assemble
+from repro.core.engine import (FogEngine, FogResult, HopMeter,
                                confidence_margin, hop_update, sample_starts)
 from repro.core.fog_eval import fog_eval, fog_eval_lazy, fog_eval_multioutput
 from repro.core.energy import (
@@ -9,19 +10,20 @@ from repro.core.energy import (
     cnn_energy_pj,
 )
 from repro.core.budget import (
-    TopologyPoint, evaluate_topology, topology_sweep, select_min_edp,
-    threshold_sweep, find_opt_threshold,
+    TopologyPoint, evaluate_topology, policy_sweep, topology_sweep,
+    select_min_edp, threshold_sweep, find_opt_threshold,
 )
 
 __all__ = [
     "maxdiff", "maxdiff_multioutput", "top2",
     "GroveCollection", "gc_train", "split", "grove_predict_proba",
-    "BACKENDS", "FogEngine", "FogResult", "HopMeter", "confidence_margin",
+    "BACKENDS", "NO_BUDGET", "FogPolicy", "assemble",
+    "FogEngine", "FogResult", "HopMeter", "confidence_margin",
     "hop_update", "sample_starts",
     "fog_eval", "fog_eval_lazy", "fog_eval_multioutput",
     "EnergyReport", "fog_energy", "rf_report", "dt_energy_pj",
     "rf_energy_pj", "grove_energy_pj", "svm_lr_energy_pj",
     "svm_rbf_energy_pj", "mlp_energy_pj", "cnn_energy_pj",
-    "TopologyPoint", "evaluate_topology", "topology_sweep",
+    "TopologyPoint", "evaluate_topology", "policy_sweep", "topology_sweep",
     "select_min_edp", "threshold_sweep", "find_opt_threshold",
 ]

@@ -3,17 +3,25 @@
 The paper sweeps (n_groves x trees_per_grove) topologies of a fixed forest,
 evaluates accuracy and EDP on validation data, and picks the min-EDP design
 at maximum accuracy; the threshold then becomes the run-time knob (Fig 5).
+
+Every sweep point is a :class:`~repro.core.policy.FogPolicy` — the same
+runtime-knob object the engine, the serving path and the sklearn facade
+consume — so a sweep's winning point can be handed directly to
+``FogEngine.eval(..., policy=point)`` or ``FogClassifier(policy=point)``
+without translating loose floats.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.energy import fog_energy
-from repro.core.fog_eval import fog_eval
+from repro.core.engine import FogEngine
 from repro.core.grove import split
+from repro.core.policy import FogPolicy
 from repro.forest.tree import TensorForest
 
 
@@ -26,6 +34,7 @@ class TopologyPoint:
     energy_nj: float     # mean energy per classification
     delay: float         # mean hops (ring latency proxy, cycles ~ hops * grove latency)
     edp: float           # energy * delay
+    policy: FogPolicy = dataclasses.field(default=FogPolicy(), compare=False)
 
     def __str__(self) -> str:
         return (f"{self.n_groves}x{self.grove_size} thr={self.threshold:.2f} "
@@ -33,31 +42,58 @@ class TopologyPoint:
                 f"D={self.delay:.2f} EDP={self.edp:.3f}")
 
 
+def _as_policy(policy) -> FogPolicy:
+    """Accept a FogPolicy or a bare threshold float (legacy call sites)."""
+    if isinstance(policy, FogPolicy):
+        return policy
+    return FogPolicy(threshold=float(policy))
+
+
 def evaluate_topology(forest: TensorForest, grove_size: int,
                       x_val: np.ndarray, y_val: np.ndarray,
-                      thresh: float, max_hops: int | None = None,
+                      policy: FogPolicy | float, max_hops: int | None = None,
                       seed: int = 0) -> TopologyPoint:
+    """Accuracy / energy / EDP of one (topology, policy) design point.
+
+    ``policy`` is the runtime-knob contract; a bare float is accepted as a
+    scalar threshold for backward compatibility (``max_hops`` then caps the
+    loop as before).
+    """
+    pol = _as_policy(policy)
+    if max_hops is not None and pol.max_hops is None:
+        pol = pol.replace(max_hops=max_hops)
     gc = split(forest, grove_size)
-    hops_cap = max_hops if max_hops is not None else gc.n_groves
-    res = fog_eval(gc, jax.numpy.asarray(x_val), jax.random.key(seed),
-                   thresh, hops_cap)
+    engine = FogEngine(gc)
+    res = engine.eval(jax.numpy.asarray(x_val), jax.random.key(seed),
+                      policy=pol)
     acc = float(np.mean(np.asarray(res.label) == y_val))
     hops = np.asarray(res.hops)
     rep = fog_energy(hops, grove_size, gc.depth, gc.n_classes, x_val.shape[1])
     delay = float(hops.mean())
     e_nj = rep.per_example_nj
-    return TopologyPoint(gc.n_groves, grove_size, float(thresh), acc,
-                         e_nj, delay, e_nj * delay)
+    thresh_scalar = float(np.asarray(pol.threshold, np.float64).mean())
+    return TopologyPoint(gc.n_groves, grove_size, thresh_scalar, acc,
+                         e_nj, delay, e_nj * delay, policy=pol)
+
+
+def policy_sweep(forest: TensorForest, grove_size: int,
+                 x_val: np.ndarray, y_val: np.ndarray,
+                 policies: Iterable[FogPolicy],
+                 seed: int = 0) -> list[TopologyPoint]:
+    """Evaluate a grid of FogPolicy design points on a fixed topology."""
+    return [evaluate_topology(forest, grove_size, x_val, y_val, p, seed=seed)
+            for p in policies]
 
 
 def topology_sweep(forest: TensorForest, x_val: np.ndarray, y_val: np.ndarray,
-                   thresh: float = 0.3) -> list[TopologyPoint]:
+                   policy: FogPolicy | float = 0.3) -> list[TopologyPoint]:
     """Figure 4: every (groves x grove_size) factorization of the forest."""
+    pol = _as_policy(policy)
     t = forest.n_trees
     points = []
     for k in range(1, t + 1):
         if t % k == 0:
-            points.append(evaluate_topology(forest, k, x_val, y_val, thresh))
+            points.append(evaluate_topology(forest, k, x_val, y_val, pol))
     return points
 
 
@@ -71,12 +107,14 @@ def select_min_edp(points: list[TopologyPoint],
 
 def threshold_sweep(forest: TensorForest, grove_size: int,
                     x_val: np.ndarray, y_val: np.ndarray,
-                    thresholds: np.ndarray | None = None) -> list[TopologyPoint]:
-    """Figure 5: run-time tunability curve for a fixed topology."""
+                    thresholds: Sequence[float] | np.ndarray | None = None,
+                    ) -> list[TopologyPoint]:
+    """Figure 5: run-time tunability curve for a fixed topology (a
+    FogPolicy grid varying only the threshold knob)."""
     if thresholds is None:
         thresholds = np.asarray([0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9, 1.0])
-    return [evaluate_topology(forest, grove_size, x_val, y_val, float(t))
-            for t in thresholds]
+    return policy_sweep(forest, grove_size, x_val, y_val,
+                        [FogPolicy(threshold=float(t)) for t in thresholds])
 
 
 def find_opt_threshold(points: list[TopologyPoint],

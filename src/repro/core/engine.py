@@ -17,29 +17,39 @@ backend         per-hop update implementation
                 rotate one ICI hop per round
 ==============  =============================================================
 
-Every backend runs the *identical* update math, so labels and — critically —
-per-example hop counts (the paper's energy quantity) are bit-identical across
-backends for the same starting groves.  ``sample_starts`` is the one place
-start groves are drawn: on a single shard it reproduces the legacy
-``fog_eval`` draw exactly; on an n-shard ring it stratifies starts so each
-shard begins with an equal slice of the queue.
+Every runtime knob — threshold (scalar or per-lane ``[B]``), hop caps and
+per-lane hop budgets, backend selection, tiling — is owned by a
+:class:`repro.core.policy.FogPolicy`; the canonical evaluation call is
+
+    engine.eval(x, key, policy=FogPolicy(threshold=0.3))
+
+(the old positional ``eval(x, key, thresh, max_hops)`` survives as a
+deprecated shim).  Every backend runs the *identical* update math, so labels
+and — critically — per-example hop counts (the paper's energy quantity) are
+bit-identical across backends for the same starting groves, including under
+per-lane thresholds and budgets.  ``sample_starts`` is the one place start
+groves are drawn: on a single shard it reproduces the legacy ``fog_eval``
+draw exactly; on an n-shard ring it stratifies starts so each shard begins
+with an equal slice of the queue.
 
 Batches larger than VMEM are evaluated in fixed-size chunks (``chunk_b``)
-with one compiled program reused across chunks.
+with one compiled program reused across chunks; per-lane policy vectors are
+dead-padded alongside the inputs.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.confidence import maxdiff
 from repro.core.grove import GroveCollection, grove_predict_proba
+from repro.core.policy import BACKENDS, FogPolicy
 from repro.kernels import ops, ref
-
-BACKENDS = ("reference", "pallas", "ring")
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -84,8 +94,9 @@ def hop_update(prob, contrib, live, hops, thresh, *, backend: str = "reference",
                block_b: int = 256):
     """One Algorithm-2 hop update (lines 7-11), dispatched by backend.
 
-    Returns (prob, hops, live, margin).  This is the single shared update
-    both FogEngine loops and the distributed ring build on.
+    ``thresh`` is a scalar or per-lane ``[B]`` vector.  Returns
+    (prob, hops, live, margin).  This is the single shared update both
+    FogEngine loops and the distributed ring build on.
     """
     _check_step_backend(backend)
     if backend == "pallas":
@@ -129,30 +140,37 @@ def _repeat_lanes(v, n_out):
     return v if n_out == 1 else jnp.repeat(v, n_out)
 
 
-def _step(gcs, x, start, thresh, j, prob, live, hops, backend, block_b):
-    """Shared hop body: returns updated (prob, live, hops) for [B*O, C]."""
+def _step(gcs, x, start, thresh, budget, j, prob, live, hops, backend,
+          block_b):
+    """Shared hop body: returns updated (prob, live, hops) for [B*O, C].
+
+    ``thresh`` is per-lane [B] float32; ``budget`` per-lane [B] int32 — a
+    lane that has consumed its hop budget dies even while unconfident.
+    """
     O = len(gcs)
     G = gcs[0].n_groves
     g_idx = (start + j) % G
     contrib = _contrib(gcs, g_idx, x)
     prob, hops_f, live_f, margin = hop_update(
         prob, contrib, _repeat_lanes(live, O), _repeat_lanes(hops, O),
-        thresh, backend=backend, block_b=block_b)
+        _repeat_lanes(thresh, O), backend=backend, block_b=block_b)
     if O == 1:
-        return prob, live_f, hops_f
+        return prob, live_f & (hops_f < budget), hops_f
     # min-over-outputs rule: a lane stays live until EVERY head is confident
     margin = margin.reshape(-1, O).min(axis=1)
     hops = hops_f.reshape(-1, O)[:, 0]
-    live = live & (margin < thresh)
+    live = live & (margin < thresh) & (hops < budget)
     return prob, live, hops
 
 
 @partial(jax.jit, static_argnames=("max_hops", "backend", "block_b", "lazy"))
-def _eval_core(gcs: tuple, x, start, thresh, max_hops: int, backend: str,
-               block_b: int, lazy: bool):
+def _eval_core(gcs: tuple, x, start, thresh, budget, max_hops: int,
+               backend: str, block_b: int, lazy: bool):
     B = x.shape[0]
     O = len(gcs)
     C = gcs[0].n_classes
+    thresh = jnp.broadcast_to(jnp.asarray(thresh, jnp.float32), (B,))
+    budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (B,))
     prob0 = jnp.zeros((B * O, C), jnp.float32)
     live0 = jnp.ones((B,), bool)
     hops0 = jnp.zeros((B,), jnp.int32)
@@ -164,8 +182,8 @@ def _eval_core(gcs: tuple, x, start, thresh, max_hops: int, backend: str,
 
         def body(state):
             j, prob, live, hops = state
-            prob, live, hops = _step(gcs, x, start, thresh, j, prob, live,
-                                     hops, backend, block_b)
+            prob, live, hops = _step(gcs, x, start, thresh, budget, j, prob,
+                                     live, hops, backend, block_b)
             return (j + 1, prob, live, hops)
 
         _, prob, _, hops = jax.lax.while_loop(
@@ -173,8 +191,8 @@ def _eval_core(gcs: tuple, x, start, thresh, max_hops: int, backend: str,
     else:
         def body(carry, j):
             prob, live, hops = carry
-            prob, live, hops = _step(gcs, x, start, thresh, j, prob, live,
-                                     hops, backend, block_b)
+            prob, live, hops = _step(gcs, x, start, thresh, budget, j, prob,
+                                     live, hops, backend, block_b)
             return (prob, live, hops), None
 
         (prob, _, hops), _ = jax.lax.scan(
@@ -198,21 +216,24 @@ class FogEngine:
 
     gc:        GroveCollection, or a tuple of them (multi-output heads with
                identical (n_groves, grove_size)).
-    backend:   "reference" | "pallas" | "ring".
-    block_b:   pallas batch tile (rows of [B, C] state per VMEM block).
-    chunk_b:   evaluate the batch in chunks of this many examples (bounds
-               VMEM/working-set for huge batches); None = whole batch.
+    policy:    default :class:`FogPolicy` applied when ``eval`` is called
+               without one.  A per-call policy REPLACES it — the traced
+               knobs (threshold, hop_budget) come wholly from the policy
+               you pass; only its None-valued static knobs (max_hops,
+               backend, block_b, chunk_b, lazy) fall back to the engine
+               defaults.
     mesh/axis: required for the ring backend; n_groves % mesh.shape[axis]
                must be 0 (each shard hosts a strided subset of groves).
     use_kernels: ring only — run the Pallas tree-traversal PE per shard.
-    lazy:      early-exit while_loop instead of a fixed-trip scan (same
-               results; saves wall clock when the whole batch is easy).
+
+    ``backend`` / ``block_b`` / ``chunk_b`` / ``lazy`` kwargs remain as
+    engine-level defaults for any policy that leaves them None.
     """
 
     def __init__(self, gc, *, backend: str = "reference",
                  block_b: int = 256, chunk_b: int | None = None,
                  mesh=None, axis: str = "grove", use_kernels: bool = False,
-                 lazy: bool = False):
+                 lazy: bool = False, policy: FogPolicy | None = None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
         self.gcs: tuple[GroveCollection, ...] = (
@@ -231,32 +252,42 @@ class FogEngine:
         self.axis = axis
         self.use_kernels = use_kernels
         self.lazy = lazy
+        self.policy = policy if policy is not None else FogPolicy()
+        self._ring_tables = None
         if use_kernels and backend != "ring":
             raise ValueError("use_kernels applies to the ring backend only "
                              "(the pallas backend always runs the fused "
                              "hop-update kernel)")
         if backend == "ring":
-            if mesh is None:
-                raise ValueError("ring backend needs a mesh")
-            if len(self.gcs) > 1:
-                raise NotImplementedError("ring backend is single-output")
-            if lazy or chunk_b is not None:
-                raise ValueError("lazy/chunk_b are not supported on the "
-                                 "ring backend (the ring always runs the "
-                                 "fixed max_hops rotation schedule)")
-            self.n_shards = mesh.shape[axis]
-            if g0.n_groves % self.n_shards:
-                raise ValueError(
-                    f"n_groves={g0.n_groves} not divisible by "
-                    f"{self.n_shards} ring shards")
-            if use_kernels and g0.n_groves != self.n_shards:
-                raise ValueError(
-                    "use_kernels needs one grove per shard (the multi-"
-                    "grove gather path has no Pallas tree-traversal PE)")
+            self._check_ring_config(lazy=lazy, chunk_b=chunk_b)
+
+    def _check_ring_config(self, *, lazy: bool, chunk_b: int | None) -> None:
+        if self.mesh is None:
+            raise ValueError("ring backend needs a mesh")
+        if len(self.gcs) > 1:
+            raise NotImplementedError("ring backend is single-output")
+        if lazy or chunk_b is not None:
+            raise ValueError("lazy/chunk_b are not supported on the "
+                             "ring backend (the ring always runs the "
+                             "fixed max_hops rotation schedule)")
+        n_shards = self.mesh.shape[self.axis]
+        if self.gcs[0].n_groves % n_shards:
+            raise ValueError(
+                f"n_groves={self.gcs[0].n_groves} not divisible by "
+                f"{n_shards} ring shards")
+        if self.use_kernels and self.gcs[0].n_groves != n_shards:
+            raise ValueError(
+                "use_kernels needs one grove per shard (the multi-"
+                "grove gather path has no Pallas tree-traversal PE)")
+
+    @property
+    def ring_tables(self):
+        """Strided-reordered grove tables, built on first ring use."""
+        if self._ring_tables is None:
             from repro.core.fog_ring import reorder_tables
-            self._ring_tables = reorder_tables(g0, self.n_shards)
-        else:
-            self.n_shards = 1
+            self._ring_tables = reorder_tables(
+                self.gcs[0], self.mesh.shape[self.axis])
+        return self._ring_tables
 
     # -- properties ------------------------------------------------------
     @property
@@ -264,47 +295,105 @@ class FogEngine:
         return self.gcs[0].n_groves
 
     @property
+    def n_shards(self) -> int:
+        if self.backend == "ring" and self.mesh is not None:
+            return self.mesh.shape[self.axis]
+        return 1
+
+    @property
     def multi_output(self) -> bool:
         return len(self.gcs) > 1
 
+    # -- policy resolution ----------------------------------------------
+    def resolve(self, policy: FogPolicy | None = None) -> FogPolicy:
+        """Fill a policy's None knobs from the engine defaults."""
+        p = policy if policy is not None else self.policy
+        return p.replace(
+            max_hops=p.max_hops if p.max_hops is not None else self.n_groves,
+            backend=p.backend if p.backend is not None else self.backend,
+            block_b=p.block_b if p.block_b is not None else self.block_b,
+            chunk_b=p.chunk_b if p.chunk_b is not None else self.chunk_b,
+            lazy=p.lazy if p.lazy is not None else self.lazy)
+
     # -- evaluation ------------------------------------------------------
-    def eval(self, x: jax.Array, key: jax.Array, thresh,
-             max_hops: int | None = None) -> FogResult:
-        """GCEval(X, thresh, max_hops) — Algorithm 2, any backend."""
-        max_hops = self.n_groves if max_hops is None else max_hops
-        thresh = jnp.asarray(thresh, jnp.float32)
+    def eval(self, x: jax.Array, key: jax.Array, thresh=None,
+             max_hops: int | None = None, *,
+             policy: FogPolicy | None = None) -> FogResult:
+        """GCEval(X, policy) — Algorithm 2, any backend.
+
+        Canonical call: ``eval(x, key, policy=FogPolicy(...))``.  The
+        positional ``(thresh, max_hops)`` form is deprecated.
+        """
+        if isinstance(thresh, FogPolicy):
+            # a policy passed positionally (the decode_step_fog calling
+            # convention) is the canonical form, not the deprecated one
+            if policy is not None or max_hops is not None:
+                raise TypeError("pass a single FogPolicy (positionally or "
+                                "via policy=), without extra thresh/"
+                                "max_hops arguments")
+            policy, thresh = thresh, None
+        if policy is not None and (thresh is not None or max_hops is not None):
+            raise TypeError("pass either policy= or the deprecated "
+                            "(thresh, max_hops) arguments, not both")
+        if policy is None and (thresh is not None or max_hops is not None):
+            warnings.warn(
+                "FogEngine.eval(x, key, thresh, max_hops) is deprecated; "
+                "pass eval(x, key, policy=FogPolicy(threshold=..., "
+                "max_hops=...)) instead",
+                DeprecationWarning, stacklevel=2)
+            policy = self.policy.replace(
+                threshold=thresh if thresh is not None else
+                self.policy.threshold,
+                max_hops=max_hops)
+        p = self.resolve(policy)
+        backend, max_hops = p.backend, p.max_hops
+        if backend == "ring":
+            self._check_ring_config(lazy=bool(p.lazy), chunk_b=p.chunk_b)
         x = jnp.asarray(x)
-        start = sample_starts(key, x.shape[0], self.n_groves, self.n_shards)
-        if self.backend == "ring":
-            return self._eval_ring(x, start, thresh, max_hops)
-        return self._eval_chunked(x, start, thresh, max_hops)
+        B = x.shape[0]
+        thresh_v = p.lane_thresholds(B)
+        budget_v = p.lane_budgets(B)
+        n_shards = self.mesh.shape[self.axis] if backend == "ring" else 1
+        start = sample_starts(key, B, self.n_groves, n_shards)
+        if backend == "ring":
+            return self._eval_ring(x, start, thresh_v, budget_v, max_hops)
+        return self._eval_chunked(x, start, thresh_v, budget_v, max_hops,
+                                  backend, p.block_b, p.chunk_b, p.lazy)
 
     __call__ = eval
 
-    def _eval_chunked(self, x, start, thresh, max_hops) -> FogResult:
+    def _eval_chunked(self, x, start, thresh, budget, max_hops, backend,
+                      block_b, chunk_b, lazy) -> FogResult:
         B = x.shape[0]
-        cb = self.chunk_b
+        cb = chunk_b
         if cb is None or B <= cb:
-            return _eval_core(self.gcs, x, start, thresh, max_hops,
-                              self.backend, min(self.block_b, B), self.lazy)
+            return _eval_core(self.gcs, x, start, thresh, budget, max_hops,
+                              backend, min(block_b, B), lazy)
         pad = (-B) % cb
-        if pad:  # dead-pad the tail chunk so every chunk hits one compile
+        if pad:  # dead-pad the tail chunk so every chunk hits one compile;
+            # per-lane policy vectors pad alongside x (padded lanes are
+            # discarded, their thresh/budget values are irrelevant)
             x = jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)])
             start = jnp.concatenate([start, jnp.zeros((pad,), start.dtype)])
+            thresh = jnp.concatenate(
+                [thresh, jnp.repeat(thresh[:1], pad, axis=0)])
+            budget = jnp.concatenate(
+                [budget, jnp.repeat(budget[:1], pad, axis=0)])
         chunks = [
-            _eval_core(self.gcs, x[i:i + cb], start[i:i + cb], thresh,
-                       max_hops, self.backend, min(self.block_b, cb),
-                       self.lazy)
+            _eval_core(self.gcs, x[i:i + cb], start[i:i + cb],
+                       thresh[i:i + cb], budget[i:i + cb], max_hops,
+                       backend, min(block_b, cb), lazy)
             for i in range(0, B + pad, cb)
         ]
         out = jax.tree.map(lambda *ls: jnp.concatenate(ls)[:B], *chunks)
         return out
 
-    def _eval_ring(self, x, start, thresh, max_hops) -> FogResult:
+    def _eval_ring(self, x, start, thresh, budget, max_hops) -> FogResult:
         from repro.core.fog_ring import ring_eval
         proba, hops = ring_eval(
             self.gcs[0], x, start, thresh, max_hops, self.mesh, self.axis,
-            use_kernels=self.use_kernels, tables=self._ring_tables)
+            use_kernels=self.use_kernels, tables=self.ring_tables,
+            hop_budget=budget)
         return FogResult(proba=proba,
                          label=jnp.argmax(proba, axis=-1).astype(jnp.int32),
                          hops=hops)
@@ -323,10 +412,14 @@ class HopMeter:
         self.n_events = 0
 
     def update(self, hops) -> None:
-        import numpy as np
         h = np.asarray(hops)
         self.total_hops += int(h.sum())
         self.n_events += int(h.size)
+
+    def reset(self) -> None:
+        """Clear the accounting (e.g. between scheduler runs)."""
+        self.total_hops = 0
+        self.n_events = 0
 
     @property
     def mean_hops(self) -> float:

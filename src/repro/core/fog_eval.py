@@ -2,9 +2,11 @@
 
 .. deprecated::
     The hop-until-confident loop lives in :mod:`repro.core.engine`; these
-    wrappers exist so the original ``fog_eval*`` call sites keep working.
-    New code should build a ``FogEngine`` (which also exposes the pallas
-    fused-update and mesh-ring backends) instead.
+    wrappers exist so the original ``fog_eval*`` call sites keep working —
+    each emits a real ``DeprecationWarning``.  New code should build a
+    ``FogEngine`` and call ``eval(x, key, policy=FogPolicy(...))`` (which
+    also exposes the pallas fused-update and mesh-ring backends, per-lane
+    thresholds, and per-lane hop budgets) instead.
 
 The ASIC processes examples as queue entries hopping grove-to-grove with a
 req/ack handshake.  On a SIMD machine the identical math is a batched
@@ -16,18 +18,30 @@ semantics; only the execution order differs (see README §Design).
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 from repro.core.engine import FogEngine, FogResult  # noqa: F401  (re-export)
 from repro.core.grove import GroveCollection
+from repro.core.policy import FogPolicy
+
+
+def _warn(name: str, hint: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; use {hint}",
+        DeprecationWarning, stacklevel=3)
 
 
 def fog_eval(gc: GroveCollection, x: jax.Array, key: jax.Array,
              thresh: float | jax.Array, max_hops: int) -> FogResult:
     """GCEval(X, thresh, max_hops) — deprecated shim for the reference
-    backend; use ``FogEngine(gc).eval(x, key, thresh, max_hops)``."""
-    return FogEngine(gc, backend="reference").eval(x, key, thresh,
-                                                   max_hops=max_hops)
+    backend; use ``FogEngine(gc).eval(x, key, policy=FogPolicy(...))``."""
+    _warn("fog_eval",
+          "FogEngine(gc).eval(x, key, policy=FogPolicy(threshold=thresh, "
+          "max_hops=max_hops))")
+    return FogEngine(gc, backend="reference").eval(
+        x, key, policy=FogPolicy(threshold=thresh, max_hops=max_hops))
 
 
 def fog_eval_multioutput(gcs, x: jax.Array, key: jax.Array,
@@ -35,8 +49,10 @@ def fog_eval_multioutput(gcs, x: jax.Array, key: jax.Array,
     """Multi-output Algorithm 2 (paper footnote 1) — deprecated shim; use
     ``FogEngine(tuple_of_gcs)``.  Confidence is the Min over outputs of the
     per-output MaxDiff, so an input hops until EVERY head is confident."""
+    _warn("fog_eval_multioutput",
+          "FogEngine(tuple_of_gcs).eval(x, key, policy=FogPolicy(...))")
     return FogEngine(tuple(gcs), backend="reference").eval(
-        x, key, thresh, max_hops=max_hops)
+        x, key, policy=FogPolicy(threshold=thresh, max_hops=max_hops))
 
 
 def fog_eval_lazy(gc: GroveCollection, x: jax.Array, key: jax.Array,
@@ -45,5 +61,7 @@ def fog_eval_lazy(gc: GroveCollection, x: jax.Array, key: jax.Array,
     ``FogEngine(gc, lazy=True)``: a ``while_loop`` that stops as soon as the
     whole batch is confident.  Same results as :func:`fog_eval`; saves wall
     clock (not modeled energy) when the batch is easy."""
+    _warn("fog_eval_lazy",
+          "FogEngine(gc, lazy=True).eval(x, key, policy=FogPolicy(...))")
     return FogEngine(gc, backend="reference", lazy=True).eval(
-        x, key, thresh, max_hops=max_hops)
+        x, key, policy=FogPolicy(threshold=thresh, max_hops=max_hops))

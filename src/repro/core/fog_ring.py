@@ -93,15 +93,19 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
                   use_kernels: bool = False):
     """Build the jitted ring evaluator for ``mesh`` (grove axis = ``axis``).
 
-    Returns fn(feature, threshold, leaf, x, start, thresh) -> (proba, hops)
-    where the grove tables (strided-reordered, see ``_grove_order``) and the
-    batch are sharded over ``axis``, and ``start`` is each lane's global
-    start grove (lane already placed on shard start % n_shards).
+    Returns fn(feature, threshold, leaf, x, start, thresh, budget)
+    -> (proba, hops) where the grove tables (strided-reordered, see
+    ``_grove_order``) and the batch are sharded over ``axis``, ``start`` is
+    each lane's global start grove (lane already placed on shard
+    start % n_shards), and ``thresh`` / ``budget`` are per-lane [B] vectors
+    (a lane's confidence gate and hop budget travel with its queue entry —
+    every queue field of the ASIC handshake, including the QoS contract,
+    crosses the same ICI link).
     """
     n_shards = mesh.shape[axis]
     assert n_groves % n_shards == 0, (n_groves, n_shards)
 
-    def ring(feature, threshold, leaf, x, start, thresh):
+    def ring(feature, threshold, leaf, x, start, thresh, budget):
         # Per-shard views: feature [m, k, nodes], x [b, F], start [b].
         b = x.shape[0]
         m = feature.shape[0]
@@ -112,7 +116,7 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
         perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
 
         def body(carry, _):
-            x, prob, hops, live, gidx = carry
+            x, prob, hops, live, gidx, thresh, budget = carry
             if m == 1:
                 contrib = _eval_block_grove(feature, threshold, leaf, x,
                                             use_kernels)
@@ -121,14 +125,17 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
                                              gidx // n_shards)
             prob, hops, live, _ = ref.grove_aggregate_ref(
                 prob, contrib, live, hops, thresh)
+            live = live & (hops < budget)     # per-lane energy cap
             # the handshake: rotate queue entries to the next grove's shard
             gidx = (gidx + 1) % n_groves
             carry = tuple(jax.lax.ppermute(v, axis, perm)
-                          for v in (x, prob, hops, live, gidx))
+                          for v in (x, prob, hops, live, gidx, thresh,
+                                    budget))
             return carry, None
 
-        (x, prob, hops, live, gidx), _ = jax.lax.scan(
-            body, (x, prob, hops, live, gidx), None, length=max_hops)
+        (x, prob, hops, live, gidx, thresh, budget), _ = jax.lax.scan(
+            body, (x, prob, hops, live, gidx, thresh, budget), None,
+            length=max_hops)
         # after max_hops rotations a lane's state sits max_hops shards
         # downstream of where it entered; rotate it back so the gathered
         # output rows line up with the input batch order (identity permute
@@ -142,7 +149,7 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
     gspec = P(axis)  # grove tables partitioned over the ring, dim 0
     fn = shard_map(
         ring, mesh=mesh,
-        in_specs=(gspec, gspec, gspec, P(axis), P(axis), P()),
+        in_specs=(gspec, gspec, gspec, P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis)),
         check_rep=False,
     )
@@ -159,15 +166,18 @@ def reorder_tables(gc: GroveCollection, n_shards: int):
 
 def ring_eval(gc: GroveCollection, x: jax.Array, start: jax.Array,
               thresh, max_hops: int, mesh: Mesh, axis: str = "grove",
-              use_kernels: bool = False, tables=None):
+              use_kernels: bool = False, tables=None, hop_budget=None):
     """Run the ring with explicit per-lane start groves.
 
     ``start`` must contain exactly B/n_shards lanes per residue class
     (start % n_shards) — ``engine.sample_starts`` produces such draws.
     Lanes are placed on their start grove's shard, evaluated, and returned
-    in the original batch order.  ``tables`` is an optional precomputed
-    ``reorder_tables(gc, n_shards)`` result.
+    in the original batch order.  ``thresh`` and ``hop_budget`` may be
+    scalars or per-lane [B] vectors (FogPolicy's mixed-QoS contract);
+    ``tables`` is an optional precomputed ``reorder_tables(gc, n_shards)``
+    result.
     """
+    from repro.core.policy import NO_BUDGET
     B = x.shape[0]
     G = gc.n_groves
     n_shards = mesh.shape[axis]
@@ -186,12 +196,16 @@ def ring_eval(gc: GroveCollection, x: jax.Array, start: jax.Array,
                 "with engine.sample_starts(key, B, G, n_shards)")
     feature, threshold, leaf = (tables if tables is not None
                                 else reorder_tables(gc, n_shards))
+    thresh = jnp.broadcast_to(jnp.asarray(thresh, jnp.float32), (B,))
+    if hop_budget is None:
+        hop_budget = NO_BUDGET
+    budget = jnp.broadcast_to(jnp.asarray(hop_budget, jnp.int32), (B,))
     # stable sort by owning shard -> contiguous equal-size per-shard queues
     perm = jnp.argsort(start % n_shards, stable=True)
     inv = jnp.argsort(perm)
     fn = make_fog_ring(mesh, axis, max_hops, G, use_kernels=use_kernels)
     proba, hops = fn(feature, threshold, leaf,
-                     x[perm], start[perm], jnp.asarray(thresh, jnp.float32))
+                     x[perm], start[perm], thresh[perm], budget[perm])
     return proba[inv], hops[inv]
 
 
@@ -200,9 +214,17 @@ def fog_ring_eval(gc: GroveCollection, x: jax.Array, key: jax.Array,
                   use_kernels: bool = False):
     """Legacy entry point: draw stratified random starts, run the ring.
 
-    Prefer ``FogEngine(gc, backend="ring", mesh=mesh)`` — this shim remains
-    for callers that manage their own meshes.
+    .. deprecated::
+        Use ``FogEngine(gc, backend="ring", mesh=mesh).eval(x, key,
+        policy=FogPolicy(...))`` — this shim remains for callers that
+        manage their own meshes.
     """
+    import warnings
+    warnings.warn(
+        "fog_ring_eval is deprecated; use FogEngine(gc, backend='ring', "
+        "mesh=mesh).eval(x, key, policy=FogPolicy(threshold=..., "
+        "max_hops=...)) instead",
+        DeprecationWarning, stacklevel=2)
     from repro.core.engine import sample_starts
     start = sample_starts(key, x.shape[0], gc.n_groves,
                           mesh.shape[axis])

@@ -1,0 +1,154 @@
+"""FogPolicy — the one runtime-knob contract for Algorithm-2 evaluation.
+
+The paper's value proposition is that threshold and hop count are *run-time*
+knobs trading accuracy for energy (Fig. 5).  Every such knob lives here, in
+one frozen, pytree-registered dataclass, instead of being scattered across
+``FogEngine.__init__`` kwargs, positional ``eval`` arguments, and private
+conventions in ``budget.py`` / ``serve/scheduler.py`` / ``models/fog_exit.py``:
+
+===============  ============================================================
+knob             meaning
+===============  ============================================================
+``threshold``    MaxDiff confidence gate — a scalar for the whole batch, or a
+                 per-lane ``[B]`` vector (mixed-QoS batches: each lane buys
+                 its own accuracy/energy point)
+``max_hops``     global hop cap (static loop trip count); None = n_groves
+``hop_budget``   per-lane energy cap — scalar or ``[B]`` int; a lane stops
+                 hopping once it has consumed its budget even if still
+                 unconfident (anytime inference under an energy contract)
+``backend``      "reference" | "pallas" | "ring"; None = engine default
+``block_b``      pallas batch tile; None = engine default
+``chunk_b``      batch chunking (VMEM bound); None = engine default
+``lazy``         early-exit while_loop vs fixed-trip scan; None = engine
+                 default
+===============  ============================================================
+
+``threshold`` and ``hop_budget`` are pytree *data* (they may be traced,
+per-lane arrays); everything else is static metadata, so a ``FogPolicy``
+passes through ``jax.jit`` boundaries without retriggering compilation when
+only the traced knobs change.
+
+A policy is engine-agnostic: the same object drives ``FogEngine.eval``,
+``FogClassifier.predict``, the ``budget.py`` design sweeps, the
+continuous-batching scheduler (which assembles per-lane vectors from
+per-request policies — see :func:`assemble`), and the LM early-exit gate in
+``models/fog_exit.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BACKENDS = ("reference", "pallas", "ring")
+
+# per-lane "no budget" sentinel: hops < NO_BUDGET is always true for any
+# reachable hop count, so unbudgeted lanes are capped by max_hops alone
+NO_BUDGET = 2**31 - 1
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("threshold", "hop_budget"),
+         meta_fields=("max_hops", "backend", "block_b", "chunk_b", "lazy"))
+@dataclasses.dataclass(frozen=True)
+class FogPolicy:
+    """Every runtime knob of one Algorithm-2 evaluation, in one object."""
+
+    threshold: float | jax.Array = 0.3
+    max_hops: int | None = None
+    hop_budget: int | jax.Array | None = None
+    backend: str | None = None
+    block_b: int | None = None
+    chunk_b: int | None = None
+    lazy: bool | None = None
+
+    def __post_init__(self):
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"pick from {BACKENDS} (or None)")
+        if self.max_hops is not None and self.max_hops < 1:
+            raise ValueError(f"max_hops must be >= 1, got {self.max_hops}")
+        if self.chunk_b is not None and self.chunk_b < 1:
+            raise ValueError(f"chunk_b must be >= 1, got {self.chunk_b}")
+        # a lane always spends its first hop before any gate can fire, so a
+        # budget below 1 is unsatisfiable; validate when concrete (traced
+        # budgets inside jit are the caller's contract)
+        if (self.hop_budget is not None
+                and not isinstance(self.hop_budget, jax.core.Tracer)):
+            if (np.asarray(self.hop_budget) < 1).any():
+                raise ValueError(
+                    f"hop_budget must be >= 1 everywhere (the first hop is "
+                    f"always spent), got {self.hop_budget}")
+
+    # -- convenience -----------------------------------------------------
+    def replace(self, **kw) -> "FogPolicy":
+        """A copy with some knobs changed (frozen dataclass idiom)."""
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def per_lane(self) -> bool:
+        """True when threshold or hop_budget carries a per-lane vector."""
+        return (getattr(self.threshold, "ndim", 0) > 0
+                or getattr(self.hop_budget, "ndim", 0) > 0)
+
+    @property
+    def static_overrides(self) -> tuple[str, ...]:
+        """Names of the static knobs this policy sets (non-None).  Static
+        knobs select compiled programs, so contexts that share one program
+        across many policies (the serving scheduler) must reject them on
+        per-request policies."""
+        return tuple(k for k in ("max_hops", "backend", "block_b",
+                                 "chunk_b", "lazy")
+                     if getattr(self, k) is not None)
+
+    # -- lane-vector materialization (the engines' single entry) ---------
+    def lane_thresholds(self, B: int) -> jax.Array:
+        """``threshold`` as a per-lane float32 ``[B]`` vector."""
+        t = jnp.asarray(self.threshold, jnp.float32)
+        if t.ndim == 0:
+            return jnp.broadcast_to(t, (B,))
+        if t.shape != (B,):
+            raise ValueError(
+                f"per-lane threshold has shape {t.shape}, batch is {B}")
+        return t
+
+    def lane_budgets(self, B: int) -> jax.Array:
+        """``hop_budget`` as a per-lane int32 ``[B]`` vector (NO_BUDGET
+        sentinel where unset — the max_hops loop bound still applies)."""
+        if self.hop_budget is None:
+            return jnp.full((B,), NO_BUDGET, jnp.int32)
+        b = jnp.asarray(self.hop_budget, jnp.int32)
+        if b.ndim == 0:
+            return jnp.broadcast_to(b, (B,))
+        if b.shape != (B,):
+            raise ValueError(
+                f"per-lane hop_budget has shape {b.shape}, batch is {B}")
+        return b
+
+
+def assemble(policies: Sequence["FogPolicy | None"],
+             default: "FogPolicy | None" = None) -> FogPolicy:
+    """Stack per-request scalar policies into one per-lane batch policy.
+
+    The continuous-batching scheduler holds one (possibly absent) scalar
+    policy per slot; this builds the single ``FogPolicy`` whose ``threshold``
+    / ``hop_budget`` are ``[n_slots]`` vectors, so one compiled decode step
+    serves mixed-QoS traffic.  Static knobs (backend, block_b, ...) come
+    from ``default`` — they select compiled programs and cannot vary by lane.
+    """
+    default = default if default is not None else FogPolicy()
+    thr = [float(p.threshold if p is not None else default.threshold)
+           for p in policies]
+    budgets = [(p.hop_budget if p is not None else default.hop_budget)
+               for p in policies]
+    budget_vec = None
+    if any(b is not None for b in budgets):
+        budget_vec = jnp.asarray(
+            [int(b) if b is not None else NO_BUDGET for b in budgets],
+            jnp.int32)
+    return default.replace(threshold=jnp.asarray(thr, jnp.float32),
+                           hop_budget=budget_vec)

@@ -4,6 +4,11 @@ Fuses the per-hop state update — masked probability accumulate, hop count,
 normalization, MaxDiff margin, liveness gate — into one VMEM pass so the
 [B, C] probability state is read and written exactly once per hop instead
 of materializing four intermediates in HBM.
+
+The confidence gate takes a per-lane threshold vector: a scalar threshold is
+broadcast to ``[B]`` before the call, so mixed-QoS batches (every lane with
+its own accuracy/energy trade-off, ``FogPolicy.threshold`` as a vector) run
+the same kernel at identical cost.
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ def _aggregate_kernel(prob_ref, contrib_ref, live_ref, hops_ref, thresh_ref,
     contrib = contrib_ref[...]     # [BB, C]
     live = live_ref[...]           # [BB] (int8 mask: pallas bools are awkward)
     hops = hops_ref[...]           # [BB]
-    thresh = thresh_ref[0]
+    thresh = thresh_ref[...]       # [BB] per-lane gate
 
     livef = live.astype(prob.dtype)
     prob = prob + contrib * livef[:, None]
@@ -42,22 +47,25 @@ def grove_aggregate_pallas(prob_acc: jax.Array, contrib: jax.Array,
                            live: jax.Array, hops: jax.Array,
                            thresh: jax.Array, *, block_b: int = 256,
                            interpret: bool = True):
-    """Fused hop update.  live is bool [B]; returns (prob, hops, live, margin).
+    """Fused hop update.  live is bool [B]; thresh is a scalar or per-lane
+    [B] vector; returns (prob, hops, live, margin).
 
     ``B`` need not divide ``block_b``: the batch is dead-lane padded up to
     the next block boundary (padded lanes carry live=0, so their garbage
-    margins never gate anything) and the outputs are sliced back to ``B``.
+    margins never gate anything; the thresh vector pads along with them)
+    and the outputs are sliced back to ``B``.
     """
     B, C = prob_acc.shape
     block_b = min(block_b, B)
     pad = (-B) % block_b
-    thresh = jnp.asarray(thresh, prob_acc.dtype).reshape(1)
+    thresh = jnp.broadcast_to(jnp.asarray(thresh, prob_acc.dtype), (B,))
     live8 = live.astype(jnp.int8)
     if pad:
         prob_acc = jnp.pad(prob_acc, ((0, pad), (0, 0)))
         contrib = jnp.pad(contrib, ((0, pad), (0, 0)))
         live8 = jnp.pad(live8, (0, pad))
         hops = jnp.pad(hops, (0, pad))
+        thresh = jnp.pad(thresh, (0, pad))
         B = B + pad
     row = lambda i: (i, 0)
     vec = lambda i: (i,)
@@ -69,7 +77,7 @@ def grove_aggregate_pallas(prob_acc: jax.Array, contrib: jax.Array,
             pl.BlockSpec((block_b, C), row),
             pl.BlockSpec((block_b,), vec),
             pl.BlockSpec((block_b,), vec),
-            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_b,), vec),
         ],
         out_specs=[
             pl.BlockSpec((block_b, C), row),

@@ -36,7 +36,8 @@ def top2_confidence(prob, *, block_b: int = 256):
 
 @partial(jax.jit, static_argnames=("block_b",))
 def grove_aggregate(prob_acc, contrib, live, hops, thresh, *, block_b: int = 256):
-    """Fused Algorithm-2 hop update (Pallas; oracle: ref.grove_aggregate_ref)."""
+    """Fused Algorithm-2 hop update; thresh is a scalar or per-lane [B]
+    vector (Pallas; oracle: ref.grove_aggregate_ref)."""
     return grove_aggregate_pallas(prob_acc, contrib, live, hops, thresh,
                                   block_b=block_b, interpret=_interpret())
 

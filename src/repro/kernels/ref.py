@@ -45,7 +45,7 @@ def grove_aggregate_ref(prob_acc: jax.Array, contrib: jax.Array,
     """Algorithm 2 lines 7-11 fused: accumulate, normalize, gate.
 
     prob_acc [B, C], contrib [B, C], live [B] bool, hops [B] int32,
-    thresh scalar -> (prob_acc', hops', live', margin)
+    thresh scalar or per-lane [B] -> (prob_acc', hops', live', margin)
     """
     prob_acc = prob_acc + jnp.where(live[:, None], contrib, 0.0)
     hops = hops + live.astype(jnp.int32)

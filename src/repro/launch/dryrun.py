@@ -62,12 +62,11 @@ def dryrun_cell(arch: str, shape: str, *, multi_pod: bool = False,
             from repro.serve.decode import make_serve_step
             jitted, (params_shape, cache_shape, inp) = make_serve_step(
                 cfg, mesh, shape, fog=fog)
-            if cfg.frontend:
-                lowered = jitted.lower(params_shape, cache_shape,
-                                       inp["embeds"], inp["length"])
-            else:
-                lowered = jitted.lower(params_shape, cache_shape,
-                                       inp["token"], inp["length"])
+            x_shape = inp["embeds"] if cfg.frontend else inp["token"]
+            # fog decode takes the per-lane runtime knobs as traced inputs
+            knobs = (inp["fog_thresh"], inp["fog_budget"]) if fog else ()
+            lowered = jitted.lower(params_shape, cache_shape,
+                                   x_shape, inp["length"], *knobs)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()

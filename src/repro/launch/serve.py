@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_config
 from repro.core.engine import HopMeter
+from repro.core.policy import FogPolicy
 from repro.data.lm_data import DataConfig, batch_at_step
 from repro.models import transformer as T
 from repro.models.fog_exit import decode_step_fog, grove_boundaries
@@ -37,6 +38,8 @@ def main() -> None:
                     choices=["reference", "pallas"],
                     help="confidence-margin backend for the exit gate")
     ap.add_argument("--thresh", type=float, default=0.3)
+    ap.add_argument("--hop-budget", type=int, default=None,
+                    help="per-request grove budget (anytime decoding cap)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -64,19 +67,23 @@ def main() -> None:
         state["caches"] = jax.tree.map(splice, state["caches"], c)
         return len(prompt)
 
-    def decode_fn(tokens, lengths):
+    default_policy = FogPolicy(threshold=args.thresh,
+                               hop_budget=args.hop_budget,
+                               backend=args.fog_backend)
+
+    def decode_fn(tokens, lengths, policy):
+        # policy: the batcher's per-lane assembly of each slot's QoS contract
         length = jnp.int32(int(np.asarray(lengths).max()))
         if args.fog:
             logits, state["caches"], hops = decode_step_fog(
-                params, cfg, tokens, state["caches"], length, args.thresh,
-                backend=args.fog_backend)
+                params, cfg, tokens, state["caches"], length, policy)
             return logits, hops
         logits, state["caches"] = T.decode_step(params, cfg, tokens,
                                                 state["caches"], length)
         return logits, None
 
     batcher = ContinuousBatcher(args.slots, decode_fn, prefill_fn, eos_id=-1,
-                                meter=HopMeter())
+                                meter=HopMeter(), default_policy=default_policy)
     dcfg = DataConfig(cfg.vocab_size, 32, 8, seed=args.seed + 7)
     for rid in range(args.requests):
         prompt = batch_at_step(dcfg, rid)["tokens"][0, :24] % cfg.vocab_size

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.engine import confidence_margin
+from repro.core.policy import FogPolicy
 from repro.models import transformer as T
 
 
@@ -52,15 +53,31 @@ def decode_step_fog(params, cfg: ArchConfig, token, cache, length,
                     thresh, embeds=None, *, backend: str = "reference"):
     """FoG decode step.  Returns (logits [B,V], new_cache, hops [B]).
 
+    ``thresh`` is the runtime-knob contract: a :class:`FogPolicy` (the
+    canonical form — per-lane ``[B]`` threshold vectors and per-lane hop
+    budgets serve mixed-QoS batches), or a bare scalar / ``[B]`` threshold
+    for backward compatibility.  A lane whose hop budget is exhausted exits
+    even while unconfident (anytime decoding under an energy contract).
+
     Grove g is executed under ``lax.cond(live.any())``; exited lanes keep
     their grove-g logits via masking (SIMD equivalent of leaving the queue).
     ``backend`` selects the confidence-margin implementation from the shared
     FogEngine surface ("reference" jnp or the "pallas" top-2 kernel) — the
-    gate semantics and hop accounting are identical either way.
+    gate semantics and hop accounting are identical either way; a
+    policy's ``backend`` knob overrides the kwarg.
     """
     prefix, period, n_rep = T.layer_plan(cfg)
     sizes = grove_boundaries(cfg)
     B = token.shape[0] if token is not None else embeds.shape[0]
+    if isinstance(thresh, FogPolicy):
+        policy = thresh
+    else:
+        policy = FogPolicy(threshold=thresh)
+    if policy.backend is not None:
+        backend = policy.backend
+    thresh = policy.lane_thresholds(B)
+    budget = (policy.lane_budgets(B) if policy.hop_budget is not None
+              else None)
     h = (T.embed_tokens(params, cfg, token[:, None]) if embeds is None
          else embeds)
 
@@ -116,6 +133,8 @@ def decode_step_fog(params, cfg: ArchConfig, token, cache, length,
                 probs = jax.nn.softmax(g_logits, axis=-1)
                 live = live & (confidence_margin(probs, backend=backend)
                                < thresh)
+                if budget is not None:   # per-lane energy cap
+                    live = live & (hops < budget)
             start += size
         new_stack = jax.tree.map(
             lambda *parts: jnp.concatenate(parts, axis=0), *new_stack_parts)

@@ -9,6 +9,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ArchConfig
+from repro.core.policy import FogPolicy
 from repro.launch.mesh import dp_axes
 from repro.launch.sharding import cache_shardings, param_shardings
 from repro.models import transformer as T
@@ -17,16 +18,28 @@ from repro.train.loop import SHAPES, input_specs
 
 
 def make_serve_step(cfg: ArchConfig, mesh, shape: str, *, fog: bool = False,
+                    policy: FogPolicy | None = None,
                     fog_thresh: float = 0.5, fog_backend: str = "reference",
                     param_dtype=jnp.bfloat16):
     """Jitted one-token decode with in/out shardings.
 
     Returns (jitted_fn, (params_shape, cache_shape, inputs_shape)).
     fn(params, cache, token|embeds, length) -> (logits, new_cache[, hops])
+
+    With ``fog=True`` the decode step takes the per-lane runtime knobs as
+    *traced* inputs — fn(params, cache, token|embeds, length, thresh [B],
+    budget [B]) — so a single compiled program serves mixed-QoS traffic;
+    ``inputs_shape`` gains matching ``fog_thresh`` / ``fog_budget``
+    entries.  ``policy`` supplies the static knobs (confidence backend);
+    the legacy ``fog_thresh`` / ``fog_backend`` kwargs are folded into a
+    policy when none is given.
     """
     sp = SHAPES[shape]
     assert sp.kind == "decode", shape
     B, S = sp.global_batch, sp.seq_len
+    if policy is None:
+        policy = FogPolicy(threshold=fog_thresh, backend=fog_backend)
+    gate_backend = policy.backend if policy.backend is not None else "reference"
 
     params_shape = jax.eval_shape(
         lambda k: T.init_params(cfg, k, param_dtype), jax.random.key(0))
@@ -44,12 +57,27 @@ def make_serve_step(cfg: ArchConfig, mesh, shape: str, *, fog: bool = False,
 
     logit_m = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
     if fog:
-        def step(params, cache, token, length, embeds=None):
+        def step(params, cache, token, length, thresh, budget, embeds=None):
+            lane_policy = policy.replace(threshold=thresh, hop_budget=budget)
             logits, cache, hops = decode_step_fog(
-                params, cfg, token, cache, length, fog_thresh, embeds=embeds,
-                backend=fog_backend)
+                params, cfg, token, cache, length, lane_policy,
+                embeds=embeds, backend=gate_backend)
             return logits, cache, hops
         out_specs = (P(bdp, logit_m), c_specs, P(bdp))
+        inp = dict(inp)
+        inp["fog_thresh"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+        inp["fog_budget"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        knob_specs = (P(bdp), P(bdp))
+
+        if cfg.frontend:
+            def wrapped(params, cache, embeds, length, thresh, budget):
+                return step(params, cache, None, length, thresh, budget,
+                            embeds=embeds)
+            in_specs = (p_specs, c_specs, i_specs["embeds"], P(), *knob_specs)
+        else:
+            def wrapped(params, cache, token, length, thresh, budget):
+                return step(params, cache, token, length, thresh, budget)
+            in_specs = (p_specs, c_specs, i_specs["token"], P(), *knob_specs)
     else:
         def step(params, cache, token, length, embeds=None):
             logits, cache = T.decode_step(params, cfg, token, cache, length,
@@ -57,22 +85,19 @@ def make_serve_step(cfg: ArchConfig, mesh, shape: str, *, fog: bool = False,
             return logits, cache
         out_specs = (P(bdp, logit_m), c_specs)
 
-    if cfg.frontend:
-        def wrapped(params, cache, embeds, length):
-            return step(params, cache, None, length, embeds=embeds)
-        jitted = jax.jit(
-            wrapped,
-            in_shardings=compat.jit_shardings(
-                mesh, (p_specs, c_specs, i_specs["embeds"], P())),
-            out_shardings=compat.jit_shardings(mesh, out_specs))
-    else:
-        def wrapped(params, cache, token, length):
-            return step(params, cache, token, length)
-        jitted = jax.jit(
-            wrapped,
-            in_shardings=compat.jit_shardings(
-                mesh, (p_specs, c_specs, i_specs["token"], P())),
-            out_shardings=compat.jit_shardings(mesh, out_specs))
+        if cfg.frontend:
+            def wrapped(params, cache, embeds, length):
+                return step(params, cache, None, length, embeds=embeds)
+            in_specs = (p_specs, c_specs, i_specs["embeds"], P())
+        else:
+            def wrapped(params, cache, token, length):
+                return step(params, cache, token, length)
+            in_specs = (p_specs, c_specs, i_specs["token"], P())
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=compat.jit_shardings(mesh, in_specs),
+        out_shardings=compat.jit_shardings(mesh, out_specs))
     return jitted, (params_shape, cache_shape, inp)
 
 

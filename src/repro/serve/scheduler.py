@@ -6,10 +6,19 @@ each step (the standard vLLM-style slot model, minus paged KV — caches here
 are dense per-slot rings).  With FoG decode enabled, per-step grove usage
 (hops) is accumulated per request, giving the per-request energy/FLOP
 accounting that mirrors the paper's per-input hop counter.
+
+Mixed-QoS serving: every :class:`Request` may carry its own
+:class:`~repro.core.policy.FogPolicy` (threshold / hop budget).  Each step
+the scheduler assembles the slots' scalar policies into one per-lane batch
+policy (:func:`repro.core.policy.assemble`) and hands it to a policy-aware
+``decode_fn(tokens, lengths, policy)`` — one continuous batch, one compiled
+program, every lane buying its own accuracy/energy point.  Legacy two-arg
+``decode_fn(tokens, lengths)`` callables keep working unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from collections import deque
 from typing import Callable
 
@@ -18,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import HopMeter
+from repro.core.policy import FogPolicy, assemble
 
 
 @dataclasses.dataclass
@@ -25,6 +35,9 @@ class Request:
     rid: int
     prompt: np.ndarray            # [P] int32
     max_new_tokens: int = 32
+    # per-request QoS contract (scalar threshold / hop budget); None = the
+    # batcher's default policy
+    policy: FogPolicy | None = None
     # filled by the scheduler:
     generated: list = dataclasses.field(default_factory=list)
     hops: list = dataclasses.field(default_factory=list)
@@ -37,28 +50,63 @@ class SlotState:
     length: int = 0               # tokens already in this slot's cache
 
 
+def _takes_policy(decode_fn: Callable) -> bool:
+    """Does decode_fn accept a third (policy) argument?"""
+    try:
+        params = inspect.signature(decode_fn).parameters.values()
+    except (TypeError, ValueError):   # builtins / C callables: assume legacy
+        return False
+    positional = [p for p in params
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    return (len(positional) >= 3
+            or any(p.kind == p.VAR_POSITIONAL for p in params))
+
+
 class ContinuousBatcher:
     """Drives decode_fn over a fixed slot batch, refilling as lanes finish.
 
-    decode_fn(tokens [n_slots] int32, lengths [n_slots] int32)
+    decode_fn(tokens [n_slots] int32, lengths [n_slots] int32
+              [, policy: FogPolicy with per-lane [n_slots] knobs])
         -> (logits [n_slots, V], hops [n_slots] | None)
     prefill_fn(slot, prompt) -> int  (returns prompt length in cache)
+    default_policy: applied to slots whose request carries no policy (and
+        to empty lanes); its static knobs select the compiled program.
     """
 
     def __init__(self, n_slots: int, decode_fn: Callable,
                  prefill_fn: Callable, eos_id: int = 1,
-                 meter: HopMeter | None = None):
+                 meter: HopMeter | None = None,
+                 default_policy: FogPolicy | None = None):
         self.slots = [SlotState() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
         self.decode_fn = decode_fn
         self.prefill_fn = prefill_fn
         self.eos_id = eos_id
         self.completed: list[Request] = []
+        self.default_policy = (default_policy if default_policy is not None
+                               else FogPolicy())
+        if self.default_policy.per_lane:
+            raise ValueError(
+                "default_policy must carry scalar knobs; the batcher "
+                "assembles the per-lane vectors itself each step")
+        self._policy_aware = _takes_policy(decode_fn)
         # fleet-level FoG accounting: hop counts of every decoded token feed
         # the same meter the engine's energy model reads
         self.meter = meter if meter is not None else HopMeter()
 
     def submit(self, req: Request) -> None:
+        if req.policy is not None:
+            if req.policy.per_lane:
+                raise ValueError(
+                    f"request {req.rid}: per-request policies are scalar "
+                    "contracts; the batcher assembles the per-lane vectors")
+            if req.policy.static_overrides:
+                raise ValueError(
+                    f"request {req.rid}: policy sets static knobs "
+                    f"{req.policy.static_overrides} — those select the "
+                    "compiled program and cannot vary per request; set "
+                    "them on the batcher's default_policy (per-request "
+                    "knobs are threshold and hop_budget)")
         self.queue.append(req)
 
     def _refill(self) -> None:
@@ -71,6 +119,14 @@ class ContinuousBatcher:
     @property
     def active(self) -> int:
         return sum(1 for s in self.slots if s.request is not None)
+
+    def lane_policy(self) -> FogPolicy:
+        """The current batch policy: slot policies stacked into per-lane
+        threshold / hop-budget vectors (empty lanes get the default)."""
+        return assemble(
+            [s.request.policy if s.request is not None else None
+             for s in self.slots],
+            default=self.default_policy)
 
     def step(self) -> int:
         """One decode step across all active slots.  Returns #active."""
@@ -85,7 +141,13 @@ class ContinuousBatcher:
                         else s.request.prompt[-1])
                 tokens[i] = last
                 lengths[i] = s.length
-        logits, hops = self.decode_fn(jnp.asarray(tokens), jnp.asarray(lengths))
+        if self._policy_aware:
+            logits, hops = self.decode_fn(jnp.asarray(tokens),
+                                          jnp.asarray(lengths),
+                                          self.lane_policy())
+        else:
+            logits, hops = self.decode_fn(jnp.asarray(tokens),
+                                          jnp.asarray(lengths))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         hops = np.asarray(hops) if hops is not None else None
         for i, s in enumerate(self.slots):

@@ -1,0 +1,182 @@
+"""FogClassifier — a scikit-learn-style facade over the whole FoG pipeline.
+
+One object wraps forest training (Algorithm 1's GCTrain), the grove split,
+FogEngine construction, and policy-driven evaluation:
+
+    from repro.sklearn import FogClassifier
+    from repro.core import FogPolicy
+
+    clf = FogClassifier(n_trees=16, grove_size=2, max_depth=8)
+    clf.fit(X_train, y_train)
+    labels = clf.predict(X_test)                       # default policy
+    cheap = clf.predict(X_test, policy=FogPolicy(threshold=0.1))
+    print(clf.profile())    # mean hops + nJ/classification accounting
+
+The estimator follows sklearn conventions — ``fit`` returns ``self``,
+fitted attributes carry a trailing underscore, ``get_params`` /
+``set_params`` support grid searches — without importing sklearn (the
+container may not have it).  Every runtime knob goes through
+:class:`~repro.core.policy.FogPolicy`: the constructor's ``policy`` is the
+default, and each ``predict`` / ``predict_proba`` / ``score`` call accepts a
+per-call override (including per-lane threshold vectors and hop budgets).
+
+``profile()`` exposes the paper's energy story for everything classified so
+far: per-input hop counts are recorded at each evaluation and the energies
+come from :func:`~repro.core.energy.fog_energy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import fog_energy
+from repro.core.engine import FogEngine, FogResult
+from repro.core.grove import split
+from repro.core.policy import FogPolicy
+from repro.forest.train import TrainConfig, train_random_forest
+
+_PARAMS = ("n_trees", "grove_size", "max_depth", "policy", "backend", "seed",
+           "train_cfg")
+
+
+class FogClassifier:
+    """Energy-efficient random-forest classifier (Field of Groves).
+
+    Parameters
+    ----------
+    n_trees:    forest size n (Algorithm 1 line 2)
+    grove_size: trees per grove k (the Split factor); n % k must be 0
+    max_depth:  tree depth cap for training
+    policy:     default :class:`FogPolicy` for prediction calls
+    backend:    default engine backend ("reference" | "pallas")
+    seed:       training seed, and the fixed start-grove draw for predict
+                (fixed so repeated predictions are deterministic)
+    train_cfg:  optional full :class:`TrainConfig`; n_trees/max_depth/seed
+                above override its corresponding fields
+    """
+
+    def __init__(self, n_trees: int = 16, grove_size: int = 2,
+                 max_depth: int = 8, *, policy: FogPolicy | None = None,
+                 backend: str = "reference", seed: int = 0,
+                 train_cfg: TrainConfig | None = None):
+        self.n_trees = n_trees
+        self.grove_size = grove_size
+        self.max_depth = max_depth
+        self.policy = policy if policy is not None else FogPolicy()
+        self.backend = backend
+        self.seed = seed
+        self.train_cfg = train_cfg
+
+    # -- sklearn param protocol ------------------------------------------
+    def get_params(self, deep: bool = True) -> dict:
+        return {k: getattr(self, k) for k in _PARAMS}
+
+    def set_params(self, **params) -> "FogClassifier":
+        for k, v in params.items():
+            if k not in _PARAMS:
+                raise ValueError(f"unknown parameter {k!r}; "
+                                 f"valid: {_PARAMS}")
+            setattr(self, k, v)
+        return self
+
+    # -- estimator API ----------------------------------------------------
+    def fit(self, X, y, n_classes: int | None = None) -> "FogClassifier":
+        """GCTrain(n, k, X, y): train the forest, split it into groves,
+        build the engine."""
+        if self.n_trees % self.grove_size:
+            raise ValueError(
+                f"n_trees={self.n_trees} must be divisible by "
+                f"grove_size={self.grove_size}")
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.int32)
+        if n_classes is None:
+            n_classes = int(y.max()) + 1
+        cfg = self.train_cfg if self.train_cfg is not None else TrainConfig()
+        cfg = dataclasses.replace(cfg, n_trees=self.n_trees,
+                                  max_depth=self.max_depth, seed=self.seed)
+        self.forest_ = train_random_forest(X, y, n_classes, cfg)
+        self.gc_ = split(self.forest_, self.grove_size)
+        self.engine_ = FogEngine(self.gc_, backend=self.backend,
+                                 policy=self.policy)
+        self.n_classes_ = n_classes
+        self.n_features_in_ = X.shape[1]
+        self._hops: list[np.ndarray] = []
+        return self
+
+    def _check_fitted(self) -> None:
+        if not hasattr(self, "engine_"):
+            raise RuntimeError("FogClassifier is not fitted; call fit(X, y)")
+
+    def evaluate(self, X, *, policy: FogPolicy | None = None,
+                 key: jax.Array | None = None) -> FogResult:
+        """Full Algorithm-2 evaluation: the FogResult (proba/label/hops).
+
+        Start groves are drawn from ``key`` (default: a fixed seed-derived
+        key, so repeated calls are deterministic).  Hop counts feed the
+        profile accounting.
+        """
+        self._check_fitted()
+        if key is None:
+            key = jax.random.key(self.seed)
+        res = self.engine_.eval(jnp.asarray(X, jnp.float32), key,
+                                policy=policy)
+        self._hops.append(np.asarray(res.hops))
+        return res
+
+    def predict(self, X, *, policy: FogPolicy | None = None,
+                key: jax.Array | None = None) -> np.ndarray:
+        """Predicted labels [B]."""
+        return np.asarray(self.evaluate(X, policy=policy, key=key).label)
+
+    def predict_proba(self, X, *, policy: FogPolicy | None = None,
+                      key: jax.Array | None = None) -> np.ndarray:
+        """Hop-normalized class probabilities [B, C]."""
+        return np.asarray(self.evaluate(X, policy=policy, key=key).proba)
+
+    def score(self, X, y, *, policy: FogPolicy | None = None,
+              key: jax.Array | None = None) -> float:
+        """Mean accuracy on (X, y) under the given (or default) policy."""
+        return float(np.mean(self.predict(X, policy=policy, key=key)
+                             == np.asarray(y)))
+
+    # -- the paper's energy story -----------------------------------------
+    def profile(self) -> dict:
+        """Hop/energy accounting over everything classified since fit.
+
+        Returns mean hops per input, the modeled energy per classification
+        (nJ, from :func:`fog_energy`'s per-op 40/45nm accounting), totals,
+        and the hop histogram — the per-input adaptive-energy distribution
+        that is the paper's whole point.
+        """
+        self._check_fitted()
+        if not self._hops:
+            return {"n_classified": 0, "mean_hops": 0.0,
+                    "energy_nj_per_classification": 0.0,
+                    "total_energy_nj": 0.0, "hops_histogram": {}}
+        hops = np.concatenate(self._hops)
+        rep = fog_energy(hops, self.gc_.grove_size, self.gc_.depth,
+                         self.gc_.n_classes, self.n_features_in_)
+        vals, counts = np.unique(hops, return_counts=True)
+        return {
+            "n_classified": int(hops.size),
+            "mean_hops": float(hops.mean()),
+            "energy_nj_per_classification": rep.per_example_nj,
+            "total_energy_nj": rep.total_pj * 1e-3,
+            "hops_histogram": {int(v): int(c) for v, c in zip(vals, counts)},
+        }
+
+    def reset_profile(self) -> None:
+        """Clear the hop/energy accounting."""
+        self._check_fitted()
+        self._hops.clear()
+
+    # -- repr --------------------------------------------------------------
+    def __repr__(self) -> str:
+        fitted = f", fitted {self.gc_.n_groves}x{self.gc_.grove_size}" \
+            if hasattr(self, "gc_") else ""
+        return (f"FogClassifier(n_trees={self.n_trees}, "
+                f"grove_size={self.grove_size}, max_depth={self.max_depth}, "
+                f"backend={self.backend!r}{fitted})")

@@ -12,8 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (FogEngine, fog_eval, fog_eval_lazy,
-                        fog_eval_multioutput, split)
+from repro.core import (NO_BUDGET, FogEngine, FogPolicy, fog_eval,
+                        fog_eval_lazy, fog_eval_multioutput, split)
 
 
 THRESHES = [0.1, 0.3, 1.1]
@@ -121,3 +121,165 @@ def test_engine_rejects_bad_config(gc):
     mesh = jax.make_mesh((1,), ("grove",))
     with pytest.raises(NotImplementedError):
         FogEngine((gc, gc), backend="ring", mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# FogPolicy: per-lane thresholds and hop budgets — the runtime-knob contract
+# ---------------------------------------------------------------------------
+
+def _engine_for(gc, backend):
+    if backend == "ring":
+        return FogEngine(gc, backend="ring",
+                         mesh=jax.make_mesh((1,), ("grove",)))
+    return FogEngine(gc, backend=backend, block_b=64)
+
+
+@pytest.fixture(scope="module")
+def x256(trained):
+    ds, _ = trained
+    return jnp.asarray(ds.x_test[:256])
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas", "ring"])
+def test_per_lane_threshold_matches_scalar_evals(gc, x256, backend):
+    """The acceptance contract: a batch under [t_lo]*B/2 + [t_hi]*B/2 must
+    reproduce, per lane, the labels AND hop counts of two scalar-threshold
+    evaluations at t_lo and t_hi (same key -> same start groves)."""
+    key = jax.random.key(7)
+    B = x256.shape[0]
+    t_lo, t_hi = 0.1, 0.6
+    tvec = jnp.concatenate([jnp.full((B // 2,), t_lo),
+                            jnp.full((B - B // 2,), t_hi)])
+    eng = _engine_for(gc, backend)
+    mixed = eng.eval(x256, key, policy=FogPolicy(threshold=tvec,
+                                                 max_hops=gc.n_groves))
+    lo = eng.eval(x256, key, policy=FogPolicy(threshold=t_lo,
+                                              max_hops=gc.n_groves))
+    hi = eng.eval(x256, key, policy=FogPolicy(threshold=t_hi,
+                                              max_hops=gc.n_groves))
+    h = B // 2
+    np.testing.assert_array_equal(np.asarray(mixed.hops[:h]),
+                                  np.asarray(lo.hops[:h]))
+    np.testing.assert_array_equal(np.asarray(mixed.hops[h:]),
+                                  np.asarray(hi.hops[h:]))
+    np.testing.assert_array_equal(np.asarray(mixed.label[:h]),
+                                  np.asarray(lo.label[:h]))
+    np.testing.assert_array_equal(np.asarray(mixed.label[h:]),
+                                  np.asarray(hi.label[h:]))
+
+
+def test_per_lane_threshold_backend_conformance(gc, x256):
+    """reference vs pallas vs ring under one per-lane policy: bit-identical
+    labels + hops (the energy quantity is backend-invariant even per-QoS)."""
+    key = jax.random.key(13)
+    B = x256.shape[0]
+    rng = np.random.default_rng(5)
+    tvec = jnp.asarray(rng.choice([0.05, 0.2, 0.5, 0.9], size=B), jnp.float32)
+    pol = FogPolicy(threshold=tvec, max_hops=gc.n_groves)
+    want = _engine_for(gc, "reference").eval(x256, key, policy=pol)
+    for backend in ["pallas", "ring"]:
+        res = _engine_for(gc, backend).eval(x256, key, policy=pol)
+        _assert_conforms(res, want)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas", "ring"])
+def test_per_lane_hop_budget(gc, x256, backend):
+    """A lane's hop count never exceeds its budget, unbudgeted lanes run to
+    the max_hops cap at thresh>1, and budgets are backend-conformant."""
+    key = jax.random.key(3)
+    B = x256.shape[0]
+    bvec = jnp.asarray(np.tile([1, 3, NO_BUDGET, 5], B // 4), jnp.int32)
+    pol = FogPolicy(threshold=1.1, max_hops=gc.n_groves, hop_budget=bvec)
+    res = _engine_for(gc, backend).eval(x256, key, policy=pol)
+    hops = np.asarray(res.hops)
+    cap = np.minimum(np.asarray(bvec, np.int64), gc.n_groves)
+    np.testing.assert_array_equal(hops, cap)   # thresh>1: budget binds exactly
+    want = _engine_for(gc, "reference").eval(x256, key, policy=pol)
+    _assert_conforms(res, want)
+
+
+def test_budget_with_confidence_gate_backend_conformance(gc, x256):
+    """Budget AND confidence gates active at once: whichever fires first
+    kills the lane; all backends must agree bit-for-bit."""
+    key = jax.random.key(11)
+    B = x256.shape[0]
+    bvec = jnp.where(jnp.arange(B) % 2 == 0, 2, NO_BUDGET).astype(jnp.int32)
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves, hop_budget=bvec)
+    want = _engine_for(gc, "reference").eval(x256, key, policy=pol)
+    assert (np.asarray(want.hops)[::2] <= 2).all()
+    unbudgeted = _engine_for(gc, "reference").eval(
+        x256, key, policy=FogPolicy(threshold=0.3, max_hops=gc.n_groves))
+    # odd lanes carry no budget -> identical to the unbudgeted run
+    np.testing.assert_array_equal(np.asarray(want.hops)[1::2],
+                                  np.asarray(unbudgeted.hops)[1::2])
+    for backend in ["pallas", "ring"]:
+        res = _engine_for(gc, backend).eval(x256, key, policy=pol)
+        _assert_conforms(res, want)
+
+
+@pytest.mark.parametrize("chunk_b", [64, 100])
+def test_chunked_per_lane_policy_tail_padding(gc, x257, chunk_b):
+    """B=257 is prime: the tail chunk is dead-padded and the per-lane
+    threshold/budget vectors must be padded alongside x — results must be
+    bit-identical to the unchunked whole-batch evaluation."""
+    key = jax.random.key(9)
+    B = x257.shape[0]
+    tvec = jnp.where(jnp.arange(B) < B // 2, 0.1, 0.6)
+    bvec = jnp.where(jnp.arange(B) % 3 == 0, 2, NO_BUDGET).astype(jnp.int32)
+    pol = FogPolicy(threshold=tvec, max_hops=gc.n_groves, hop_budget=bvec)
+    want = FogEngine(gc).eval(x257, key, policy=pol)
+    for backend in ["reference", "pallas"]:
+        res = FogEngine(gc, backend=backend, chunk_b=chunk_b,
+                        block_b=32).eval(x257, key, policy=pol)
+        _assert_conforms(res, want)
+
+
+def test_multioutput_per_lane_policy(trained, rf8_penbased,
+                                     rf8_noisy_penbased):
+    """Per-lane thresholds compose with the min-over-outputs rule."""
+    ds, _ = trained
+    gcs = (split(rf8_penbased, 2), split(rf8_noisy_penbased, 2))
+    x = jnp.asarray(ds.x_test[:128])
+    key = jax.random.key(17)
+    tvec = jnp.where(jnp.arange(128) < 64, 0.1, 0.5)
+    pol = FogPolicy(threshold=tvec, max_hops=4)
+    want = FogEngine(gcs).eval(x, key, policy=pol)
+    res = FogEngine(gcs, backend="pallas", block_b=64).eval(x, key,
+                                                            policy=pol)
+    _assert_conforms(res, want)
+    lo = FogEngine(gcs).eval(x, key, policy=FogPolicy(threshold=0.1,
+                                                      max_hops=4))
+    np.testing.assert_array_equal(np.asarray(want.hops[:64]),
+                                  np.asarray(lo.hops[:64]))
+
+
+def test_deprecated_positional_eval_warns_and_matches(gc, x256):
+    key = jax.random.key(1)
+    eng = FogEngine(gc)
+    with pytest.warns(DeprecationWarning):
+        legacy = eng.eval(x256, key, 0.3, max_hops=gc.n_groves)
+    res = eng.eval(x256, key, policy=FogPolicy(threshold=0.3,
+                                               max_hops=gc.n_groves))
+    _assert_conforms(res, legacy, exact_proba=True)
+
+
+def test_policy_and_positional_args_conflict(gc, x256):
+    with pytest.raises(TypeError):
+        FogEngine(gc).eval(x256, jax.random.key(0), 0.3,
+                           policy=FogPolicy())
+    with pytest.raises(TypeError):
+        FogEngine(gc).eval(x256, jax.random.key(0), FogPolicy(),
+                           policy=FogPolicy())
+
+
+def test_positional_policy_is_canonical(gc, x256):
+    """eval(x, key, FogPolicy(...)) — the decode_step_fog calling style —
+    must work, warning-free, identical to the keyword form."""
+    import warnings as _w
+    key = jax.random.key(5)
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves)
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        res = FogEngine(gc).eval(x256, key, pol)
+    want = FogEngine(gc).eval(x256, key, policy=pol)
+    _assert_conforms(res, want, exact_proba=True)

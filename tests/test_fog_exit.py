@@ -61,6 +61,26 @@ def test_fog_exit_hops_monotone_in_threshold(setup):
     assert means == sorted(means), means
 
 
+def test_fog_exit_gates_on_policy(setup):
+    """decode_step_fog accepts a FogPolicy: per-lane thresholds must match
+    the corresponding scalar-threshold runs, and hop budgets cap groves."""
+    from repro.core import FogPolicy
+    cfg, params, tokens, cache, S = setup
+    tok = tokens[:, -1]
+    tvec = jnp.asarray([0.0, 2.0], jnp.float32)     # lane 0 exits, lane 1 runs
+    _, _, hops = decode_step_fog(params, cfg, tok, cache, jnp.int32(S),
+                                 FogPolicy(threshold=tvec))
+    _, _, hops_lo = decode_step_fog(params, cfg, tok, cache, jnp.int32(S), 0.0)
+    _, _, hops_hi = decode_step_fog(params, cfg, tok, cache, jnp.int32(S), 2.0)
+    assert int(hops[0]) == int(hops_lo[0])
+    assert int(hops[1]) == int(hops_hi[1])
+    # per-lane budget: the unconfident lane is capped at 2 groves
+    _, _, hops_b = decode_step_fog(
+        params, cfg, tok, cache, jnp.int32(S),
+        FogPolicy(threshold=2.0, hop_budget=jnp.asarray([2, 4])))
+    np.testing.assert_array_equal(np.asarray(hops_b), [2, 4])
+
+
 def test_fog_exit_kv_propagation_keeps_decoding_sane(setup):
     """After an early-exit step, later full steps must still work (the
     skipped groves' caches were filled from the propagated state)."""

@@ -46,15 +46,30 @@ RING_SCRIPT = textwrap.dedent("""
     # max_hops NOT a multiple of n_shards: lane state ends mid-ring and must
     # be rotated back to its home shard; per-lane hops/proba must equal the
     # reference engine run with identical start groves
+    from repro.core.policy import NO_BUDGET
     from repro.core.engine import _eval_core, sample_starts
     from repro.core.fog_ring import ring_eval
     start = sample_starts(jax.random.key(0), 512, 8, 8)
+    no_budget = jnp.full((512,), NO_BUDGET, jnp.int32)
     pr, hr = ring_eval(gc, x, start, 0.3, 5, mesh)
-    want = _eval_core((gc,), x, start, jnp.float32(0.3), 5, "reference",
-                      256, False)
+    want = _eval_core((gc,), x, start, jnp.float32(0.3), no_budget, 5,
+                      "reference", 256, False)
     np.testing.assert_array_equal(np.asarray(hr), np.asarray(want.hops))
     np.testing.assert_allclose(np.asarray(pr), np.asarray(want.proba),
                                rtol=1e-6, atol=1e-7)
+
+    # per-lane thresholds + hop budgets rotate WITH the queue entries over
+    # the multi-device ring: results must match the batched reference with
+    # the same per-lane policy
+    tvec = jnp.where(jnp.arange(512) < 256, 0.05, 0.6)
+    bvec = jnp.where(jnp.arange(512) % 2 == 0, 2, NO_BUDGET).astype(jnp.int32)
+    pr2, hr2 = ring_eval(gc, x, start, tvec, 8, mesh, hop_budget=bvec)
+    want2 = _eval_core((gc,), x, start, tvec, bvec, 8, "reference",
+                       256, False)
+    np.testing.assert_array_equal(np.asarray(hr2), np.asarray(want2.hops))
+    np.testing.assert_allclose(np.asarray(pr2), np.asarray(want2.proba),
+                               rtol=1e-6, atol=1e-7)
+    assert (np.asarray(hr2)[::2] <= 2).all()
     print("RING-OK", acc, m_ring, m_batch)
 """)
 

@@ -1,0 +1,109 @@
+"""FogPolicy: the runtime-knob contract (core/policy.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NO_BUDGET, FogPolicy, assemble, fog_eval, split
+from repro.core.policy import BACKENDS
+
+
+def test_defaults_and_replace():
+    p = FogPolicy()
+    assert p.threshold == 0.3 and p.max_hops is None
+    assert p.hop_budget is None and p.backend is None
+    q = p.replace(threshold=0.1, backend="pallas")
+    assert q.threshold == 0.1 and q.backend == "pallas"
+    assert p.threshold == 0.3                      # frozen: original intact
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.threshold = 0.5
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        FogPolicy(backend="asic")
+    with pytest.raises(ValueError):
+        FogPolicy(max_hops=0)
+    with pytest.raises(ValueError):
+        FogPolicy(chunk_b=0)
+    # the first hop is always spent: a budget below 1 is unsatisfiable
+    with pytest.raises(ValueError):
+        FogPolicy(hop_budget=0)
+    with pytest.raises(ValueError):
+        FogPolicy(hop_budget=jnp.asarray([2, 0]))
+    FogPolicy(hop_budget=1)
+    for b in BACKENDS:
+        FogPolicy(backend=b)                       # all real backends OK
+
+
+def test_lane_vectors_broadcast_and_check():
+    p = FogPolicy(threshold=0.2, hop_budget=3)
+    np.testing.assert_allclose(np.asarray(p.lane_thresholds(4)), [0.2] * 4)
+    np.testing.assert_array_equal(np.asarray(p.lane_budgets(4)), [3] * 4)
+    q = FogPolicy(threshold=jnp.asarray([0.1, 0.2]))
+    np.testing.assert_allclose(np.asarray(q.lane_thresholds(2)), [0.1, 0.2])
+    with pytest.raises(ValueError):
+        q.lane_thresholds(3)                       # wrong batch size
+    # no budget -> NO_BUDGET sentinel (never binds under any max_hops)
+    np.testing.assert_array_equal(np.asarray(FogPolicy().lane_budgets(2)),
+                                  [NO_BUDGET] * 2)
+
+
+def test_per_lane_property():
+    assert not FogPolicy().per_lane
+    assert FogPolicy(threshold=jnp.asarray([0.1, 0.2])).per_lane
+    assert FogPolicy(hop_budget=jnp.asarray([1, 2])).per_lane
+
+
+def test_policy_is_a_pytree():
+    """threshold/hop_budget are data (traceable); the rest is static."""
+    p = FogPolicy(threshold=jnp.asarray([0.1, 0.2]), hop_budget=3,
+                  max_hops=8, backend="pallas")
+    leaves, treedef = jax.tree.flatten(p)
+    assert len(leaves) == 2                        # threshold + hop_budget
+    p2 = jax.tree.unflatten(treedef, leaves)
+    assert p2.backend == "pallas" and p2.max_hops == 8
+
+    @jax.jit
+    def thresh_sum(pol):
+        return pol.lane_thresholds(2).sum()
+
+    np.testing.assert_allclose(float(thresh_sum(p)), 0.3, atol=1e-6)
+
+
+def test_assemble_mixed_requests():
+    """Scheduler contract: per-slot scalar policies -> one per-lane policy."""
+    default = FogPolicy(threshold=0.3, backend="pallas")
+    lanes = assemble([FogPolicy(threshold=0.1),
+                      None,                         # empty/defaulted slot
+                      FogPolicy(threshold=0.9, hop_budget=2)],
+                     default=default)
+    np.testing.assert_allclose(np.asarray(lanes.threshold), [0.1, 0.3, 0.9])
+    np.testing.assert_array_equal(np.asarray(lanes.hop_budget),
+                                  [NO_BUDGET, NO_BUDGET, 2])
+    assert lanes.backend == "pallas"               # static knobs from default
+
+
+def test_assemble_no_budgets_stays_none():
+    lanes = assemble([FogPolicy(threshold=0.1), None])
+    assert lanes.hop_budget is None
+
+
+def test_fog_eval_shims_warn(trained):
+    ds, rf = trained
+    gc = split(rf, 2)
+    x = jnp.asarray(ds.x_test[:16])
+    with pytest.warns(DeprecationWarning, match="fog_eval is deprecated"):
+        fog_eval(gc, x, jax.random.key(0), 0.3, 4)
+
+
+def test_fog_ring_eval_shim_warns(trained):
+    ds, rf = trained
+    gc = split(rf, 2)
+    from repro.core.fog_ring import fog_ring_eval
+    mesh = jax.make_mesh((1,), ("grove",))
+    x = jnp.asarray(ds.x_test[:16])
+    with pytest.warns(DeprecationWarning, match="fog_ring_eval"):
+        fog_ring_eval(gc, x, jax.random.key(0), 0.3, 4, mesh)

@@ -1,7 +1,9 @@
 """Continuous-batching scheduler (serve/scheduler.py)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core import NO_BUDGET, FogPolicy
 from repro.serve.scheduler import ContinuousBatcher, Request
 
 
@@ -65,3 +67,113 @@ def test_hops_metering_accumulates():
     done = batcher.run()
     assert len(done[0].hops) == 4
     assert all(h >= 1 for h in done[0].hops)
+
+
+def test_hop_meter_reset():
+    n = 2
+    batcher = ContinuousBatcher(n, _mock_decode(n),
+                                lambda slot, prompt: len(prompt), eos_id=-1)
+    batcher.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=3))
+    batcher.run()
+    assert batcher.meter.n_events == 3
+    batcher.meter.reset()
+    assert batcher.meter.n_events == 0 and batcher.meter.total_hops == 0
+    assert batcher.meter.mean_hops == 0.0
+
+
+def _mock_policy_decode(n_slots, vocab=16):
+    """Policy-aware mock: hops = each lane's threshold * 10 (so tests can
+    read back exactly which per-lane vector the batcher assembled)."""
+    seen = []
+
+    def decode_fn(tokens, lengths, policy):
+        assert isinstance(policy, FogPolicy)
+        seen.append((np.asarray(policy.lane_thresholds(n_slots)),
+                     np.asarray(policy.lane_budgets(n_slots))))
+        nxt = (np.asarray(tokens) + 1) % vocab
+        logits = np.zeros((n_slots, vocab), np.float32)
+        logits[np.arange(n_slots), nxt] = 1.0
+        hops = np.round(seen[-1][0] * 10).astype(np.int32)
+        return jnp.asarray(logits), jnp.asarray(hops)
+
+    return decode_fn, seen
+
+
+def test_mixed_qos_per_request_policies():
+    """Two QoS tiers in ONE continuous batch: the batcher must assemble the
+    slots' scalar policies into per-lane vectors every step, and each
+    request's hop accounting must reflect ITS OWN threshold."""
+    n = 2
+    decode_fn, seen = _mock_policy_decode(n)
+    batcher = ContinuousBatcher(
+        n, decode_fn, lambda slot, prompt: len(prompt), eos_id=-1,
+        default_policy=FogPolicy(threshold=0.3))
+    batcher.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=3,
+                           policy=FogPolicy(threshold=0.1)))
+    batcher.submit(Request(rid=1, prompt=np.asarray([0]), max_new_tokens=3,
+                           policy=FogPolicy(threshold=0.9, hop_budget=2)))
+    done = batcher.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].hops == [1, 1, 1]            # thresh 0.1 -> mock hops 1
+    assert by_rid[1].hops == [9, 9, 9]            # thresh 0.9 -> mock hops 9
+    thr0, bud0 = seen[0]
+    np.testing.assert_allclose(thr0, [0.1, 0.9])
+    np.testing.assert_array_equal(bud0, [NO_BUDGET, 2])
+
+
+def test_empty_slots_get_default_policy():
+    n = 3
+    decode_fn, seen = _mock_policy_decode(n)
+    batcher = ContinuousBatcher(
+        n, decode_fn, lambda slot, prompt: len(prompt), eos_id=-1,
+        default_policy=FogPolicy(threshold=0.5))
+    batcher.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=1))
+    batcher.run()
+    thr, _ = seen[0]
+    np.testing.assert_allclose(thr, [0.5, 0.5, 0.5])  # req slot + 2 empty
+
+
+def test_per_lane_request_policy_rejected():
+    n = 2
+    decode_fn, _ = _mock_policy_decode(n)
+    batcher = ContinuousBatcher(n, decode_fn,
+                                lambda slot, prompt: len(prompt))
+    with pytest.raises(ValueError):
+        batcher.submit(Request(
+            rid=0, prompt=np.asarray([0]),
+            policy=FogPolicy(threshold=jnp.asarray([0.1, 0.2]))))
+
+
+def test_static_knobs_on_request_policy_rejected():
+    """max_hops/backend/... select the compiled program — they cannot vary
+    per request and must be rejected loudly, not silently dropped."""
+    n = 2
+    decode_fn, _ = _mock_policy_decode(n)
+    batcher = ContinuousBatcher(n, decode_fn,
+                                lambda slot, prompt: len(prompt))
+    with pytest.raises(ValueError, match="static knobs"):
+        batcher.submit(Request(rid=0, prompt=np.asarray([0]),
+                               policy=FogPolicy(threshold=0.1, max_hops=2)))
+    with pytest.raises(ValueError, match="static knobs"):
+        batcher.submit(Request(rid=1, prompt=np.asarray([0]),
+                               policy=FogPolicy(backend="pallas")))
+
+
+def test_per_lane_default_policy_rejected_at_construction():
+    n = 2
+    decode_fn, _ = _mock_policy_decode(n)
+    with pytest.raises(ValueError):
+        ContinuousBatcher(n, decode_fn, lambda slot, prompt: len(prompt),
+                          default_policy=FogPolicy(
+                              threshold=jnp.asarray([0.1, 0.2])))
+
+
+def test_legacy_two_arg_decode_fn_still_works():
+    """decode_fn(tokens, lengths) callers predate the policy plumbing."""
+    n = 2
+    batcher = ContinuousBatcher(n, _mock_decode(n),
+                                lambda slot, prompt: len(prompt), eos_id=-1)
+    assert not batcher._policy_aware
+    batcher.submit(Request(rid=0, prompt=np.asarray([2]), max_new_tokens=2))
+    done = batcher.run()
+    assert len(done) == 1 and len(done[0].generated) == 2

@@ -1,0 +1,89 @@
+"""FogClassifier facade (repro/sklearn.py): fit/predict round trip, policy
+overrides, and the profile() energy accounting."""
+import numpy as np
+import pytest
+
+from repro.core import FogPolicy
+from repro.sklearn import FogClassifier
+
+
+@pytest.fixture(scope="module")
+def fitted(ds_penbased):
+    ds = ds_penbased
+    clf = FogClassifier(n_trees=16, grove_size=2, max_depth=6, seed=1)
+    return ds, clf.fit(ds.x_train, ds.y_train)
+
+
+def test_fit_predict_round_trip(fitted):
+    """The acceptance contract: fit(X, y).predict(X) round-trips on the
+    quickstart dataset and profile() reports mean hops + nJ/classification."""
+    ds, clf = fitted
+    labels = clf.predict(ds.x_test)
+    assert labels.shape == (len(ds.y_test),)
+    acc = float((labels == ds.y_test).mean())
+    assert acc > 0.85, acc
+    prof = clf.profile()
+    assert prof["n_classified"] == len(ds.y_test)
+    assert prof["mean_hops"] >= 1.0
+    assert prof["energy_nj_per_classification"] > 0.0
+    assert sum(prof["hops_histogram"].values()) == prof["n_classified"]
+
+
+def test_predict_proba_and_score(fitted):
+    ds, clf = fitted
+    proba = clf.predict_proba(ds.x_test[:64])
+    assert proba.shape == (64, ds.n_classes)
+    np.testing.assert_allclose(proba.sum(axis=-1), 1.0, rtol=1e-5)
+    assert clf.score(ds.x_test, ds.y_test) > 0.85
+
+
+def test_predict_is_deterministic(fitted):
+    ds, clf = fitted
+    a = clf.predict(ds.x_test[:128])
+    b = clf.predict(ds.x_test[:128])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_policy_override_trades_energy(fitted):
+    """A cheaper per-call policy must lower hops (the paper's Fig-5 knob),
+    without retraining or rebuilding anything."""
+    ds, clf = fitted
+    clf.reset_profile()
+    clf.predict(ds.x_test, policy=FogPolicy(threshold=0.05))
+    cheap = clf.profile()["mean_hops"]
+    clf.reset_profile()
+    clf.predict(ds.x_test, policy=FogPolicy(threshold=0.9))
+    rich = clf.profile()["mean_hops"]
+    assert cheap < rich
+
+
+def test_hop_budget_policy_caps_energy(fitted):
+    ds, clf = fitted
+    clf.reset_profile()
+    clf.predict(ds.x_test, policy=FogPolicy(threshold=1.1, hop_budget=2))
+    prof = clf.profile()
+    assert prof["mean_hops"] == 2.0               # budget binds every lane
+    assert set(prof["hops_histogram"]) == {2}
+
+
+def test_reset_profile(fitted):
+    ds, clf = fitted
+    clf.predict(ds.x_test[:32])
+    assert clf.profile()["n_classified"] > 0
+    clf.reset_profile()
+    assert clf.profile()["n_classified"] == 0
+
+
+def test_param_protocol_and_errors(ds_penbased):
+    clf = FogClassifier(n_trees=8, grove_size=4)
+    params = clf.get_params()
+    assert params["n_trees"] == 8 and params["grove_size"] == 4
+    clf.set_params(n_trees=16)
+    assert clf.n_trees == 16
+    with pytest.raises(ValueError):
+        clf.set_params(bogus=1)
+    with pytest.raises(RuntimeError):
+        clf.predict(ds_penbased.x_test)            # not fitted
+    with pytest.raises(ValueError):
+        FogClassifier(n_trees=5, grove_size=2).fit(
+            ds_penbased.x_train, ds_penbased.y_train)  # 5 % 2 != 0
