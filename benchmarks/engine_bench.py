@@ -8,6 +8,15 @@ future PR has a perf trajectory for the unified hot path.  Backends:
   reference-lazy   early-exit while_loop
   pallas           fused hop-update kernel (interpreted on CPU, Mosaic on TPU)
   pallas-chunked   same, batch evaluated in chunk_b slices (VMEM-bounded)
+  fused            ENTIRE Algorithm-2 loop in ONE Pallas launch (all grove
+                   tables VMEM-pinned, early-exit while_loop in-kernel)
+  fused-chunked    same, one launch per chunk_b slice
+
+The record's ``kernel_launches`` field is the analytic per-eval Pallas
+dispatch count: the per-hop pallas backend pays one ``grove_aggregate``
+launch per hop (``max_hops`` worst case, with the [B, C] state making an
+HBM round trip each time); the fused backend pays exactly ONE launch (one
+per chunk when chunked) — the paper's keep-the-walk-on-chip story.
 
 The ring backend is timed separately in fog_ring_bench (needs forced
 multi-device XLA in a subprocess).
@@ -55,10 +64,21 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
         "reference-lazy": FogEngine(gc, lazy=True),
         "pallas": FogEngine(gc, backend="pallas"),
         "pallas-chunked": FogEngine(gc, backend="pallas", chunk_b=256),
+        "fused": FogEngine(gc, backend="fused"),
+        "fused-chunked": FogEngine(gc, backend="fused", chunk_b=256),
     }
-    rows, record = [], {"bench": "engine_backends", "B": int(x.shape[0]),
+    B = int(x.shape[0])
+    n_chunks = -(-B // 256)
+    # analytic Pallas dispatches per evaluation (worst case, lazy aside)
+    launches = {
+        "reference": 0, "reference-lazy": 0,
+        "pallas": gc.n_groves, "pallas-chunked": gc.n_groves * n_chunks,
+        "fused": 1, "fused-chunked": n_chunks,
+    }
+    rows, record = [], {"bench": "engine_backends", "B": B,
                         "n_groves": gc.n_groves, "thresh": thresh,
-                        "backend_us": {}, "mean_hops": {}, "acc": {}}
+                        "backend_us": {}, "mean_hops": {}, "acc": {},
+                        "kernel_launches": launches}
     base_hops = None
     for name, eng in engines.items():
         dt, res = _time_engine(eng, x, key, policy)
@@ -73,7 +93,8 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
         record["mean_hops"][name] = float(hops.mean())
         record["acc"][name] = acc
         rows.append(f"CSV,engine,backend={name},us={dt * 1e6:.0f},"
-                    f"acc={acc:.4f},mean_hops={hops.mean():.2f}")
+                    f"acc={acc:.4f},mean_hops={hops.mean():.2f},"
+                    f"launches={launches[name]}")
     if out_path is not None:
         Path(out_path).write_text(json.dumps(record, indent=2) + "\n")
         rows.append(f"CSV,engine,wrote={out_path}")

@@ -27,10 +27,12 @@ print(f"conventional RF : acc={rf_acc:.3f}  energy={rf_energy:.2f} nJ/example")
 gc = split(rf, 2)
 
 # 4. one engine owns Algorithm 2; the hop update is a pluggable backend —
-#    "reference" (pure jnp), "pallas" (fused VMEM kernel), or "ring"
-#    (shard_map mesh; see examples/fog_ring_demo.py).  All backends return
-#    identical labels and hop counts.
-engine = FogEngine(gc, backend="pallas")
+#    "reference" (pure jnp), "pallas" (fused hop-update kernel, one launch
+#    per hop), "fused" (the ENTIRE early-exit loop in one VMEM-resident
+#    Pallas launch — the paper's PE on a TPU), or "ring" (shard_map mesh;
+#    see examples/fog_ring_demo.py).  All backends return identical labels
+#    and hop counts.
+engine = FogEngine(gc, backend="fused")
 
 # 5. evaluate with Algorithm 2: random start grove, MaxDiff confidence,
 #    hop to the next grove while confidence < threshold.  Every runtime

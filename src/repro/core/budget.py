@@ -52,18 +52,21 @@ def _as_policy(policy) -> FogPolicy:
 def evaluate_topology(forest: TensorForest, grove_size: int,
                       x_val: np.ndarray, y_val: np.ndarray,
                       policy: FogPolicy | float, max_hops: int | None = None,
-                      seed: int = 0) -> TopologyPoint:
+                      seed: int = 0, backend: str = "reference",
+                      ) -> TopologyPoint:
     """Accuracy / energy / EDP of one (topology, policy) design point.
 
     ``policy`` is the runtime-knob contract; a bare float is accepted as a
     scalar threshold for backward compatibility (``max_hops`` then caps the
-    loop as before).
+    loop as before).  ``backend`` picks the engine backend the sweep runs
+    on ("fused" makes wide sweeps one kernel launch per point); a policy's
+    own ``backend`` knob still wins when set.
     """
     pol = _as_policy(policy)
     if max_hops is not None and pol.max_hops is None:
         pol = pol.replace(max_hops=max_hops)
     gc = split(forest, grove_size)
-    engine = FogEngine(gc)
+    engine = FogEngine(gc, backend=backend)
     res = engine.eval(jax.numpy.asarray(x_val), jax.random.key(seed),
                       policy=pol)
     acc = float(np.mean(np.asarray(res.label) == y_val))
@@ -79,21 +82,25 @@ def evaluate_topology(forest: TensorForest, grove_size: int,
 def policy_sweep(forest: TensorForest, grove_size: int,
                  x_val: np.ndarray, y_val: np.ndarray,
                  policies: Iterable[FogPolicy],
-                 seed: int = 0) -> list[TopologyPoint]:
+                 seed: int = 0, backend: str = "reference",
+                 ) -> list[TopologyPoint]:
     """Evaluate a grid of FogPolicy design points on a fixed topology."""
-    return [evaluate_topology(forest, grove_size, x_val, y_val, p, seed=seed)
+    return [evaluate_topology(forest, grove_size, x_val, y_val, p, seed=seed,
+                              backend=backend)
             for p in policies]
 
 
 def topology_sweep(forest: TensorForest, x_val: np.ndarray, y_val: np.ndarray,
-                   policy: FogPolicy | float = 0.3) -> list[TopologyPoint]:
+                   policy: FogPolicy | float = 0.3,
+                   backend: str = "reference") -> list[TopologyPoint]:
     """Figure 4: every (groves x grove_size) factorization of the forest."""
     pol = _as_policy(policy)
     t = forest.n_trees
     points = []
     for k in range(1, t + 1):
         if t % k == 0:
-            points.append(evaluate_topology(forest, k, x_val, y_val, pol))
+            points.append(evaluate_topology(forest, k, x_val, y_val, pol,
+                                            backend=backend))
     return points
 
 

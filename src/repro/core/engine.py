@@ -10,8 +10,13 @@ is a pluggable backend:
 backend         per-hop update implementation
 ==============  =============================================================
 ``reference``   pure jnp (``kernels.ref.grove_aggregate_ref``), the oracle
-``pallas``      fused VMEM kernel (``kernels.ops.grove_aggregate``);
-                interpreted on CPU, Mosaic-compiled on TPU
+``pallas``      fused VMEM hop-update kernel (``kernels.ops.grove_aggregate``);
+                interpreted on CPU, Mosaic-compiled on TPU — one launch
+                per hop
+``fused``       the ENTIRE Algorithm-2 loop in one Pallas launch
+                (``kernels.ops.fused_fog``): every grove table VMEM-pinned,
+                the early-exit loop runs inside the kernel — the TPU
+                analogue of the paper's PE
 ``ring``        ``shard_map`` + ``ppermute`` mesh ring (``fog_ring``) — the
                 grove tables are partitioned over devices and queue entries
                 rotate one ICI hop per round
@@ -165,12 +170,28 @@ def _step(gcs, x, start, thresh, budget, j, prob, live, hops, backend,
 
 @partial(jax.jit, static_argnames=("max_hops", "backend", "block_b", "lazy"))
 def _eval_core(gcs: tuple, x, start, thresh, budget, max_hops: int,
-               backend: str, block_b: int, lazy: bool):
+               backend: str, block_b: int, lazy: bool, fused_tables=None):
     B = x.shape[0]
     O = len(gcs)
     C = gcs[0].n_classes
     thresh = jnp.broadcast_to(jnp.asarray(thresh, jnp.float32), (B,))
     budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (B,))
+
+    if backend == "fused":
+        # the whole early-exit state machine runs inside ONE kernel launch;
+        # `lazy` is moot (the in-kernel while_loop always exits early).
+        # `fused_tables` holds the head-stacked [O, G, ...] grove tables
+        # (built once per engine, like ring_tables) so one launch serves
+        # the min-over-outputs rule too.
+        feat, thr_tab, leaf = fused_tables
+        proba, hops = ops.fused_fog(
+            feat, thr_tab, leaf,
+            x, start, thresh, budget, max_hops=max_hops, block_b=block_b)
+        if O == 1:
+            proba = proba[:, 0]
+        return FogResult(proba=proba,
+                         label=jnp.argmax(proba, axis=-1).astype(jnp.int32),
+                         hops=hops)
     prob0 = jnp.zeros((B * O, C), jnp.float32)
     live0 = jnp.ones((B,), bool)
     hops0 = jnp.zeros((B,), jnp.int32)
@@ -254,6 +275,7 @@ class FogEngine:
         self.lazy = lazy
         self.policy = policy if policy is not None else FogPolicy()
         self._ring_tables = None
+        self._fused_tables = None
         if use_kernels and backend != "ring":
             raise ValueError("use_kernels applies to the ring backend only "
                              "(the pallas backend always runs the fused "
@@ -288,6 +310,17 @@ class FogEngine:
             self._ring_tables = reorder_tables(
                 self.gcs[0], self.mesh.shape[self.axis])
         return self._ring_tables
+
+    @property
+    def fused_tables(self):
+        """Head-stacked [O, G, ...] grove tables, built on first fused use
+        (one device copy per engine, not per eval/chunk)."""
+        if self._fused_tables is None:
+            self._fused_tables = (
+                jnp.stack([gc.feature for gc in self.gcs]),
+                jnp.stack([gc.threshold for gc in self.gcs]),
+                jnp.stack([gc.leaf for gc in self.gcs]))
+        return self._fused_tables
 
     # -- properties ------------------------------------------------------
     @property
@@ -349,6 +382,15 @@ class FogEngine:
         backend, max_hops = p.backend, p.max_hops
         if backend == "ring":
             self._check_ring_config(lazy=bool(p.lazy), chunk_b=p.chunk_b)
+        if backend == "fused":
+            g0 = self.gcs[0]
+            for g in self.gcs[1:]:
+                if (g.feature.shape != g0.feature.shape
+                        or g.leaf.shape != g0.leaf.shape):
+                    raise ValueError(
+                        "fused backend stacks head tables in one VMEM-"
+                        "resident launch; multi-output heads need identical "
+                        f"table shapes, got {g.leaf.shape} vs {g0.leaf.shape}")
         x = jnp.asarray(x)
         B = x.shape[0]
         thresh_v = p.lane_thresholds(B)
@@ -366,23 +408,27 @@ class FogEngine:
                       block_b, chunk_b, lazy) -> FogResult:
         B = x.shape[0]
         cb = chunk_b
+        tables = self.fused_tables if backend == "fused" else None
         if cb is None or B <= cb:
             return _eval_core(self.gcs, x, start, thresh, budget, max_hops,
-                              backend, min(block_b, B), lazy)
+                              backend, min(block_b, B), lazy,
+                              fused_tables=tables)
         pad = (-B) % cb
         if pad:  # dead-pad the tail chunk so every chunk hits one compile;
-            # per-lane policy vectors pad alongside x (padded lanes are
-            # discarded, their thresh/budget values are irrelevant)
+            # padded lanes are discarded, so they get thresh=-1 / budget=1 —
+            # any margin clears a negative gate, so they die on hop 1 and
+            # never keep an early-exit while_loop (lazy or in-kernel fused)
+            # spinning after the real lanes have exited
             x = jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)])
             start = jnp.concatenate([start, jnp.zeros((pad,), start.dtype)])
             thresh = jnp.concatenate(
-                [thresh, jnp.repeat(thresh[:1], pad, axis=0)])
+                [thresh, jnp.full((pad,), -1.0, thresh.dtype)])
             budget = jnp.concatenate(
-                [budget, jnp.repeat(budget[:1], pad, axis=0)])
+                [budget, jnp.ones((pad,), budget.dtype)])
         chunks = [
             _eval_core(self.gcs, x[i:i + cb], start[i:i + cb],
                        thresh[i:i + cb], budget[i:i + cb], max_hops,
-                       backend, min(block_b, cb), lazy)
+                       backend, min(block_b, cb), lazy, fused_tables=tables)
             for i in range(0, B + pad, cb)
         ]
         out = jax.tree.map(lambda *ls: jnp.concatenate(ls)[:B], *chunks)

@@ -16,7 +16,8 @@ knob             meaning
 ``hop_budget``   per-lane energy cap — scalar or ``[B]`` int; a lane stops
                  hopping once it has consumed its budget even if still
                  unconfident (anytime inference under an energy contract)
-``backend``      "reference" | "pallas" | "ring"; None = engine default
+``backend``      "reference" | "pallas" | "fused" | "ring"; None = engine
+                 default
 ``block_b``      pallas batch tile; None = engine default
 ``chunk_b``      batch chunking (VMEM bound); None = engine default
 ``lazy``         early-exit while_loop vs fixed-trip scan; None = engine
@@ -44,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-BACKENDS = ("reference", "pallas", "ring")
+BACKENDS = ("reference", "pallas", "fused", "ring")
 
 # per-lane "no budget" sentinel: hops < NO_BUDGET is always true for any
 # reachable hop count, so unbudgeted lanes are capped by max_hops alone
@@ -128,6 +129,14 @@ class FogPolicy:
             raise ValueError(
                 f"per-lane hop_budget has shape {b.shape}, batch is {B}")
         return b
+
+
+def margin_backend(backend: "str | None") -> str:
+    """Map an engine backend to the confidence-margin implementation the LM
+    early-exit gate runs: kernel-flavored backends ("pallas", "fused") route
+    the pallas top-2 kernel, everything else (incl. "ring", which has no
+    meaning for the layer-grove gate) the jnp reference."""
+    return "pallas" if backend in ("pallas", "fused") else "reference"
 
 
 def assemble(policies: Sequence["FogPolicy | None"],

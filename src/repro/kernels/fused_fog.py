@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: the ENTIRE Algorithm-2 loop in one launch.
+
+The paper's PE keeps the grove walk on-chip: an input hops grove-to-grove
+without its probability array ever leaving the accelerator.  The per-hop
+backends reproduce the semantics but pay a kernel-launch-and-HBM round trip
+per hop — ``max_hops x (grove gather + aggregate)`` dispatches, with the
+[B, C] probability state re-read from HBM every hop.  This kernel is the
+TPU analogue of the PE itself: ALL grove node tables (feature / threshold /
+leaf for every grove, every output head) are pinned whole in VMEM, the
+batch is tiled over the grid, and the full early-exit loop — per-lane live
+mask, per-lane ``[B]`` threshold and hop budget, rotation start
+``start [B]``, MaxDiff gate, hop counting, min-over-heads rule — runs as a
+``while_loop`` *inside* the kernel.  One launch emits (proba, hops); the
+loop exits as soon as every lane in the block is confident (or budgeted
+out), so an easy block touches VMEM tables for one hop and stops.
+
+Block sizing (mirrors tree_traverse.py): BB lanes x t trees x d levels of
+int32 index state is small; the resident tables dominate VMEM at
+``O * G * t * (2 * (2**d - 1) + 2**d * C) * 4`` bytes — the whole field of
+groves, not one grove, must fit.  The wrapper rejects working sets over the
+~16 MB v5e VMEM budget with a ValueError (no silent miscompile); shrink
+n_groves / grove_size / depth or fall back to the per-hop ``pallas``
+backend, which only pins one hop's state.
+
+Batches need not align: the batch is dead-lane padded to the block boundary
+(padded lanes enter with live=0, so they never walk, never count hops, and
+never keep the early-exit loop spinning) and outputs are sliced back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.tree_traverse import VMEM_BUDGET
+
+
+def vmem_working_set(feature, threshold, leaf, *, block_b: int,
+                     n_features: int) -> int:
+    """Bytes resident in VMEM: every grove table + one batch block's state."""
+    O, _, t, _ = feature.shape
+    C = leaf.shape[4]
+    depth = int(np.log2(leaf.shape[3]) + 0.5)
+    tables = (feature.size + threshold.size + leaf.size) * 4
+    block = block_b * (n_features + 2 * O * C + t * (depth + 2) + 4) * 4
+    return tables + block
+
+
+def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, x_ref, start_ref,
+                      thresh_ref, budget_ref, live_ref, proba_out, hops_out,
+                      *, depth: int, max_hops: int, n_groves: int):
+    x = x_ref[...]                       # [BB, F]
+    start = start_ref[...]               # [BB]
+    thresh = thresh_ref[...]             # [BB] per-lane gate
+    budget = budget_ref[...]             # [BB] per-lane hop cap
+    live0 = live_ref[...]                # [BB] int8 (0 = dead-padded lane)
+    feature = feature_ref[...]           # [O, G, t, nodes]
+    threshold = threshold_ref[...]
+    leaf = leaf_ref[...]                 # [O, G, t, L, C]
+    O = feature.shape[0]
+    t = feature.shape[2]
+    L, C = leaf.shape[3], leaf.shape[4]
+    BB = x.shape[0]
+    trange = jax.lax.broadcasted_iota(jnp.int32, (BB, t), 1)
+
+    def walk(o, g):
+        # per-lane grove walk against head o's VMEM-resident tables: the
+        # same d gather-compare levels as tree_traverse, but the grove is
+        # selected per lane (g [BB]) instead of fixed for the launch
+        gcol = g[:, None]
+        idx = jnp.zeros((BB, t), jnp.int32)
+        for _ in range(depth):           # static unroll
+            f = feature[o][gcol, trange, idx]              # [BB, t]
+            thr = threshold[o][gcol, trange, idx]          # [BB, t]
+            xv = jnp.take_along_axis(x, f, axis=1)         # [BB, t]
+            idx = 2 * idx + 1 + (xv > thr).astype(jnp.int32)
+        dists = leaf[o][gcol, trange, idx - (L - 1)]       # [BB, t, C]
+        return dists.mean(axis=1)
+
+    def body(state):
+        j, prob, live, hops = state
+        g = (start + j) % n_groves
+        livef = live.astype(jnp.float32)
+        prob = jnp.stack([prob[o] + walk(o, g) * livef[:, None]
+                          for o in range(O)])              # [O, BB, C]
+        hops = hops + live.astype(jnp.int32)
+        denom = jnp.maximum(hops, 1).astype(jnp.float32)
+        prob_norm = prob / denom[None, :, None]
+        # MaxDiff with first-max masking (identical to grove_aggregate)
+        m1 = jnp.max(prob_norm, axis=-1)                   # [O, BB]
+        is_max = prob_norm == m1[..., None]
+        first = jnp.cumsum(is_max.astype(jnp.int32), axis=-1) == 1
+        m2 = jnp.max(jnp.where(is_max & first, -jnp.inf, prob_norm), axis=-1)
+        # min-over-outputs rule: live until EVERY head clears the gate
+        margin = jnp.abs(m1 - m2).min(axis=0)              # [BB]
+        live = (live.astype(bool) & (margin < thresh)
+                & (hops < budget)).astype(jnp.int8)
+        return j + 1, prob, live, hops
+
+    def cond(state):
+        j, _, live, _ = state
+        return (j < max_hops) & (jnp.sum(live.astype(jnp.int32)) > 0)
+
+    state0 = (jnp.zeros((), jnp.int32),
+              jnp.zeros((O, BB, C), jnp.float32),
+              live0,
+              jnp.zeros((BB,), jnp.int32))
+    _, prob, _, hops = jax.lax.while_loop(cond, body, state0)
+    denom = jnp.maximum(hops, 1).astype(jnp.float32)
+    proba_out[...] = (prob / denom[None, :, None]).transpose(1, 0, 2)
+    hops_out[...] = hops
+
+
+def fused_fog_pallas(feature: jax.Array, threshold: jax.Array,
+                     leaf: jax.Array, x: jax.Array, start: jax.Array,
+                     thresh: jax.Array, budget: jax.Array, *,
+                     max_hops: int, block_b: int = 128,
+                     interpret: bool = True):
+    """One-launch Algorithm-2 evaluation over head-stacked grove tables.
+
+    feature   int32   [O, G, t, 2**d - 1]   all heads, all groves
+    threshold float32 [O, G, t, 2**d - 1]
+    leaf      float32 [O, G, t, 2**d, C]
+    x         float32 [B, F];  start int32 [B];  thresh float32 [B];
+    budget    int32   [B]
+    returns   (proba float32 [B, O, C] hop-normalized, hops int32 [B])
+    """
+    B, F = x.shape
+    O, G, t, _ = feature.shape
+    L, C = leaf.shape[3], leaf.shape[4]
+    depth = int(np.log2(L) + 0.5)
+    block_b = min(block_b, B)
+
+    ws = vmem_working_set(feature, threshold, leaf, block_b=block_b,
+                          n_features=F)
+    if ws >= VMEM_BUDGET:
+        raise ValueError(
+            f"fused FoG working set {ws} B ({O} heads x {G} groves x {t} "
+            f"trees, depth {depth}, {C} classes, block_b={block_b}) exceeds "
+            f"the ~16 MB VMEM budget ({VMEM_BUDGET} B usable); shrink "
+            "n_groves/grove_size/depth or block_b, or use the per-hop "
+            "'pallas' backend (which pins only one hop's state)")
+
+    pad = (-B) % block_b
+    live8 = jnp.ones((B,), jnp.int8)
+    if pad:  # dead-lane pad: padded lanes enter dead and are sliced off
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        start = jnp.pad(start, (0, pad))
+        thresh = jnp.pad(thresh, (0, pad))
+        budget = jnp.pad(budget, (0, pad), constant_values=1)
+        live8 = jnp.pad(live8, (0, pad))
+        B = B + pad
+
+    whole4 = lambda i: (0, 0, 0, 0)
+    whole5 = lambda i: (0, 0, 0, 0, 0)
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    proba, hops = pl.pallas_call(
+        functools.partial(_fused_fog_kernel, depth=depth, max_hops=max_hops,
+                          n_groves=G),
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec(feature.shape, whole4),    # tables: whole, VMEM-pinned
+            pl.BlockSpec(threshold.shape, whole4),
+            pl.BlockSpec(leaf.shape, whole5),
+            pl.BlockSpec((block_b, F), row),        # batch: tiled
+            pl.BlockSpec((block_b,), vec),
+            pl.BlockSpec((block_b,), vec),
+            pl.BlockSpec((block_b,), vec),
+            pl.BlockSpec((block_b,), vec),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, O, C), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b,), vec),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, O, C), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(feature, threshold, leaf, x, start, thresh, budget, live8)
+    if pad:
+        proba, hops = proba[:-pad], hops[:-pad]
+    return proba, hops

@@ -14,6 +14,7 @@ import jax
 from repro.kernels.tree_traverse import tree_traverse_pallas
 from repro.kernels.top2_confidence import top2_confidence_pallas
 from repro.kernels.grove_aggregate import grove_aggregate_pallas
+from repro.kernels.fused_fog import fused_fog_pallas
 from repro.kernels import ref
 
 
@@ -42,4 +43,17 @@ def grove_aggregate(prob_acc, contrib, live, hops, thresh, *, block_b: int = 256
                                   block_b=block_b, interpret=_interpret())
 
 
-__all__ = ["tree_traverse", "top2_confidence", "grove_aggregate", "ref"]
+@partial(jax.jit, static_argnames=("max_hops", "block_b"))
+def fused_fog(feature, threshold, leaf, x, start, thresh, budget, *,
+              max_hops: int, block_b: int = 128):
+    """Whole Algorithm-2 loop in ONE kernel launch: head-stacked grove
+    tables [O,G,t,...] pinned in VMEM, per-lane thresh/budget, early-exit
+    while_loop inside the kernel.  Returns (proba [B,O,C], hops [B]);
+    oracle: the FogEngine reference backend."""
+    return fused_fog_pallas(feature, threshold, leaf, x, start, thresh,
+                            budget, max_hops=max_hops, block_b=block_b,
+                            interpret=_interpret())
+
+
+__all__ = ["tree_traverse", "top2_confidence", "grove_aggregate",
+           "fused_fog", "ref"]

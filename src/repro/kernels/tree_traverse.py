@@ -22,6 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+# usable VMEM budget shared by every table-resident kernel (v5e ~16 MB,
+# minus headroom for spills/double buffers); fused_fog imports this too
+VMEM_BUDGET = 14 * 2**20
+
 
 def _tree_traverse_kernel(feature_ref, threshold_ref, leaf_ref, x_ref,
                           out_ref, *, depth: int):
@@ -48,22 +52,33 @@ def tree_traverse_pallas(feature: jax.Array, threshold: jax.Array,
                          leaf: jax.Array, x: jax.Array,
                          *, block_b: int = 128,
                          interpret: bool = True) -> jax.Array:
-    """[t,N] x [t,N] x [t,L,C] x [B,F] -> [B,C] grove probabilities."""
+    """[t,N] x [t,N] x [t,L,C] x [B,F] -> [B,C] grove probabilities.
+
+    ``B`` need not divide ``block_b``: the batch is dead-padded with zero
+    rows up to the next block boundary (the padded walks are discarded) and
+    the output is sliced back to ``B``.
+    """
     B, F = x.shape
     t, L, C = leaf.shape
     depth = int(np.log2(L) + 0.5)
     block_b = min(block_b, B)
-    assert B % block_b == 0, (B, block_b)
 
     # VMEM budget check (v5e ~16MB usable): tables + one batch block
     tables = (feature.size + threshold.size + leaf.size) * 4
     block = block_b * (F + C + t * (depth + 2)) * 4
-    assert tables + block < 14 * 2**20, (
-        f"grove working set {tables + block} B exceeds VMEM budget; "
-        f"shrink grove_size/depth or block_b")
+    if tables + block >= VMEM_BUDGET:
+        raise ValueError(
+            f"grove working set {tables + block} B ({t} trees, depth "
+            f"{depth}, {C} classes, block_b={block_b}) exceeds the ~16 MB "
+            "VMEM budget; shrink grove_size/depth or block_b")
+
+    pad = (-B) % block_b
+    if pad:  # dead-pad unaligned batches; padded rows are sliced off below
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        B = B + pad
 
     grid = (B // block_b,)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_tree_traverse_kernel, depth=depth),
         grid=grid,
         in_specs=[
@@ -76,3 +91,4 @@ def tree_traverse_pallas(feature: jax.Array, threshold: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
     )(feature, threshold, leaf, x)
+    return out[:-pad] if pad else out

@@ -35,8 +35,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fog", action="store_true")
     ap.add_argument("--fog-backend", default="reference",
-                    choices=["reference", "pallas"],
-                    help="confidence-margin backend for the exit gate")
+                    choices=["reference", "pallas", "fused"],
+                    help="engine backend for the exit gate (kernel-flavored "
+                         "choices route the pallas top-2 margin kernel)")
     ap.add_argument("--thresh", type=float, default=0.3)
     ap.add_argument("--hop-budget", type=int, default=None,
                     help="per-request grove budget (anytime decoding cap)")

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.engine import confidence_margin
-from repro.core.policy import FogPolicy
+from repro.core.policy import FogPolicy, margin_backend
 from repro.models import transformer as T
 
 
@@ -74,7 +74,7 @@ def decode_step_fog(params, cfg: ArchConfig, token, cache, length,
     else:
         policy = FogPolicy(threshold=thresh)
     if policy.backend is not None:
-        backend = policy.backend
+        backend = margin_backend(policy.backend)
     thresh = policy.lane_thresholds(B)
     budget = (policy.lane_budgets(B) if policy.hop_budget is not None
               else None)

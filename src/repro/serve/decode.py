@@ -9,7 +9,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ArchConfig
-from repro.core.policy import FogPolicy
+from repro.core.policy import FogPolicy, margin_backend
 from repro.launch.mesh import dp_axes
 from repro.launch.sharding import cache_shardings, param_shardings
 from repro.models import transformer as T
@@ -39,7 +39,7 @@ def make_serve_step(cfg: ArchConfig, mesh, shape: str, *, fog: bool = False,
     B, S = sp.global_batch, sp.seq_len
     if policy is None:
         policy = FogPolicy(threshold=fog_thresh, backend=fog_backend)
-    gate_backend = policy.backend if policy.backend is not None else "reference"
+    gate_backend = margin_backend(policy.backend)
 
     params_shape = jax.eval_shape(
         lambda k: T.init_params(cfg, k, param_dtype), jax.random.key(0))

@@ -51,7 +51,7 @@ class FogClassifier:
     grove_size: trees per grove k (the Split factor); n % k must be 0
     max_depth:  tree depth cap for training
     policy:     default :class:`FogPolicy` for prediction calls
-    backend:    default engine backend ("reference" | "pallas")
+    backend:    default engine backend ("reference" | "pallas" | "fused")
     seed:       training seed, and the fixed start-grove draw for predict
                 (fixed so repeated predictions are deterministic)
     train_cfg:  optional full :class:`TrainConfig`; n_trees/max_depth/seed

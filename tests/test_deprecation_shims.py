@@ -1,0 +1,104 @@
+"""Deprecation shims: each legacy entry point must (a) fire a real
+``DeprecationWarning`` and (b) still return results identical to the
+canonical ``FogEngine.eval(x, key, policy=FogPolicy(...))`` call.
+
+One test per shim — `fog_eval`, `fog_eval_multioutput`, `fog_eval_lazy`,
+`fog_ring_eval`, and the positional ``eval(x, key, thresh, max_hops)``
+form — so a future cleanup that drops a shim (or silences its warning)
+fails loudly.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FogEngine, FogPolicy, fog_eval, fog_eval_lazy,
+                        fog_eval_multioutput, split)
+from repro.core.fog_ring import fog_ring_eval
+
+
+@pytest.fixture(scope="module")
+def gc(trained):
+    _, rf = trained
+    return split(rf, 2)
+
+
+@pytest.fixture(scope="module")
+def x128(trained):
+    ds, _ = trained
+    return jnp.asarray(ds.x_test[:128])
+
+
+def _canonical(gc, x, key, thresh=0.3, lazy=False):
+    return FogEngine(gc, lazy=lazy).eval(
+        x, key, policy=FogPolicy(threshold=thresh, max_hops=gc.n_groves))
+
+
+def _assert_same(res, want):
+    np.testing.assert_array_equal(np.asarray(res.hops), np.asarray(want.hops))
+    np.testing.assert_array_equal(np.asarray(res.label),
+                                  np.asarray(want.label))
+    np.testing.assert_array_equal(np.asarray(res.proba),
+                                  np.asarray(want.proba))
+
+
+def test_fog_eval_shim_warns_and_matches(gc, x128):
+    key = jax.random.key(2)
+    with pytest.warns(DeprecationWarning, match="fog_eval is deprecated"):
+        res = fog_eval(gc, x128, key, 0.3, gc.n_groves)
+    _assert_same(res, _canonical(gc, x128, key))
+
+
+def test_fog_eval_lazy_shim_warns_and_matches(gc, x128):
+    key = jax.random.key(3)
+    with pytest.warns(DeprecationWarning,
+                      match="fog_eval_lazy is deprecated"):
+        res = fog_eval_lazy(gc, x128, key, 0.3, gc.n_groves)
+    _assert_same(res, _canonical(gc, x128, key, lazy=True))
+
+
+def test_fog_eval_multioutput_shim_warns_and_matches(
+        trained, rf8_penbased, rf8_noisy_penbased):
+    ds, _ = trained
+    gcs = (split(rf8_penbased, 2), split(rf8_noisy_penbased, 2))
+    x = jnp.asarray(ds.x_test[:96])
+    key = jax.random.key(5)
+    with pytest.warns(DeprecationWarning,
+                      match="fog_eval_multioutput is deprecated"):
+        res = fog_eval_multioutput(gcs, x, key, 0.3, 4)
+    want = FogEngine(gcs).eval(
+        x, key, policy=FogPolicy(threshold=0.3, max_hops=4))
+    _assert_same(res, want)
+
+
+def test_fog_ring_eval_shim_warns_and_matches(gc, x128):
+    mesh = jax.make_mesh((1,), ("grove",))
+    key = jax.random.key(7)
+    with pytest.warns(DeprecationWarning,
+                      match="fog_ring_eval is deprecated"):
+        proba, hops = fog_ring_eval(gc, x128, key, 0.3, gc.n_groves, mesh)
+    want = FogEngine(gc, backend="ring", mesh=mesh).eval(
+        x128, key, policy=FogPolicy(threshold=0.3, max_hops=gc.n_groves))
+    np.testing.assert_array_equal(np.asarray(hops), np.asarray(want.hops))
+    np.testing.assert_array_equal(np.asarray(proba), np.asarray(want.proba))
+
+
+def test_positional_eval_shim_warns_and_matches(gc, x128):
+    key = jax.random.key(11)
+    eng = FogEngine(gc)
+    with pytest.warns(DeprecationWarning,
+                      match=r"eval\(x, key, thresh, max_hops\) is deprecated"):
+        res = eng.eval(x128, key, 0.3, max_hops=gc.n_groves)
+    _assert_same(res, _canonical(gc, x128, key))
+
+
+def test_canonical_calls_are_warning_free(gc, x128):
+    """The replacement forms must not trip any DeprecationWarning."""
+    key = jax.random.key(13)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        _canonical(gc, x128, key)
+        FogEngine(gc, backend="fused").eval(
+            x128, key, policy=FogPolicy(threshold=0.3))

@@ -43,7 +43,7 @@ def x257(trained):
 
 
 @pytest.mark.parametrize("thresh", THRESHES)
-@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("backend", ["reference", "pallas", "fused"])
 def test_backend_matches_legacy(gc, x257, backend, thresh):
     key = jax.random.key(7)
     want = fog_eval(gc, x257, key, thresh, gc.n_groves)
@@ -74,14 +74,14 @@ def test_chunked_eval_matches_unchunked(gc, x257, chunk_b):
     bit-identical to the whole-batch evaluation."""
     key = jax.random.key(3)
     want = fog_eval(gc, x257, key, 0.3, gc.n_groves)
-    for backend in ["reference", "pallas"]:
+    for backend in ["reference", "pallas", "fused"]:
         res = FogEngine(gc, backend=backend, chunk_b=chunk_b,
                         block_b=32).eval(x257, key, 0.3,
                                          max_hops=gc.n_groves)
         _assert_conforms(res, want)
 
 
-@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("backend", ["reference", "pallas", "fused"])
 def test_multioutput_matches_legacy(trained, rf8_penbased,
                                     rf8_noisy_penbased, backend):
     ds, _ = trained
@@ -105,6 +105,8 @@ def test_unaligned_kernel_block(gc, trained):
     ref_res = FogEngine(gc).eval(x, key, 0.3)
     pal_res = FogEngine(gc, backend="pallas", block_b=256).eval(x, key, 0.3)
     _assert_conforms(pal_res, ref_res)
+    fus_res = FogEngine(gc, backend="fused", block_b=256).eval(x, key, 0.3)
+    _assert_conforms(fus_res, ref_res)
 
 
 def test_default_max_hops_is_n_groves(gc, x257):
@@ -121,6 +123,16 @@ def test_engine_rejects_bad_config(gc):
     mesh = jax.make_mesh((1,), ("grove",))
     with pytest.raises(NotImplementedError):
         FogEngine((gc, gc), backend="ring", mesh=mesh)
+
+
+def test_fused_rejects_mismatched_head_tables(gc, x257):
+    """The fused backend stacks all heads' tables into one VMEM-resident
+    launch; heads with different table shapes must be rejected clearly."""
+    from repro.core import GroveCollection
+    gc2 = GroveCollection(gc.feature, gc.threshold, gc.leaf[..., :-1])
+    eng = FogEngine((gc, gc2), backend="fused")
+    with pytest.raises(ValueError, match="identical table shapes"):
+        eng.eval(x257, jax.random.key(0), policy=FogPolicy(threshold=0.3))
 
 
 # ---------------------------------------------------------------------------
@@ -140,7 +152,7 @@ def x256(trained):
     return jnp.asarray(ds.x_test[:256])
 
 
-@pytest.mark.parametrize("backend", ["reference", "pallas", "ring"])
+@pytest.mark.parametrize("backend", ["reference", "pallas", "fused", "ring"])
 def test_per_lane_threshold_matches_scalar_evals(gc, x256, backend):
     """The acceptance contract: a batch under [t_lo]*B/2 + [t_hi]*B/2 must
     reproduce, per lane, the labels AND hop counts of two scalar-threshold
@@ -177,12 +189,12 @@ def test_per_lane_threshold_backend_conformance(gc, x256):
     tvec = jnp.asarray(rng.choice([0.05, 0.2, 0.5, 0.9], size=B), jnp.float32)
     pol = FogPolicy(threshold=tvec, max_hops=gc.n_groves)
     want = _engine_for(gc, "reference").eval(x256, key, policy=pol)
-    for backend in ["pallas", "ring"]:
+    for backend in ["pallas", "fused", "ring"]:
         res = _engine_for(gc, backend).eval(x256, key, policy=pol)
         _assert_conforms(res, want)
 
 
-@pytest.mark.parametrize("backend", ["reference", "pallas", "ring"])
+@pytest.mark.parametrize("backend", ["reference", "pallas", "fused", "ring"])
 def test_per_lane_hop_budget(gc, x256, backend):
     """A lane's hop count never exceeds its budget, unbudgeted lanes run to
     the max_hops cap at thresh>1, and budgets are backend-conformant."""
@@ -212,7 +224,7 @@ def test_budget_with_confidence_gate_backend_conformance(gc, x256):
     # odd lanes carry no budget -> identical to the unbudgeted run
     np.testing.assert_array_equal(np.asarray(want.hops)[1::2],
                                   np.asarray(unbudgeted.hops)[1::2])
-    for backend in ["pallas", "ring"]:
+    for backend in ["pallas", "fused", "ring"]:
         res = _engine_for(gc, backend).eval(x256, key, policy=pol)
         _assert_conforms(res, want)
 
@@ -228,7 +240,7 @@ def test_chunked_per_lane_policy_tail_padding(gc, x257, chunk_b):
     bvec = jnp.where(jnp.arange(B) % 3 == 0, 2, NO_BUDGET).astype(jnp.int32)
     pol = FogPolicy(threshold=tvec, max_hops=gc.n_groves, hop_budget=bvec)
     want = FogEngine(gc).eval(x257, key, policy=pol)
-    for backend in ["reference", "pallas"]:
+    for backend in ["reference", "pallas", "fused"]:
         res = FogEngine(gc, backend=backend, chunk_b=chunk_b,
                         block_b=32).eval(x257, key, policy=pol)
         _assert_conforms(res, want)
@@ -247,6 +259,9 @@ def test_multioutput_per_lane_policy(trained, rf8_penbased,
     res = FogEngine(gcs, backend="pallas", block_b=64).eval(x, key,
                                                             policy=pol)
     _assert_conforms(res, want)
+    fused = FogEngine(gcs, backend="fused", block_b=64).eval(x, key,
+                                                             policy=pol)
+    _assert_conforms(fused, want)
     lo = FogEngine(gcs).eval(x, key, policy=FogPolicy(threshold=0.1,
                                                       max_hops=4))
     np.testing.assert_array_equal(np.asarray(want.hops[:64]),

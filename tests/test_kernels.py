@@ -36,6 +36,81 @@ def test_tree_traverse_matches_ref(t, depth, C, F, B):
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("B", [37, 127, 257])
+def test_tree_traverse_unaligned_batch(B):
+    """B % block_b != 0 (prime batches): the kernel dead-pads the tail block
+    and slices back — was a hard `assert B % block_b == 0` before."""
+    rng = np.random.default_rng(B)
+    feature, threshold, leaf = _random_forest_arrays(rng, 4, 5, 7, 16)
+    x = rng.normal(size=(B, 16)).astype(np.float32)
+    got = ops.tree_traverse(feature, threshold, leaf, x, block_b=64)
+    want = ref.tree_traverse_ref(jnp.asarray(feature), jnp.asarray(threshold),
+                                 jnp.asarray(leaf), jnp.asarray(x))
+    assert got.shape == (B, 7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget rejection: oversized forests must raise a clear error, never
+# silently miscompile
+# ---------------------------------------------------------------------------
+
+def test_tree_traverse_rejects_vmem_oversized_forest():
+    """Leaf tables just over the ~16 MB budget: t * 2**d * C * 4 = 15.7 MB
+    for t=32, d=12, C=30."""
+    from repro.kernels.tree_traverse import tree_traverse_pallas
+    t, depth, C, F, B = 32, 12, 30, 8, 128
+    feature = jnp.zeros((t, 2**depth - 1), jnp.int32)
+    threshold = jnp.zeros((t, 2**depth - 1), jnp.float32)
+    leaf = jnp.zeros((t, 2**depth, C), jnp.float32)
+    x = jnp.zeros((B, F), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        tree_traverse_pallas(feature, threshold, leaf, x, block_b=128)
+
+
+def test_fused_fog_rejects_vmem_oversized_field():
+    """The fused kernel pins EVERY grove table; the whole field must clear
+    the budget (8 groves x 4 trees x 2**10 leaves x 120 classes = 15.7 MB)."""
+    from repro.kernels.fused_fog import fused_fog_pallas
+    O, G, t, depth, C, F, B = 1, 8, 4, 10, 120, 8, 64
+    feature = jnp.zeros((O, G, t, 2**depth - 1), jnp.int32)
+    threshold = jnp.zeros((O, G, t, 2**depth - 1), jnp.float32)
+    leaf = jnp.zeros((O, G, t, 2**depth, C), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        fused_fog_pallas(feature, threshold, leaf,
+                         jnp.zeros((B, F), jnp.float32),
+                         jnp.zeros((B,), jnp.int32),
+                         jnp.full((B,), 0.3, jnp.float32),
+                         jnp.full((B,), 2**31 - 1, jnp.int32),
+                         max_hops=G, block_b=64)
+
+
+def test_fused_fog_matches_engine_reference():
+    """Direct kernel-level check on random tables (no trained forest): one
+    launch == the reference backend, bit-exact hops."""
+    from repro.core.grove import GroveCollection
+    from repro.core.engine import FogEngine
+    from repro.core.policy import FogPolicy
+    rng = np.random.default_rng(21)
+    G, t, depth, C, F, B = 6, 3, 4, 5, 12, 83
+    feature = rng.integers(0, F, size=(G, t, 2**depth - 1)).astype(np.int32)
+    threshold = rng.normal(size=(G, t, 2**depth - 1)).astype(np.float32)
+    leaf = rng.dirichlet(np.ones(C), size=(G, t, 2**depth)).astype(np.float32)
+    gc = GroveCollection(jnp.asarray(feature), jnp.asarray(threshold),
+                         jnp.asarray(leaf))
+    x = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+    key = jax.random.key(0)
+    pol = FogPolicy(threshold=0.25, max_hops=G)
+    want = FogEngine(gc).eval(x, key, policy=pol)
+    got = FogEngine(gc, backend="fused", block_b=32).eval(x, key, policy=pol)
+    np.testing.assert_array_equal(np.asarray(got.hops), np.asarray(want.hops))
+    np.testing.assert_array_equal(np.asarray(got.label),
+                                  np.asarray(want.label))
+    np.testing.assert_allclose(np.asarray(got.proba), np.asarray(want.proba),
+                               rtol=1e-6, atol=1e-7)
+
+
 @pytest.mark.parametrize("B,C", [(4, 2), (32, 10), (256, 26), (128, 7), (64, 1000)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_top2_confidence_matches_ref(B, C, dtype):

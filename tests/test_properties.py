@@ -5,6 +5,7 @@ bare interpreter (no dev deps) still collects the suite cleanly; the
 deterministic slices of these sweeps live in test_fog_core / test_kernels /
 test_optim and always run.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -81,6 +82,75 @@ def test_grove_aggregate_property(state):
     srt = np.sort(prob_n, axis=-1)
     tie = (srt[:, -1] == srt[:, -2]) & live
     np.testing.assert_allclose(np.asarray(margin)[tie], 0.0, atol=1e-7)
+
+
+# ------------------------------------------- fused whole-loop backend ------
+@st.composite
+def _forest_and_policy(draw):
+    """A random grove field x a random FogPolicy — the fused backend's
+    conformance domain: any (G, t, d, C, F) geometry, any batch alignment,
+    scalar or per-lane thresholds, optional per-lane hop budgets, multi-
+    output heads, lazy or scan reference loop."""
+    G = draw(st.integers(1, 8))
+    t = draw(st.integers(1, 4))
+    depth = draw(st.integers(1, 5))
+    C = draw(st.integers(2, 9))
+    F = draw(st.integers(2, 16))
+    O = draw(st.integers(1, 2))
+    B = draw(st.integers(1, 97))
+    block_b = draw(st.sampled_from([8, 32, 64, 256]))
+    max_hops = draw(st.integers(1, 2 * G))
+    lazy = draw(st.booleans())
+    per_lane_thresh = draw(st.booleans())
+    with_budget = draw(st.booleans())
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    heads = []
+    for _ in range(O):
+        feature = rng.integers(0, F, size=(G, t, 2**depth - 1)).astype(np.int32)
+        threshold = rng.normal(size=(G, t, 2**depth - 1)).astype(np.float32)
+        leaf = rng.dirichlet(np.ones(C),
+                             size=(G, t, 2**depth)).astype(np.float32)
+        heads.append((feature, threshold, leaf))
+    if per_lane_thresh:
+        thresh = rng.choice([0.02, 0.1, 0.3, 0.6, 1.1],
+                            size=B).astype(np.float32)
+    else:
+        thresh = np.float32(rng.choice([0.02, 0.1, 0.3, 0.6, 1.1]))
+    budget = (rng.integers(1, 2 * G + 1, size=B).astype(np.int32)
+              if with_budget else None)
+    x = rng.normal(size=(B, F)).astype(np.float32)
+    return heads, x, thresh, budget, max_hops, block_b, lazy, seed
+
+
+@settings(max_examples=40, deadline=None)
+@given(_forest_and_policy())
+def test_fused_backend_property(case):
+    """The one-launch fused kernel == the reference backend on random grove
+    fields under random policies: bit-identical hops and labels (the energy
+    contract), allclose probabilities, every geometry and alignment."""
+    from repro.core import FogEngine, FogPolicy
+    from repro.core.grove import GroveCollection
+    heads, x, thresh, budget, max_hops, block_b, lazy, seed = case
+    gcs = tuple(GroveCollection(jnp.asarray(f), jnp.asarray(t), jnp.asarray(l))
+                for f, t, l in heads)
+    gc_arg = gcs if len(gcs) > 1 else gcs[0]
+    pol = FogPolicy(threshold=jnp.asarray(thresh), max_hops=max_hops,
+                    hop_budget=None if budget is None else jnp.asarray(budget))
+    key = jax.random.key(seed)
+    want = FogEngine(gc_arg, lazy=lazy).eval(x, key, policy=pol)
+    got = FogEngine(gc_arg, backend="fused", block_b=block_b,
+                    lazy=lazy).eval(x, key, policy=pol)
+    np.testing.assert_array_equal(np.asarray(got.hops), np.asarray(want.hops))
+    np.testing.assert_array_equal(np.asarray(got.label),
+                                  np.asarray(want.label))
+    np.testing.assert_allclose(np.asarray(got.proba), np.asarray(want.proba),
+                               rtol=1e-6, atol=1e-7)
+    # policy invariants, independent of the reference:
+    hops = np.asarray(got.hops)
+    assert (hops >= 1).all() and (hops <= max_hops).all()
+    if budget is not None:
+        assert (hops <= budget).all()
 
 
 # -------------------------------------------------------- tree traversal ---

@@ -44,6 +44,22 @@ def test_predict_is_deterministic(fitted):
     np.testing.assert_array_equal(a, b)
 
 
+def test_fused_backend_facade_parity(fitted):
+    """backend='fused' through the sklearn facade: identical labels and
+    per-call policies still override (the engine pass-through contract)."""
+    ds, clf = fitted
+    fused = FogClassifier(n_trees=16, grove_size=2, max_depth=6, seed=1,
+                          backend="fused")
+    fused.fit(ds.x_train, ds.y_train)
+    np.testing.assert_array_equal(fused.predict(ds.x_test[:200]),
+                                  clf.predict(ds.x_test[:200]))
+    # per-call policy override may itself re-select the backend
+    a = fused.predict(ds.x_test[:64],
+                      policy=FogPolicy(threshold=0.3, backend="reference"))
+    b = clf.predict(ds.x_test[:64], policy=FogPolicy(threshold=0.3))
+    np.testing.assert_array_equal(a, b)
+
+
 def test_policy_override_trades_energy(fitted):
     """A cheaper per-call policy must lower hops (the paper's Fig-5 knob),
     without retraining or rebuilding anything."""
