@@ -10,13 +10,21 @@ future PR has a perf trajectory for the unified hot path.  Backends:
   pallas-chunked   same, batch evaluated in chunk_b slices (VMEM-bounded)
   fused            ENTIRE Algorithm-2 loop in ONE Pallas launch (all grove
                    tables VMEM-pinned, early-exit while_loop in-kernel)
-  fused-chunked    same, one launch per chunk_b slice
+  fused-auto       same, chunk_b="auto": chunks ONLY when the packed tables
+                   + batch footprint exceed the VMEM budget (this forest
+                   fits, so it must match plain fused — the fix for the
+                   fused-chunked 29.4ms-vs-8.2ms regression)
+  fused-bf16 /     fused over bf16 / int8 ForestPacks (packed VMEM
+  fused-int8       residency; int8 pins ~4x the field per byte)
+  reference-int8   the int8 dequantize oracle
 
 The record's ``kernel_launches`` field is the analytic per-eval Pallas
-dispatch count: the per-hop pallas backend pays one ``grove_aggregate``
-launch per hop (``max_hops`` worst case, with the [B, C] state making an
-HBM round trip each time); the fused backend pays exactly ONE launch (one
-per chunk when chunked) — the paper's keep-the-walk-on-chip story.
+dispatch count; ``table_bytes`` is each precision's packed ForestPack
+footprint (the fused kernel's VMEM load and the paper's SRAM capacity).
+Rows sharing a precision must agree bit-for-bit on hops (the energy
+contract); int8 rows additionally face the quantization gate —
+``quant_gate`` fails the run if int8 accuracy drops more than 1% below
+fp32, and CI invokes it against the emitted JSON.
 
 The ring backend is timed separately in fog_ring_bench (needs forced
 multi-device XLA in a subprocess).
@@ -28,6 +36,8 @@ import time
 from pathlib import Path
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+
+QUANT_GATE_MAX_DROP = 0.01      # int8 may cost at most 1% accuracy vs fp32
 
 
 def _time_engine(engine, x, key, policy, reps=3):
@@ -42,11 +52,26 @@ def _time_engine(engine, x, key, policy, reps=3):
     return best, res
 
 
+def quant_gate(record: dict | None = None,
+               path: Path | str = OUT_PATH) -> None:
+    """Fail (raise) if int8 accuracy trails fp32 by more than the gate."""
+    if record is None:
+        record = json.loads(Path(path).read_text())
+    acc = record["acc"]
+    fp32, int8 = acc["fused"], acc["fused-int8"]
+    if int8 < fp32 - QUANT_GATE_MAX_DROP:
+        raise SystemExit(
+            f"quantization gate FAILED: int8 accuracy {int8:.4f} is more "
+            f"than {QUANT_GATE_MAX_DROP:.0%} below fp32 {fp32:.4f}")
+    print(f"CSV,engine,quant_gate=pass,acc_fp32={fp32:.4f},"
+          f"acc_int8={int8:.4f}")
+
+
 def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from repro.core import FogEngine, FogPolicy, split
+    from repro.core import FogEngine, FogPolicy, ForestPack, split
     from repro.data import make_dataset
     from repro.forest import TrainConfig, train_random_forest
 
@@ -65,41 +90,63 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
         "pallas": FogEngine(gc, backend="pallas"),
         "pallas-chunked": FogEngine(gc, backend="pallas", chunk_b=256),
         "fused": FogEngine(gc, backend="fused"),
-        "fused-chunked": FogEngine(gc, backend="fused", chunk_b=256),
+        "fused-auto": FogEngine(gc, backend="fused", chunk_b="auto"),
+        "fused-bf16": FogEngine(gc, backend="fused", precision="bf16"),
+        "fused-int8": FogEngine(gc, backend="fused", precision="int8"),
+        "reference-int8": FogEngine(gc, precision="int8"),
     }
+    precisions = {name: eng.precision for name, eng in engines.items()}
     B = int(x.shape[0])
     n_chunks = -(-B // 256)
-    # analytic Pallas dispatches per evaluation (worst case, lazy aside)
+    # analytic Pallas dispatches per evaluation (worst case, lazy aside);
+    # fused-auto must NOT chunk this VMEM-resident forest: 1 launch
     launches = {
         "reference": 0, "reference-lazy": 0,
         "pallas": gc.n_groves, "pallas-chunked": gc.n_groves * n_chunks,
-        "fused": 1, "fused-chunked": n_chunks,
+        "fused": 1, "fused-auto": 1,
+        "fused-bf16": 1, "fused-int8": 1, "reference-int8": 0,
     }
+    table_bytes = {p: ForestPack.from_groves(gc, p).table_bytes
+                   for p in ("fp32", "bf16", "int8")}
     rows, record = [], {"bench": "engine_backends", "B": B,
                         "n_groves": gc.n_groves, "thresh": thresh,
                         "backend_us": {}, "mean_hops": {}, "acc": {},
-                        "kernel_launches": launches}
-    base_hops = None
+                        "kernel_launches": launches,
+                        "table_bytes": table_bytes}
+    base_hops = {}
     for name, eng in engines.items():
         dt, res = _time_engine(eng, x, key, policy)
         hops = np.asarray(res.hops)
         acc = float((np.asarray(res.label) == ds.y_test).mean())
-        if base_hops is None:
-            base_hops = hops
+        prec = precisions[name]
+        if prec not in base_hops:
+            base_hops[prec] = hops
         else:
-            # all backends must preserve the hop-count energy accounting
-            assert (hops == base_hops).all(), f"{name} diverged on hops"
+            # backends must preserve the hop-count energy accounting
+            # within each precision (int8 walks legitimately differ)
+            assert (hops == base_hops[prec]).all(), \
+                f"{name} diverged on hops"
         record["backend_us"][name] = round(dt * 1e6)
         record["mean_hops"][name] = float(hops.mean())
         record["acc"][name] = acc
         rows.append(f"CSV,engine,backend={name},us={dt * 1e6:.0f},"
                     f"acc={acc:.4f},mean_hops={hops.mean():.2f},"
-                    f"launches={launches[name]}")
+                    f"launches={launches[name]},"
+                    f"table_bytes={table_bytes[prec]}")
+    # the auto-chunk regression fix: auto must not chunk a resident pack
+    assert engines["fused-auto"]._resolve_chunk(
+        "fused", engines["fused-auto"].tables.pack("fp32"), B, 256, "auto",
+        int(x.shape[1])) is None, "fused-auto chunked a VMEM-resident pack"
     if out_path is not None:
         Path(out_path).write_text(json.dumps(record, indent=2) + "\n")
         rows.append(f"CSV,engine,wrote={out_path}")
+    quant_gate(record)
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import sys
+    if "--gate-only" in sys.argv:
+        quant_gate()
+    else:
+        print("\n".join(run()))

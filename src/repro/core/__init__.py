@@ -1,8 +1,10 @@
 from repro.core.confidence import maxdiff, maxdiff_multioutput, top2
 from repro.core.grove import GroveCollection, gc_train, split, grove_predict_proba
-from repro.core.policy import BACKENDS, NO_BUDGET, FogPolicy, assemble
-from repro.core.engine import (FogEngine, FogResult, HopMeter,
+from repro.core.policy import (BACKENDS, NO_BUDGET, PRECISIONS, FogPolicy,
+                               assemble)
+from repro.core.engine import (FogEngine, FogResult, HopMeter, TableCache,
                                confidence_margin, hop_update, sample_starts)
+from repro.forest.pack import ForestPack
 from repro.core.fog_eval import fog_eval, fog_eval_lazy, fog_eval_multioutput
 from repro.core.energy import (
     EnergyReport, fog_energy, rf_report, dt_energy_pj, rf_energy_pj,
@@ -17,9 +19,9 @@ from repro.core.budget import (
 __all__ = [
     "maxdiff", "maxdiff_multioutput", "top2",
     "GroveCollection", "gc_train", "split", "grove_predict_proba",
-    "BACKENDS", "NO_BUDGET", "FogPolicy", "assemble",
-    "FogEngine", "FogResult", "HopMeter", "confidence_margin",
-    "hop_update", "sample_starts",
+    "BACKENDS", "NO_BUDGET", "PRECISIONS", "FogPolicy", "assemble",
+    "FogEngine", "FogResult", "HopMeter", "TableCache", "ForestPack",
+    "confidence_margin", "hop_update", "sample_starts",
     "fog_eval", "fog_eval_lazy", "fog_eval_multioutput",
     "EnergyReport", "fog_energy", "rf_report", "dt_energy_pj",
     "rf_energy_pj", "grove_energy_pj", "svm_lr_energy_pj",

@@ -71,7 +71,12 @@ def evaluate_topology(forest: TensorForest, grove_size: int,
                       policy=pol)
     acc = float(np.mean(np.asarray(res.label) == y_val))
     hops = np.asarray(res.hops)
-    rep = fog_energy(hops, grove_size, gc.depth, gc.n_classes, x_val.shape[1])
+    # the energy model reads the precision the evaluation actually ran at
+    # (int8 packs read fewer SRAM bytes per node), so a sweep over
+    # FogPolicy(precision=...) grids maps the full dtype x threshold plane
+    rep = fog_energy(hops, grove_size, gc.depth, gc.n_classes,
+                     x_val.shape[1],
+                     precision=engine.resolve(pol).precision)
     delay = float(hops.mean())
     e_nj = rep.per_example_nj
     thresh_scalar = float(np.asarray(pol.threshold, np.float64).mean())

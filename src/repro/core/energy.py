@@ -16,12 +16,21 @@ same arithmetic with published 40/45 nm per-op energies (Horowitz, ISSCC'14
 
 Energy ratios between classifiers — the paper's claims — depend only on op
 counts and these constants, not on our container's hardware.
+
+Table precision: the FoG paths take the :mod:`repro.forest.pack` precision
+("fp32" | "bf16" | "int8") and scale SRAM read energy by the *actual bytes
+per node* — a node entry is {feature idx 2B, threshold 4/2/1B, offset 2B} —
+and shrink the SRAM array capacity term accordingly (per-access energy grows
+~sqrt(capacity)), so quantized packs show up directly in the fog_energy
+report.  ``fp32`` reproduces the original accounting exactly.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.forest.pack import PRECISION_BYTES
 
 # ---- per-op energies, picojoules (Horowitz ISSCC'14, 45nm; paper: 40nm) ----
 E_INT8_ADD = 0.03
@@ -56,18 +65,26 @@ def _sram_scale(capacity_bytes: float) -> float:
     return max(1.0, np.sqrt(capacity_bytes / 8192.0))
 
 
-def tree_bytes(depth: int, n_classes: int) -> float:
-    """Node table {feature idx 2B, threshold 4B, offset 2B} + byte leaves."""
-    return (2**depth - 1) * 8.0 + 2**depth * n_classes
+def tree_bytes(depth: int, n_classes: int, precision: str = "fp32") -> float:
+    """Node table {feature idx 2B, threshold 4/2/1B, offset 2B} + byte
+    leaves.  ``precision`` is the packed threshold width (forest.pack);
+    the paper's byte-addressable leaves are byte-wide at every precision."""
+    node_bytes = 4.0 + PRECISION_BYTES[precision]
+    return (2**depth - 1) * node_bytes + 2**depth * n_classes
 
 
-def dt_energy_pj(depth: int, n_classes: int = 10) -> float:
+def dt_energy_pj(depth: int, n_classes: int = 10,
+                 precision: str = "fp32") -> float:
     """One decision tree, one example: the visited root-to-leaf path.
     SRAM access energy scales with the tree's table size (a depth-12
-    ISOLET tree needs a ~140 KB array, not the 8 KB baseline)."""
-    s = _sram_scale(tree_bytes(depth, n_classes))
-    # node read: {feature idx, threshold, offset} ~ 2 words; feature read: 1 word
-    per_node = (2 * E_SRAM_R32) * s + E_SRAM_R32 + E_CMP8
+    ISOLET tree needs a ~140 KB array, not the 8 KB baseline) and with the
+    actual bytes per node entry — an int8-threshold node reads 5 of the
+    fp32 entry's 8 bytes, and its array is smaller."""
+    s = _sram_scale(tree_bytes(depth, n_classes, precision))
+    # node read: {feature idx, threshold, offset} = 4 + threshold bytes
+    # (fp32: 8 B = 2 words, the original accounting); feature read: 1 word
+    node_words = (4.0 + PRECISION_BYTES[precision]) / 4.0
+    per_node = (node_words * E_SRAM_R32) * s + E_SRAM_R32 + E_CMP8
     return depth * per_node
 
 
@@ -76,13 +93,15 @@ def rf_energy_pj(n_trees: int, depth: int, n_classes: int) -> float:
     return n_trees * dt_energy_pj(depth, n_classes) + vote
 
 
-def grove_energy_pj(grove_size: int, depth: int, n_classes: int) -> float:
+def grove_energy_pj(grove_size: int, depth: int, n_classes: int,
+                    precision: str = "fp32") -> float:
     # the data queue stores one BYTE per class (§3.2.2 footnote: byte-
     # addressable Probability Array) -> int8 accumulate, word-packed SRAM
     words = max(1, (n_classes + 3) // 4)
     agg = n_classes * E_INT8_ADD + words * (E_SRAM_R32 + E_SRAM_W32)
     conf = n_classes * E_CMP8 + E_INT8_ADD                     # MaxDiff pass
-    return grove_size * dt_energy_pj(depth, n_classes) + agg + conf
+    return (grove_size * dt_energy_pj(depth, n_classes, precision)
+            + agg + conf)
 
 
 def hop_transfer_energy_pj(n_features: int, n_classes: int) -> float:
@@ -92,10 +111,13 @@ def hop_transfer_energy_pj(n_features: int, n_classes: int) -> float:
 
 
 def fog_energy(hops: np.ndarray, grove_size: int, depth: int,
-               n_classes: int, n_features: int) -> EnergyReport:
-    """hops: [B] groves-used per example (FogResult.hops)."""
+               n_classes: int, n_features: int,
+               precision: str = "fp32") -> EnergyReport:
+    """hops: [B] groves-used per example (FogResult.hops); ``precision`` is
+    the packed-table dtype the evaluation ran at (scales the per-node SRAM
+    bytes — the paper's dominant energy term)."""
     hops = np.asarray(hops, np.float64)
-    per_grove = grove_energy_pj(grove_size, depth, n_classes)
+    per_grove = grove_energy_pj(grove_size, depth, n_classes, precision)
     transfer = hop_transfer_energy_pj(n_features, n_classes)
     # (hops-1) forwards per example; first grove receives from the processor
     per_ex = hops * per_grove + np.maximum(hops - 1, 0) * transfer

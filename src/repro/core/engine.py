@@ -23,8 +23,8 @@ backend         per-hop update implementation
 ==============  =============================================================
 
 Every runtime knob — threshold (scalar or per-lane ``[B]``), hop caps and
-per-lane hop budgets, backend selection, tiling — is owned by a
-:class:`repro.core.policy.FogPolicy`; the canonical evaluation call is
+per-lane hop budgets, backend selection, tiling, table precision — is owned
+by a :class:`repro.core.policy.FogPolicy`; the canonical evaluation call is
 
     engine.eval(x, key, policy=FogPolicy(threshold=0.3))
 
@@ -37,9 +37,21 @@ groves are drawn: on a single shard it reproduces the legacy ``fog_eval``
 draw exactly; on an n-shard ring it stratifies starts so each shard begins
 with an equal slice of the queue.
 
+Grove tables are owned by a :class:`TableCache`: one packed
+:class:`~repro.forest.pack.ForestPack` per precision ("fp32" | "bf16" |
+"int8"), with the derived layouts (ring strided reorder, fused head-stack)
+cached inside each pack.  Every backend evaluates the pack — the fused
+kernel pins the packed bytes whole in VMEM, the per-hop backends gather and
+dequantize per-lane slices — so switching ``FogPolicy(precision=...)``
+swaps table dtypes without rebuilding the engine.  (The former
+``engine.ring_tables`` / ``engine.fused_tables`` attributes are gone; use
+``engine.tables.get(layout, precision)``.)
+
 Batches larger than VMEM are evaluated in fixed-size chunks (``chunk_b``)
 with one compiled program reused across chunks; per-lane policy vectors are
-dead-padded alongside the inputs.
+dead-padded alongside the inputs.  ``chunk_b="auto"`` (the fused backend's
+default) only chunks when the packed tables + whole-batch footprint exceed
+the VMEM budget, sizing chunks from the pack's per-chunk footprint.
 """
 from __future__ import annotations
 
@@ -52,8 +64,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.confidence import maxdiff
-from repro.core.grove import GroveCollection, grove_predict_proba
-from repro.core.policy import BACKENDS, FogPolicy
+from repro.core.grove import GroveCollection
+from repro.core.policy import BACKENDS, PRECISIONS, FogPolicy
+from repro.forest.pack import ForestPack
 from repro.kernels import ops, ref
 
 
@@ -132,12 +145,15 @@ def _check_step_backend(backend: str) -> None:
 # outputs confidence rule (paper footnote 1) is applied on the margins.
 # --------------------------------------------------------------------------
 
-def _contrib(gcs, g_idx, x):
-    """Per-hop grove contribution, flattened over output heads: [B*O, C]."""
-    if len(gcs) == 1:
-        return grove_predict_proba(gcs[0], g_idx, x)
-    rows = [grove_predict_proba(gc, g_idx, x) for gc in gcs]
-    return jnp.stack(rows, axis=1).reshape(-1, gcs[0].n_classes)
+def _contrib(pack: ForestPack, g_idx, x):
+    """Per-hop grove contribution from packed tables, flattened over output
+    heads: [B*O, C].  Gathers stay at the pack's dtype; the gathered slices
+    dequantize to fp32 before the walk (bit-identical to the legacy
+    GroveCollection path for an fp32 pack)."""
+    if pack.n_heads == 1:
+        return pack.predict_proba(0, g_idx, x)
+    rows = [pack.predict_proba(o, g_idx, x) for o in range(pack.n_heads)]
+    return jnp.stack(rows, axis=1).reshape(-1, pack.n_classes)
 
 
 def _repeat_lanes(v, n_out):
@@ -145,17 +161,17 @@ def _repeat_lanes(v, n_out):
     return v if n_out == 1 else jnp.repeat(v, n_out)
 
 
-def _step(gcs, x, start, thresh, budget, j, prob, live, hops, backend,
+def _step(pack, x, start, thresh, budget, j, prob, live, hops, backend,
           block_b):
     """Shared hop body: returns updated (prob, live, hops) for [B*O, C].
 
     ``thresh`` is per-lane [B] float32; ``budget`` per-lane [B] int32 — a
     lane that has consumed its hop budget dies even while unconfident.
     """
-    O = len(gcs)
-    G = gcs[0].n_groves
+    O = pack.n_heads
+    G = pack.n_groves
     g_idx = (start + j) % G
-    contrib = _contrib(gcs, g_idx, x)
+    contrib = _contrib(pack, g_idx, x)
     prob, hops_f, live_f, margin = hop_update(
         prob, contrib, _repeat_lanes(live, O), _repeat_lanes(hops, O),
         _repeat_lanes(thresh, O), backend=backend, block_b=block_b)
@@ -169,24 +185,25 @@ def _step(gcs, x, start, thresh, budget, j, prob, live, hops, backend,
 
 
 @partial(jax.jit, static_argnames=("max_hops", "backend", "block_b", "lazy"))
-def _eval_core(gcs: tuple, x, start, thresh, budget, max_hops: int,
-               backend: str, block_b: int, lazy: bool, fused_tables=None):
+def _eval_core(pack: ForestPack, x, start, thresh, budget, max_hops: int,
+               backend: str, block_b: int, lazy: bool):
     B = x.shape[0]
-    O = len(gcs)
-    C = gcs[0].n_classes
+    O = pack.n_heads
+    C = pack.n_classes
     thresh = jnp.broadcast_to(jnp.asarray(thresh, jnp.float32), (B,))
     budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (B,))
 
     if backend == "fused":
         # the whole early-exit state machine runs inside ONE kernel launch;
         # `lazy` is moot (the in-kernel while_loop always exits early).
-        # `fused_tables` holds the head-stacked [O, G, ...] grove tables
-        # (built once per engine, like ring_tables) so one launch serves
-        # the min-over-outputs rule too.
-        feat, thr_tab, leaf = fused_tables
+        # The pack's canonical storage IS the head-stacked [O, G, ...]
+        # layout, pinned in VMEM at its packed width, so one launch serves
+        # the min-over-outputs rule and every precision alike.
+        feat, thr_tab, leaf, ts, ls = pack.layout("fused")
         proba, hops = ops.fused_fog(
             feat, thr_tab, leaf,
-            x, start, thresh, budget, max_hops=max_hops, block_b=block_b)
+            x, start, thresh, budget, ts, ls,
+            max_hops=max_hops, block_b=block_b)
         if O == 1:
             proba = proba[:, 0]
         return FogResult(proba=proba,
@@ -203,7 +220,7 @@ def _eval_core(gcs: tuple, x, start, thresh, budget, max_hops: int,
 
         def body(state):
             j, prob, live, hops = state
-            prob, live, hops = _step(gcs, x, start, thresh, budget, j, prob,
+            prob, live, hops = _step(pack, x, start, thresh, budget, j, prob,
                                      live, hops, backend, block_b)
             return (j + 1, prob, live, hops)
 
@@ -212,7 +229,7 @@ def _eval_core(gcs: tuple, x, start, thresh, budget, max_hops: int,
     else:
         def body(carry, j):
             prob, live, hops = carry
-            prob, live, hops = _step(gcs, x, start, thresh, budget, j, prob,
+            prob, live, hops = _step(pack, x, start, thresh, budget, j, prob,
                                      live, hops, backend, block_b)
             return (prob, live, hops), None
 
@@ -229,53 +246,115 @@ def _eval_core(gcs: tuple, x, start, thresh, budget, max_hops: int,
 
 
 # --------------------------------------------------------------------------
+# packed-table ownership
+# --------------------------------------------------------------------------
+
+class TableCache:
+    """One :class:`ForestPack` per precision, derived layouts cached inside.
+
+    Replaces the engine's former ad-hoc ``_ring_tables`` / ``_fused_tables``
+    pair: every evaluation path asks this cache for its (layout, dtype)
+    view, so a given precision's tables are packed once per engine and the
+    ring reorder / head-stack are computed once per pack.
+    """
+
+    def __init__(self, gcs_fn):
+        # a zero-arg callable, not the groves themselves: an engine seeded
+        # with a loaded pack serves it without ever materializing fp32
+        # tables — groves are only realized if ANOTHER precision is asked
+        self._gcs_fn = gcs_fn
+        self._packs: dict[str, ForestPack] = {}
+
+    def seed(self, pack: ForestPack) -> None:
+        """Adopt an existing pack (e.g. a loaded model artifact) as the
+        cached entry for its precision."""
+        self._packs[pack.precision] = pack
+
+    def pack(self, precision: str) -> ForestPack:
+        """The canonical packed tables at ``precision`` (built on first use)."""
+        if precision not in self._packs:
+            gcs = self._gcs_fn()
+            gc = gcs if len(gcs) > 1 else gcs[0]
+            self._packs[precision] = ForestPack.from_groves(gc, precision)
+        return self._packs[precision]
+
+    def get(self, layout: str, precision: str, n_shards: int = 1):
+        """Table tuple for one (layout, dtype) pair — see
+        :meth:`ForestPack.layout`."""
+        return self.pack(precision).layout(layout, n_shards)
+
+
+# --------------------------------------------------------------------------
 # the engine
 # --------------------------------------------------------------------------
 
 class FogEngine:
     """Owns the Algorithm-2 state machine; backends plug in the hop update.
 
-    gc:        GroveCollection, or a tuple of them (multi-output heads with
-               identical (n_groves, grove_size)).
+    gc:        GroveCollection, a tuple of them (multi-output heads with
+               identical (n_groves, grove_size)), or a
+               :class:`~repro.forest.pack.ForestPack` (e.g. a loaded model
+               artifact — the pack is adopted into the table cache and its
+               precision becomes the engine default).
     policy:    default :class:`FogPolicy` applied when ``eval`` is called
                without one.  A per-call policy REPLACES it — the traced
                knobs (threshold, hop_budget) come wholly from the policy
                you pass; only its None-valued static knobs (max_hops,
-               backend, block_b, chunk_b, lazy) fall back to the engine
-               defaults.
+               backend, block_b, chunk_b, lazy, precision) fall back to the
+               engine defaults.
+    precision: default packed-table dtype ("fp32" | "bf16" | "int8") for
+               policies that leave ``precision`` None; defaults to "fp32"
+               (or the adopted pack's precision).
     mesh/axis: required for the ring backend; n_groves % mesh.shape[axis]
                must be 0 (each shard hosts a strided subset of groves).
     use_kernels: ring only — run the Pallas tree-traversal PE per shard.
 
     ``backend`` / ``block_b`` / ``chunk_b`` / ``lazy`` kwargs remain as
-    engine-level defaults for any policy that leaves them None.
+    engine-level defaults for any policy that leaves them None; packed
+    tables live in ``self.tables`` (a :class:`TableCache`).
     """
 
     def __init__(self, gc, *, backend: str = "reference",
-                 block_b: int = 256, chunk_b: int | None = None,
+                 block_b: int = 256, chunk_b: int | str | None = None,
                  mesh=None, axis: str = "grove", use_kernels: bool = False,
-                 lazy: bool = False, policy: FogPolicy | None = None):
+                 lazy: bool = False, policy: FogPolicy | None = None,
+                 precision: str | None = None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
-        self.gcs: tuple[GroveCollection, ...] = (
-            tuple(gc) if isinstance(gc, (tuple, list)) else (gc,))
-        g0 = self.gcs[0]
-        for g in self.gcs[1:]:
-            if (g.n_groves, g.grove_size) != (g0.n_groves, g0.grove_size):
-                raise ValueError(
-                    "multi-output heads need identical (n_groves, "
-                    f"grove_size); got {(g.n_groves, g.grove_size)} vs "
-                    f"{(g0.n_groves, g0.grove_size)}")
+        self._seed_pack = gc if isinstance(gc, ForestPack) else None
+        if self._seed_pack is not None:
+            # groves realize lazily (to_groves dequantizes to fp32): an
+            # int8 artifact serves from its packed bytes alone
+            self._gcs = None
+        else:
+            self._gcs = (tuple(gc) if isinstance(gc, (tuple, list))
+                         else (gc,))
+            g0 = self._gcs[0]
+            for g in self._gcs[1:]:
+                if (g.n_groves, g.grove_size) != (g0.n_groves,
+                                                  g0.grove_size):
+                    raise ValueError(
+                        "multi-output heads need identical (n_groves, "
+                        f"grove_size); got {(g.n_groves, g.grove_size)} vs "
+                        f"{(g0.n_groves, g0.grove_size)}")
+        if precision is None:
+            precision = (self._seed_pack.precision
+                         if self._seed_pack is not None else "fp32")
+        if precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {precision!r}; "
+                             f"pick from {PRECISIONS}")
         self.backend = backend
         self.block_b = block_b
         self.chunk_b = chunk_b
+        self.precision = precision
         self.mesh = mesh
         self.axis = axis
         self.use_kernels = use_kernels
         self.lazy = lazy
         self.policy = policy if policy is not None else FogPolicy()
-        self._ring_tables = None
-        self._fused_tables = None
+        self.tables = TableCache(lambda: self.gcs)
+        if self._seed_pack is not None:
+            self.tables.seed(self._seed_pack)
         if use_kernels and backend != "ring":
             raise ValueError("use_kernels applies to the ring backend only "
                              "(the pallas backend always runs the fused "
@@ -286,46 +365,36 @@ class FogEngine:
     def _check_ring_config(self, *, lazy: bool, chunk_b: int | None) -> None:
         if self.mesh is None:
             raise ValueError("ring backend needs a mesh")
-        if len(self.gcs) > 1:
+        if self.multi_output:
             raise NotImplementedError("ring backend is single-output")
         if lazy or chunk_b is not None:
             raise ValueError("lazy/chunk_b are not supported on the "
                              "ring backend (the ring always runs the "
                              "fixed max_hops rotation schedule)")
         n_shards = self.mesh.shape[self.axis]
-        if self.gcs[0].n_groves % n_shards:
+        if self.n_groves % n_shards:
             raise ValueError(
-                f"n_groves={self.gcs[0].n_groves} not divisible by "
+                f"n_groves={self.n_groves} not divisible by "
                 f"{n_shards} ring shards")
-        if self.use_kernels and self.gcs[0].n_groves != n_shards:
+        if self.use_kernels and self.n_groves != n_shards:
             raise ValueError(
                 "use_kernels needs one grove per shard (the multi-"
                 "grove gather path has no Pallas tree-traversal PE)")
 
-    @property
-    def ring_tables(self):
-        """Strided-reordered grove tables, built on first ring use."""
-        if self._ring_tables is None:
-            from repro.core.fog_ring import reorder_tables
-            self._ring_tables = reorder_tables(
-                self.gcs[0], self.mesh.shape[self.axis])
-        return self._ring_tables
-
-    @property
-    def fused_tables(self):
-        """Head-stacked [O, G, ...] grove tables, built on first fused use
-        (one device copy per engine, not per eval/chunk)."""
-        if self._fused_tables is None:
-            self._fused_tables = (
-                jnp.stack([gc.feature for gc in self.gcs]),
-                jnp.stack([gc.threshold for gc in self.gcs]),
-                jnp.stack([gc.leaf for gc in self.gcs]))
-        return self._fused_tables
-
     # -- properties ------------------------------------------------------
     @property
+    def gcs(self) -> tuple[GroveCollection, ...]:
+        """Per-head GroveCollections; for a pack-seeded engine these are
+        dequantized fp32 views, realized only on first access."""
+        if self._gcs is None:
+            self._gcs = self._seed_pack.to_groves()
+        return self._gcs
+
+    @property
     def n_groves(self) -> int:
-        return self.gcs[0].n_groves
+        if self._seed_pack is not None:
+            return self._seed_pack.n_groves
+        return self._gcs[0].n_groves
 
     @property
     def n_shards(self) -> int:
@@ -335,7 +404,9 @@ class FogEngine:
 
     @property
     def multi_output(self) -> bool:
-        return len(self.gcs) > 1
+        if self._seed_pack is not None:
+            return self._seed_pack.n_heads > 1
+        return len(self._gcs) > 1
 
     # -- policy resolution ----------------------------------------------
     def resolve(self, policy: FogPolicy | None = None) -> FogPolicy:
@@ -346,7 +417,9 @@ class FogEngine:
             backend=p.backend if p.backend is not None else self.backend,
             block_b=p.block_b if p.block_b is not None else self.block_b,
             chunk_b=p.chunk_b if p.chunk_b is not None else self.chunk_b,
-            lazy=p.lazy if p.lazy is not None else self.lazy)
+            lazy=p.lazy if p.lazy is not None else self.lazy,
+            precision=(p.precision if p.precision is not None
+                       else self.precision))
 
     # -- evaluation ------------------------------------------------------
     def eval(self, x: jax.Array, key: jax.Array, thresh=None,
@@ -382,15 +455,6 @@ class FogEngine:
         backend, max_hops = p.backend, p.max_hops
         if backend == "ring":
             self._check_ring_config(lazy=bool(p.lazy), chunk_b=p.chunk_b)
-        if backend == "fused":
-            g0 = self.gcs[0]
-            for g in self.gcs[1:]:
-                if (g.feature.shape != g0.feature.shape
-                        or g.leaf.shape != g0.leaf.shape):
-                    raise ValueError(
-                        "fused backend stacks head tables in one VMEM-"
-                        "resident launch; multi-output heads need identical "
-                        f"table shapes, got {g.leaf.shape} vs {g0.leaf.shape}")
         x = jnp.asarray(x)
         B = x.shape[0]
         thresh_v = p.lane_thresholds(B)
@@ -398,21 +462,54 @@ class FogEngine:
         n_shards = self.mesh.shape[self.axis] if backend == "ring" else 1
         start = sample_starts(key, B, self.n_groves, n_shards)
         if backend == "ring":
-            return self._eval_ring(x, start, thresh_v, budget_v, max_hops)
+            return self._eval_ring(x, start, thresh_v, budget_v, max_hops,
+                                   p.precision)
         return self._eval_chunked(x, start, thresh_v, budget_v, max_hops,
-                                  backend, p.block_b, p.chunk_b, p.lazy)
+                                  backend, p.block_b, p.chunk_b, p.lazy,
+                                  p.precision)
 
     __call__ = eval
 
+    def _resolve_chunk(self, backend, pack: ForestPack, B: int, block_b: int,
+                       chunk_b, n_features: int):
+        """Concrete chunk size, or None for whole-batch evaluation.
+
+        An explicit int is respected as-is.  ``"auto"`` / None on the fused
+        backend chunk ONLY when the packed tables plus the whole batch's
+        VMEM footprint exceed the budget, and then size the chunk from the
+        pack's per-chunk footprint (largest lane count that fits beside the
+        resident tables) — an int8 pack that fits where fp32 would not
+        therefore runs un-chunked.  On the per-hop backends (no resident
+        tables) ``"auto"`` never chunks.
+        """
+        if isinstance(chunk_b, int):
+            return chunk_b if B > chunk_b else None
+        if backend != "fused":
+            return None
+        from repro.kernels.fused_fog import fit_block_b, vmem_working_set
+        from repro.kernels.tree_traverse import VMEM_BUDGET
+        tables = pack.layout("fused")
+        ws = vmem_working_set(*tables, block_b=min(block_b, B),
+                              n_features=n_features)
+        if ws < VMEM_BUDGET:
+            return None
+        fit = fit_block_b(*tables, n_features=n_features)
+        if fit < 1:
+            return None   # tables alone over budget: let the kernel's
+            # ValueError explain (chunking cannot shrink resident tables)
+        # ws over budget forces fit < min(block_b, B): each chunk is one
+        # (shrunken) kernel block via the min(block_b, cb) at the call site
+        return min(fit, B)
+
     def _eval_chunked(self, x, start, thresh, budget, max_hops, backend,
-                      block_b, chunk_b, lazy) -> FogResult:
+                      block_b, chunk_b, lazy, precision) -> FogResult:
         B = x.shape[0]
-        cb = chunk_b
-        tables = self.fused_tables if backend == "fused" else None
-        if cb is None or B <= cb:
-            return _eval_core(self.gcs, x, start, thresh, budget, max_hops,
-                              backend, min(block_b, B), lazy,
-                              fused_tables=tables)
+        pack = self.tables.pack(precision)
+        cb = self._resolve_chunk(backend, pack, B, block_b, chunk_b,
+                                 x.shape[1])
+        if cb is None:
+            return _eval_core(pack, x, start, thresh, budget, max_hops,
+                              backend, min(block_b, B), lazy)
         pad = (-B) % cb
         if pad:  # dead-pad the tail chunk so every chunk hits one compile;
             # padded lanes are discarded, so they get thresh=-1 / budget=1 —
@@ -426,19 +523,22 @@ class FogEngine:
             budget = jnp.concatenate(
                 [budget, jnp.ones((pad,), budget.dtype)])
         chunks = [
-            _eval_core(self.gcs, x[i:i + cb], start[i:i + cb],
+            _eval_core(pack, x[i:i + cb], start[i:i + cb],
                        thresh[i:i + cb], budget[i:i + cb], max_hops,
-                       backend, min(block_b, cb), lazy, fused_tables=tables)
+                       backend, min(block_b, cb), lazy)
             for i in range(0, B + pad, cb)
         ]
         out = jax.tree.map(lambda *ls: jnp.concatenate(ls)[:B], *chunks)
         return out
 
-    def _eval_ring(self, x, start, thresh, budget, max_hops) -> FogResult:
+    def _eval_ring(self, x, start, thresh, budget, max_hops,
+                   precision) -> FogResult:
         from repro.core.fog_ring import ring_eval
+        tables = self.tables.get("ring", precision,
+                                 self.mesh.shape[self.axis])
         proba, hops = ring_eval(
             self.gcs[0], x, start, thresh, max_hops, self.mesh, self.axis,
-            use_kernels=self.use_kernels, tables=self.ring_tables,
+            use_kernels=self.use_kernels, tables=tables,
             hop_budget=budget)
         return FogResult(proba=proba,
                          label=jnp.argmax(proba, axis=-1).astype(jnp.int32),

@@ -53,12 +53,15 @@ def _grove_order(G: int, n_shards: int) -> np.ndarray:
     return np.arange(G).reshape(m, n_shards).T.reshape(-1)
 
 
-def _eval_block_grove(feature, threshold, leaf, x, use_kernels: bool):
+def _eval_block_grove(feature, threshold, leaf, thr_scale, leaf_scale, x,
+                      use_kernels: bool):
     """One grove per shard: whole-block bundle eval [b, F] -> [b, C].
 
-    ``use_kernels=True`` runs the Pallas tree-traversal PE
-    (kernels/tree_traverse.py — node tables VMEM-resident, batch tiled);
-    the jnp path is the oracle-equivalent fallback."""
+    Tables arrive packed (fp32/bf16/int8 + per-tree scales, the shard's
+    slice of a ``ForestPack`` ring layout).  ``use_kernels=True`` runs the
+    Pallas tree-traversal PE (kernels/tree_traverse.py — packed node tables
+    VMEM-resident, dequantized in-kernel, batch tiled); the jnp path
+    dequantizes up front and is the oracle-equivalent fallback."""
     if use_kernels:
         from repro.kernels import ops
         b = x.shape[0]
@@ -66,20 +69,24 @@ def _eval_block_grove(feature, threshold, leaf, x, use_kernels: bool):
         while b % blk:
             blk -= 1
         return ops.tree_traverse(feature[0], threshold[0], leaf[0], x,
-                                 block_b=blk)
-    per_tree = _traverse(feature[0], threshold[0], leaf[0], x)   # [b, k, C]
+                                 thr_scale[0], leaf_scale[0], block_b=blk)
+    thr, lf = ref.dequantize_tables(threshold[0], leaf[0], thr_scale[0],
+                                    leaf_scale[0])
+    per_tree = _traverse(feature[0], thr, lf, x)                 # [b, k, C]
     return per_tree.mean(axis=1)
 
 
-def _eval_gather_grove(feature, threshold, leaf, x, local_idx):
+def _eval_gather_grove(feature, threshold, leaf, thr_scale, leaf_scale, x,
+                       local_idx):
     """Multiple groves per shard: per-lane gathered bundle eval.
 
     feature [m, k, nodes]; local_idx [b] selects each lane's grove — the
-    same gather+walk as ``grove_predict_proba``, restricted to this shard's
-    table slice."""
+    same packed gather + dequantize + walk as ``ForestPack.predict_proba``,
+    restricted to this shard's table slice."""
     feat = feature[local_idx]
-    thr = threshold[local_idx]
-    lf = leaf[local_idx]
+    thr, lf = ref.dequantize_tables(threshold[local_idx], leaf[local_idx],
+                                    thr_scale[local_idx],
+                                    leaf_scale[local_idx])
 
     def one(feat_b, thr_b, leaf_b, x_b):
         per_tree = _traverse(feat_b, thr_b, leaf_b, x_b[None])   # [1, k, C]
@@ -93,9 +100,10 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
                   use_kernels: bool = False):
     """Build the jitted ring evaluator for ``mesh`` (grove axis = ``axis``).
 
-    Returns fn(feature, threshold, leaf, x, start, thresh, budget)
-    -> (proba, hops) where the grove tables (strided-reordered, see
-    ``_grove_order``) and the batch are sharded over ``axis``, ``start`` is
+    Returns fn(feature, threshold, leaf, thr_scale, leaf_scale, x, start,
+    thresh, budget) -> (proba, hops) where the packed grove tables
+    (strided-reordered, see ``_grove_order``; fp32/bf16/int8 + per-tree
+    dequant scales) and the batch are sharded over ``axis``, ``start`` is
     each lane's global start grove (lane already placed on shard
     start % n_shards), and ``thresh`` / ``budget`` are per-lane [B] vectors
     (a lane's confidence gate and hop budget travel with its queue entry —
@@ -105,7 +113,8 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
     n_shards = mesh.shape[axis]
     assert n_groves % n_shards == 0, (n_groves, n_shards)
 
-    def ring(feature, threshold, leaf, x, start, thresh, budget):
+    def ring(feature, threshold, leaf, thr_scale, leaf_scale, x, start,
+             thresh, budget):
         # Per-shard views: feature [m, k, nodes], x [b, F], start [b].
         b = x.shape[0]
         m = feature.shape[0]
@@ -118,10 +127,12 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
         def body(carry, _):
             x, prob, hops, live, gidx, thresh, budget = carry
             if m == 1:
-                contrib = _eval_block_grove(feature, threshold, leaf, x,
+                contrib = _eval_block_grove(feature, threshold, leaf,
+                                            thr_scale, leaf_scale, x,
                                             use_kernels)
             else:
-                contrib = _eval_gather_grove(feature, threshold, leaf, x,
+                contrib = _eval_gather_grove(feature, threshold, leaf,
+                                             thr_scale, leaf_scale, x,
                                              gidx // n_shards)
             prob, hops, live, _ = ref.grove_aggregate_ref(
                 prob, contrib, live, hops, thresh)
@@ -149,7 +160,8 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
     gspec = P(axis)  # grove tables partitioned over the ring, dim 0
     fn = shard_map(
         ring, mesh=mesh,
-        in_specs=(gspec, gspec, gspec, P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(gspec, gspec, gspec, gspec, gspec,
+                  P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis)),
         check_rep=False,
     )
@@ -157,11 +169,24 @@ def make_fog_ring(mesh: Mesh, axis: str, max_hops: int, n_groves: int,
 
 
 def reorder_tables(gc: GroveCollection, n_shards: int):
-    """Strided-reordered (feature, threshold, leaf) ready to shard over the
-    ring — invariant per (gc, n_shards), so callers evaluating repeatedly
-    (FogEngine) compute it once."""
+    """Strided-reordered fp32 (feature, threshold, leaf) ready to shard over
+    the ring.  Legacy helper: packed callers get the same reorder — scales
+    included, any dtype — from ``ForestPack.layout("ring", n_shards)``
+    (cached per pack; the engine's TableCache serves it)."""
     order = _grove_order(gc.n_groves, n_shards)
     return gc.feature[order], gc.threshold[order], gc.leaf[order]
+
+
+def _normalize_tables(tables):
+    """Accept a legacy 3-tuple (fp32 tables) or a packed 5-tuple with
+    per-tree dequant scales; return the 5-tuple form."""
+    if len(tables) == 5:
+        return tables
+    feature, threshold, leaf = tables
+    G, k = feature.shape[:2]
+    return (feature, threshold, leaf,
+            jnp.ones((G, k, 1), jnp.float32),
+            jnp.ones((G, k, 1, 1), jnp.float32))
 
 
 def ring_eval(gc: GroveCollection, x: jax.Array, start: jax.Array,
@@ -174,8 +199,9 @@ def ring_eval(gc: GroveCollection, x: jax.Array, start: jax.Array,
     Lanes are placed on their start grove's shard, evaluated, and returned
     in the original batch order.  ``thresh`` and ``hop_budget`` may be
     scalars or per-lane [B] vectors (FogPolicy's mixed-QoS contract);
-    ``tables`` is an optional precomputed ``reorder_tables(gc, n_shards)``
-    result.
+    ``tables`` is an optional precomputed ring layout — either the legacy
+    fp32 3-tuple (``reorder_tables(gc, n_shards)``) or the packed 5-tuple
+    with dequant scales (``ForestPack.layout("ring", n_shards)``).
     """
     from repro.core.policy import NO_BUDGET
     B = x.shape[0]
@@ -194,8 +220,8 @@ def ring_eval(gc: GroveCollection, x: jax.Array, start: jax.Array,
                 f"start groves not stratified over {n_shards} shards "
                 f"(per-shard lane counts {counts.tolist()}); draw them "
                 "with engine.sample_starts(key, B, G, n_shards)")
-    feature, threshold, leaf = (tables if tables is not None
-                                else reorder_tables(gc, n_shards))
+    feature, threshold, leaf, thr_scale, leaf_scale = _normalize_tables(
+        tables if tables is not None else reorder_tables(gc, n_shards))
     thresh = jnp.broadcast_to(jnp.asarray(thresh, jnp.float32), (B,))
     if hop_budget is None:
         hop_budget = NO_BUDGET
@@ -204,7 +230,7 @@ def ring_eval(gc: GroveCollection, x: jax.Array, start: jax.Array,
     perm = jnp.argsort(start % n_shards, stable=True)
     inv = jnp.argsort(perm)
     fn = make_fog_ring(mesh, axis, max_hops, G, use_kernels=use_kernels)
-    proba, hops = fn(feature, threshold, leaf,
+    proba, hops = fn(feature, threshold, leaf, thr_scale, leaf_scale,
                      x[perm], start[perm], thresh[perm], budget[perm])
     return proba[inv], hops[inv]
 

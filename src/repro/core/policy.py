@@ -19,9 +19,15 @@ knob             meaning
 ``backend``      "reference" | "pallas" | "fused" | "ring"; None = engine
                  default
 ``block_b``      pallas batch tile; None = engine default
-``chunk_b``      batch chunking (VMEM bound); None = engine default
+``chunk_b``      batch chunking (VMEM bound): an int, ``"auto"`` (chunk only
+                 when the packed tables + batch footprint exceed the VMEM
+                 budget, sized from the pack's per-chunk footprint), or
+                 None = engine default
 ``lazy``         early-exit while_loop vs fixed-trip scan; None = engine
                  default
+``precision``    packed-table dtype: "fp32" | "bf16" | "int8" (int8 reads a
+                 quarter of the table bytes per hop and fits ~4x the field
+                 in VMEM); None = engine default
 ===============  ============================================================
 
 ``threshold`` and ``hop_budget`` are pytree *data* (they may be traced,
@@ -45,6 +51,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.forest.pack import PRECISIONS  # noqa: E402  (re-export: the
+# precision knob's domain lives with the packed-table layer)
+
 BACKENDS = ("reference", "pallas", "fused", "ring")
 
 # per-lane "no budget" sentinel: hops < NO_BUDGET is always true for any
@@ -54,7 +63,8 @@ NO_BUDGET = 2**31 - 1
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("threshold", "hop_budget"),
-         meta_fields=("max_hops", "backend", "block_b", "chunk_b", "lazy"))
+         meta_fields=("max_hops", "backend", "block_b", "chunk_b", "lazy",
+                      "precision"))
 @dataclasses.dataclass(frozen=True)
 class FogPolicy:
     """Every runtime knob of one Algorithm-2 evaluation, in one object."""
@@ -64,16 +74,24 @@ class FogPolicy:
     hop_budget: int | jax.Array | None = None
     backend: str | None = None
     block_b: int | None = None
-    chunk_b: int | None = None
+    chunk_b: int | str | None = None
     lazy: bool | None = None
+    precision: str | None = None
 
     def __post_init__(self):
         if self.backend is not None and self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"pick from {BACKENDS} (or None)")
+        if self.precision is not None and self.precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             f"pick from {PRECISIONS} (or None)")
         if self.max_hops is not None and self.max_hops < 1:
             raise ValueError(f"max_hops must be >= 1, got {self.max_hops}")
-        if self.chunk_b is not None and self.chunk_b < 1:
+        if isinstance(self.chunk_b, str):
+            if self.chunk_b != "auto":
+                raise ValueError(f"chunk_b must be an int, 'auto' or None, "
+                                 f"got {self.chunk_b!r}")
+        elif self.chunk_b is not None and self.chunk_b < 1:
             raise ValueError(f"chunk_b must be >= 1, got {self.chunk_b}")
         # a lane always spends its first hop before any gate can fire, so a
         # budget below 1 is unsatisfiable; validate when concrete (traced
@@ -101,9 +119,10 @@ class FogPolicy:
         """Names of the static knobs this policy sets (non-None).  Static
         knobs select compiled programs, so contexts that share one program
         across many policies (the serving scheduler) must reject them on
-        per-request policies."""
+        per-request policies — except ``precision``, which the scheduler
+        handles by dispatching one program per precision group."""
         return tuple(k for k in ("max_hops", "backend", "block_b",
-                                 "chunk_b", "lazy")
+                                 "chunk_b", "lazy", "precision")
                      if getattr(self, k) is not None)
 
     # -- lane-vector materialization (the engines' single entry) ---------

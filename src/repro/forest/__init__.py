@@ -1,8 +1,11 @@
 from repro.forest.tree import TensorForest, forest_proba, forest_votes, pad_forest
+from repro.forest.pack import (PACK_FORMAT_VERSION, PRECISION_BYTES,
+                               PRECISIONS, ForestPack)
 from repro.forest.train import TrainConfig, train_random_forest
 from repro.forest.rf import rf_predict, rf_predict_proba
 
 __all__ = [
     "TensorForest", "forest_proba", "forest_votes", "pad_forest",
+    "ForestPack", "PRECISIONS", "PRECISION_BYTES", "PACK_FORMAT_VERSION",
     "TrainConfig", "train_random_forest", "rf_predict", "rf_predict_proba",
 ]

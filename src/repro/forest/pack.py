@@ -1,0 +1,319 @@
+"""ForestPack — the one dtype-aware packed representation of grove tables.
+
+The paper's ASIC walks trees out of fixed-point SRAM: energy per
+classification is dominated by the table bytes read per hop, and the whole
+field of groves must fit the PE array's local memory.  This module gives the
+reproduction the same lever.  A :class:`ForestPack` is the single canonical
+packed form of a grove collection's node tables — dense head-stacked
+``[O, G, k, ...]`` feature/threshold/leaf arrays with a *dtype spec*:
+
+==========  ===============================================================
+precision   table storage
+==========  ===============================================================
+``fp32``    float32 thresholds/leaves (bit-identical to the unpacked path)
+``bf16``    bfloat16 thresholds/leaves, upcast to fp32 at compare time
+``int8``    symmetric per-tree-scaled int8 (the ``optim/compression.py``
+            scheme applied per tree) with fp32 scales; dequantized at load
+            time inside each kernel — int8 SRAM/VMEM reads, fp32
+            compare/accumulate
+==========  ===============================================================
+
+Every evaluation backend consumes a pack: the fused Pallas kernel pins the
+packed arrays whole in VMEM (int8 fits ~4x the field of fp32), the per-hop
+backends gather per-lane grove slices and dequantize in registers, and the
+mesh ring shards the packed tables.  Derived layouts — the ring's
+strided-reordered tables, the fused head-stacked view — are computed and
+cached *inside* the pack, so every consumer of a given (layout, dtype) pair
+shares one device copy.
+
+Packs persist: :meth:`save` writes a versioned ``.npz`` artifact (plus an
+arbitrary metadata dict for facade state) and :meth:`load` restores it,
+which is how ``FogClassifier.save``/``load`` round-trip trained models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.forest.tree import _traverse
+
+# the table dtype spec every layer shares (FogPolicy.precision's domain)
+PRECISIONS = ("fp32", "bf16", "int8")
+
+# bump when the .npz field layout changes; loaders reject newer artifacts
+PACK_FORMAT_VERSION = 1
+
+_TABLE_DTYPE = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+# threshold bytes per node entry, used by the energy model's byte accounting
+PRECISION_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+def _per_tree_scale(x: jax.Array, axes: tuple[int, ...],
+                    qmax: int) -> jax.Array:
+    """Symmetric per-tree int8 scale: amax over the tree's *finite* entries
+    / qmax (``compress_int8``'s grid, one scale per tree instead of per
+    tensor).  Non-finite entries are the complete-tree padding sentinels
+    (threshold +inf = "always go left") and get their own int8 code."""
+    finite = jnp.where(jnp.isfinite(x), jnp.abs(x), 0.0)
+    amax = jnp.max(finite, axis=axes, keepdims=True) + 1e-12
+    return (amax / qmax).astype(jnp.float32)
+
+
+def _quantize_leaf(x: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def _quantize_thr(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Thresholds use the [-126, 126] grid; ±127 encode the ±inf padding
+    sentinels so "always go left" nodes survive quantization exactly."""
+    q = jnp.clip(jnp.round(x / scale), -126, 126)
+    q = jnp.where(x == jnp.inf, 127, q)
+    q = jnp.where(x == -jnp.inf, -127, q)
+    return q.astype(jnp.int8)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ForestPack:
+    """Packed grove tables for ``O`` output heads x ``G`` groves x ``k`` trees.
+
+    feature    int32            [O, G, k, 2**d - 1]
+    threshold  fp32|bf16|int8   [O, G, k, 2**d - 1]
+    leaf       fp32|bf16|int8   [O, G, k, 2**d, C]
+    thr_scale  float32          [O, G, k, 1]       per-tree dequant scales
+    leaf_scale float32          [O, G, k, 1, 1]    (ones unless ``int8``)
+    """
+
+    feature: jax.Array
+    threshold: jax.Array
+    leaf: jax.Array
+    thr_scale: jax.Array
+    leaf_scale: jax.Array
+    precision: str = "fp32"
+    # derived-layout cache: (name, n_shards) -> table tuple.  Not pytree
+    # data — rebuilt lazily after any flatten/unflatten round trip.
+    _layouts: dict = dataclasses.field(default_factory=dict, init=False,
+                                       repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             f"pick from {PRECISIONS}")
+
+    # -- pytree plumbing (precision is static metadata) -------------------
+    def tree_flatten(self):
+        return ((self.feature, self.threshold, self.leaf,
+                 self.thr_scale, self.leaf_scale), self.precision)
+
+    @classmethod
+    def tree_unflatten(cls, precision, children):
+        return cls(*children, precision=precision)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_groves(cls, gc, precision: str = "fp32") -> "ForestPack":
+        """Pack a GroveCollection (or tuple of heads) at the given precision.
+
+        ``fp32`` stores the training arrays verbatim, so evaluation through
+        the pack is bit-identical to evaluating the groves directly.
+        """
+        gcs = tuple(gc) if isinstance(gc, (tuple, list)) else (gc,)
+        g0 = gcs[0]
+        for g in gcs[1:]:
+            if (g.feature.shape != g0.feature.shape
+                    or g.leaf.shape != g0.leaf.shape):
+                raise ValueError(
+                    "packed multi-output heads need identical table shapes "
+                    f"(one [O, G, k, ...] stack); got leaf {g.leaf.shape} "
+                    f"vs {g0.leaf.shape} — pad shallower heads to a common "
+                    "depth first (forest.tree.pad_forest grafts leaves "
+                    "without changing predictions)")
+        feature = jnp.stack([g.feature.astype(jnp.int32) for g in gcs])
+        thr = jnp.stack([g.threshold.astype(jnp.float32) for g in gcs])
+        leaf = jnp.stack([g.leaf.astype(jnp.float32) for g in gcs])
+        return cls._pack(feature, thr, leaf, precision)
+
+    @classmethod
+    def _pack(cls, feature, thr_f32, leaf_f32, precision: str) -> "ForestPack":
+        if precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {precision!r}; "
+                             f"pick from {PRECISIONS}")
+        O, G, k = feature.shape[:3]
+        ones_t = jnp.ones((O, G, k, 1), jnp.float32)
+        ones_l = jnp.ones((O, G, k, 1, 1), jnp.float32)
+        if precision == "int8":
+            ts = _per_tree_scale(thr_f32, axes=(3,), qmax=126)
+            ls = _per_tree_scale(leaf_f32, axes=(3, 4), qmax=127)
+            return cls(feature, _quantize_thr(thr_f32, ts),
+                       _quantize_leaf(leaf_f32, ls), ts, ls, precision)
+        dt = _TABLE_DTYPE[precision]
+        return cls(feature, thr_f32.astype(dt), leaf_f32.astype(dt),
+                   ones_t, ones_l, precision)
+
+    def astype(self, precision: str) -> "ForestPack":
+        """Repack at another precision (from the dequantized fp32 values)."""
+        if precision == self.precision:
+            return self
+        feat, thr, leaf = self.dequantize()
+        return ForestPack._pack(feat, thr, leaf, precision)
+
+    # -- shape & size accounting ------------------------------------------
+    @property
+    def n_heads(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def n_groves(self) -> int:
+        return self.feature.shape[1]
+
+    @property
+    def grove_size(self) -> int:
+        return self.feature.shape[2]
+
+    @property
+    def n_leaves(self) -> int:
+        return self.leaf.shape[3]
+
+    @property
+    def n_classes(self) -> int:
+        return self.leaf.shape[4]
+
+    @property
+    def depth(self) -> int:
+        return int(np.log2(self.n_leaves) + 0.5)
+
+    @property
+    def table_bytes(self) -> int:
+        """Total packed bytes an accelerator must hold resident (feature +
+        threshold + leaf + dequant scales) — the fused kernel's VMEM load."""
+        return int(self.feature.nbytes + self.threshold.nbytes
+                   + self.leaf.nbytes + self.thr_scale.nbytes
+                   + self.leaf_scale.nbytes)
+
+    # -- dequantization ----------------------------------------------------
+    def dequantize(self):
+        """(feature, threshold fp32, leaf fp32) — the exact values every
+        backend compares/accumulates (int8 -> q * scale; bf16 -> upcast)."""
+        from repro.kernels.ref import dequantize_tables
+        thr, leaf = dequantize_tables(self.threshold, self.leaf,
+                                      self.thr_scale, self.leaf_scale)
+        return self.feature, thr, leaf
+
+    def to_groves(self) -> tuple:
+        """Dequantized per-head GroveCollections (fp32 evaluation views)."""
+        from repro.core.grove import GroveCollection
+        feat, thr, leaf = self.dequantize()
+        return tuple(GroveCollection(feat[o], thr[o], leaf[o])
+                     for o in range(self.n_heads))
+
+    # -- derived layouts (cached) -----------------------------------------
+    def layout(self, name: str, n_shards: int = 1):
+        """Table tuple for one evaluation layout, computed once per pack.
+
+        ``"fused"``  head-stacked ``[O, G, ...]`` tables + scales — the
+                     canonical storage, served as-is.
+        ``"ring"``   head-0 tables strided-reordered for ``n_shards`` ring
+                     shards (shard s hosts groves ``{s, s+n, ...}``),
+                     scales reordered alongside.
+        """
+        key = (name, n_shards)
+        if key in self._layouts:
+            return self._layouts[key]
+        if name == "fused":
+            tables = (self.feature, self.threshold, self.leaf,
+                      self.thr_scale, self.leaf_scale)
+        elif name == "ring":
+            if self.n_heads != 1:
+                raise NotImplementedError("ring layout is single-output")
+            from repro.core.fog_ring import _grove_order
+            order = _grove_order(self.n_groves, n_shards)
+            tables = (self.feature[0][order], self.threshold[0][order],
+                      self.leaf[0][order], self.thr_scale[0][order],
+                      self.leaf_scale[0][order])
+        else:
+            raise ValueError(f"unknown layout {name!r}; "
+                             "pick 'fused' or 'ring'")
+        self._layouts[key] = tables
+        return tables
+
+    # -- per-lane gathered evaluation (reference / pallas contributions) ---
+    def predict_proba(self, head: int, g_idx: jax.Array,
+                      x: jax.Array) -> jax.Array:
+        """Grove(g_idx[b]).predict_prob(x[b]) against packed tables.
+
+        Gathers each lane's grove slice (packed loads), dequantizes the
+        gathered values to fp32, then runs the bundle walk — the packed
+        equivalent of :func:`repro.core.grove.grove_predict_proba`, and
+        bit-identical to it for an fp32 pack.
+        """
+        from repro.kernels.ref import dequantize_tables
+        feat = self.feature[head][g_idx]          # [B, k, nodes]
+        thr, leaf = dequantize_tables(
+            self.threshold[head][g_idx], self.leaf[head][g_idx],
+            self.thr_scale[head][g_idx], self.leaf_scale[head][g_idx])
+
+        def one(feat_b, thr_b, leaf_b, x_b):
+            per_tree = _traverse(feat_b, thr_b, leaf_b, x_b[None])  # [1,k,C]
+            return per_tree[0].mean(axis=0)
+
+        return jax.vmap(one)(feat, thr, leaf, x)
+
+    # -- persistence -------------------------------------------------------
+    def save(self, path, extra: dict | None = None) -> Path:
+        """Write a versioned ``.npz`` model artifact.
+
+        bf16 tables are stored as raw uint16 bits (npz has no bfloat16);
+        ``extra`` is an arbitrary JSON-serializable dict for facade state
+        (hyperparameters, class counts, ...), returned by ``load_with_meta``.
+        """
+        path = Path(path)
+        thr, leaf = np.asarray(self.threshold), np.asarray(self.leaf)
+        if self.precision == "bf16":
+            thr, leaf = thr.view(np.uint16), leaf.view(np.uint16)
+        with open(path, "wb") as f:
+            np.savez(
+                f,
+                format_version=np.int64(PACK_FORMAT_VERSION),
+                precision=np.str_(self.precision),
+                feature=np.asarray(self.feature),
+                threshold=thr,
+                leaf=leaf,
+                thr_scale=np.asarray(self.thr_scale),
+                leaf_scale=np.asarray(self.leaf_scale),
+                extra_json=np.str_(json.dumps(extra or {})),
+            )
+        return path
+
+    @classmethod
+    def load(cls, path) -> "ForestPack":
+        return cls.load_with_meta(path)[0]
+
+    @classmethod
+    def load_with_meta(cls, path) -> tuple["ForestPack", dict]:
+        """(pack, extra-metadata dict) from a ``save`` artifact."""
+        with np.load(Path(path), allow_pickle=False) as z:
+            if "format_version" not in z:
+                raise ValueError(
+                    f"{path} is not a ForestPack artifact (missing "
+                    "format_version)")
+            version = int(z["format_version"])
+            if version > PACK_FORMAT_VERSION:
+                raise ValueError(
+                    f"{path} is ForestPack format v{version}; this build "
+                    f"reads up to v{PACK_FORMAT_VERSION} — upgrade the code "
+                    "or re-export the model")
+            precision = str(z["precision"])
+            thr, leaf = z["threshold"], z["leaf"]
+            if precision == "bf16":
+                thr = thr.view(jnp.bfloat16.dtype)
+                leaf = leaf.view(jnp.bfloat16.dtype)
+            pack = cls(jnp.asarray(z["feature"]), jnp.asarray(thr),
+                       jnp.asarray(leaf), jnp.asarray(z["thr_scale"]),
+                       jnp.asarray(z["leaf_scale"]), precision)
+            extra = json.loads(str(z["extra_json"]))
+        return pack, extra

@@ -14,13 +14,19 @@ mask, per-lane ``[B]`` threshold and hop budget, rotation start
 loop exits as soon as every lane in the block is confident (or budgeted
 out), so an easy block touches VMEM tables for one hop and stops.
 
+Tables arrive packed (``forest.pack.ForestPack`` dtypes): fp32, bf16 or
+per-tree-scaled int8 with fp32 scales.  The resident tables and every load
+from them stay at the packed width — int8 pins ~4x the field of groves in
+the same VMEM — and only the *gathered* [BB, t] values are dequantized to
+fp32 for the compare/accumulate, mirroring the ASIC's fixed-point SRAM.
+
 Block sizing (mirrors tree_traverse.py): BB lanes x t trees x d levels of
-int32 index state is small; the resident tables dominate VMEM at
-``O * G * t * (2 * (2**d - 1) + 2**d * C) * 4`` bytes — the whole field of
-groves, not one grove, must fit.  The wrapper rejects working sets over the
-~16 MB v5e VMEM budget with a ValueError (no silent miscompile); shrink
-n_groves / grove_size / depth or fall back to the per-hop ``pallas``
-backend, which only pins one hop's state.
+int32 index state is small; the resident tables dominate VMEM at their
+packed byte size — the whole field of groves, not one grove, must fit.
+The wrapper rejects working sets over the ~16 MB v5e VMEM budget with a
+ValueError reporting required vs available bytes and the two remedies
+(``chunk_b=...`` batch slices, ``precision="int8"`` tables); the engine's
+``chunk_b="auto"`` applies the first remedy automatically.
 
 Batches need not align: the batch is dead-lane padded to the block boundary
 (padded lanes enter with live=0, so they never walk, never count hops, and
@@ -35,22 +41,53 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.tree_traverse import VMEM_BUDGET
+from repro.kernels.tree_traverse import (VMEM_BUDGET, _dequant_gathered,
+                                         vmem_error)
 
 
-def vmem_working_set(feature, threshold, leaf, *, block_b: int,
-                     n_features: int) -> int:
-    """Bytes resident in VMEM: every grove table + one batch block's state."""
+def vmem_table_bytes(feature, threshold, leaf, thr_scale, leaf_scale) -> int:
+    """Bytes of packed grove tables the kernel pins whole in VMEM."""
+    return int(feature.nbytes + threshold.nbytes + leaf.nbytes
+               + thr_scale.nbytes + leaf_scale.nbytes)
+
+
+def vmem_lane_bytes(*, n_heads: int, n_classes: int, grove_size: int,
+                    depth: int, n_features: int) -> int:
+    """Per-lane VMEM state: input row, [O, C] prob accumulators (x2 for the
+    normalized copy), walk indices, and the per-lane policy scalars."""
+    return (n_features + 2 * n_heads * n_classes
+            + grove_size * (depth + 2) + 4) * 4
+
+
+def vmem_working_set(feature, threshold, leaf, thr_scale, leaf_scale, *,
+                     block_b: int, n_features: int) -> int:
+    """Bytes resident in VMEM: every packed table + one batch block's state."""
     O, _, t, _ = feature.shape
     C = leaf.shape[4]
     depth = int(np.log2(leaf.shape[3]) + 0.5)
-    tables = (feature.size + threshold.size + leaf.size) * 4
-    block = block_b * (n_features + 2 * O * C + t * (depth + 2) + 4) * 4
+    tables = vmem_table_bytes(feature, threshold, leaf, thr_scale, leaf_scale)
+    block = block_b * vmem_lane_bytes(n_heads=O, n_classes=C, grove_size=t,
+                                      depth=depth, n_features=n_features)
     return tables + block
 
 
-def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, x_ref, start_ref,
-                      thresh_ref, budget_ref, live_ref, proba_out, hops_out,
+def fit_block_b(feature, threshold, leaf, thr_scale, leaf_scale, *,
+                n_features: int) -> int:
+    """Largest batch block that fits VMEM beside the packed tables (0 when
+    the tables alone are over budget).  ``FogEngine``'s auto-chunking sizes
+    its slices from this."""
+    O, _, t, _ = feature.shape
+    C = leaf.shape[4]
+    depth = int(np.log2(leaf.shape[3]) + 0.5)
+    tables = vmem_table_bytes(feature, threshold, leaf, thr_scale, leaf_scale)
+    lane = vmem_lane_bytes(n_heads=O, n_classes=C, grove_size=t, depth=depth,
+                           n_features=n_features)
+    return max(0, (VMEM_BUDGET - 1 - tables) // lane)
+
+
+def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, thr_scale_ref,
+                      leaf_scale_ref, x_ref, start_ref, thresh_ref,
+                      budget_ref, live_ref, proba_out, hops_out,
                       *, depth: int, max_hops: int, n_groves: int):
     x = x_ref[...]                       # [BB, F]
     start = start_ref[...]               # [BB]
@@ -58,8 +95,10 @@ def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, x_ref, start_ref,
     budget = budget_ref[...]             # [BB] per-lane hop cap
     live0 = live_ref[...]                # [BB] int8 (0 = dead-padded lane)
     feature = feature_ref[...]           # [O, G, t, nodes]
-    threshold = threshold_ref[...]
-    leaf = leaf_ref[...]                 # [O, G, t, L, C]
+    threshold = threshold_ref[...]       # packed dtype
+    leaf = leaf_ref[...]                 # [O, G, t, L, C] packed dtype
+    thr_scale = thr_scale_ref[...]       # [O, G, t, 1] fp32
+    leaf_scale = leaf_scale_ref[...]     # [O, G, t, 1, 1]
     O = feature.shape[0]
     t = feature.shape[2]
     L, C = leaf.shape[3], leaf.shape[4]
@@ -71,13 +110,17 @@ def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, x_ref, start_ref,
         # same d gather-compare levels as tree_traverse, but the grove is
         # selected per lane (g [BB]) instead of fixed for the launch
         gcol = g[:, None]
+        ts = thr_scale[o][gcol, trange, 0]                 # [BB, t]
         idx = jnp.zeros((BB, t), jnp.int32)
         for _ in range(depth):           # static unroll
             f = feature[o][gcol, trange, idx]              # [BB, t]
-            thr = threshold[o][gcol, trange, idx]          # [BB, t]
+            thr = _dequant_gathered(threshold[o][gcol, trange, idx], ts,
+                                    sentinel=True)
             xv = jnp.take_along_axis(x, f, axis=1)         # [BB, t]
             idx = 2 * idx + 1 + (xv > thr).astype(jnp.int32)
-        dists = leaf[o][gcol, trange, idx - (L - 1)]       # [BB, t, C]
+        dists = _dequant_gathered(
+            leaf[o][gcol, trange, idx - (L - 1)],          # [BB, t, C]
+            leaf_scale[o][gcol, trange, 0, 0][..., None])
         return dists.mean(axis=1)
 
     def body(state):
@@ -116,33 +159,45 @@ def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, x_ref, start_ref,
 
 def fused_fog_pallas(feature: jax.Array, threshold: jax.Array,
                      leaf: jax.Array, x: jax.Array, start: jax.Array,
-                     thresh: jax.Array, budget: jax.Array, *,
+                     thresh: jax.Array, budget: jax.Array,
+                     thr_scale: jax.Array | None = None,
+                     leaf_scale: jax.Array | None = None, *,
                      max_hops: int, block_b: int = 128,
                      interpret: bool = True):
-    """One-launch Algorithm-2 evaluation over head-stacked grove tables.
+    """One-launch Algorithm-2 evaluation over head-stacked packed tables.
 
-    feature   int32   [O, G, t, 2**d - 1]   all heads, all groves
-    threshold float32 [O, G, t, 2**d - 1]
-    leaf      float32 [O, G, t, 2**d, C]
-    x         float32 [B, F];  start int32 [B];  thresh float32 [B];
-    budget    int32   [B]
-    returns   (proba float32 [B, O, C] hop-normalized, hops int32 [B])
+    feature    int32           [O, G, t, 2**d - 1]   all heads, all groves
+    threshold  fp32|bf16|int8  [O, G, t, 2**d - 1]
+    leaf       fp32|bf16|int8  [O, G, t, 2**d, C]
+    thr_scale  float32         [O, G, t, 1]      per-tree dequant scales
+    leaf_scale float32         [O, G, t, 1, 1]   (default ones)
+    x          float32 [B, F];  start int32 [B];  thresh float32 [B];
+    budget     int32   [B]
+    returns    (proba float32 [B, O, C] hop-normalized, hops int32 [B])
     """
     B, F = x.shape
     O, G, t, _ = feature.shape
     L, C = leaf.shape[3], leaf.shape[4]
     depth = int(np.log2(L) + 0.5)
     block_b = min(block_b, B)
+    if thr_scale is None:
+        thr_scale = jnp.ones((O, G, t, 1), jnp.float32)
+    if leaf_scale is None:
+        leaf_scale = jnp.ones((O, G, t, 1, 1), jnp.float32)
 
-    ws = vmem_working_set(feature, threshold, leaf, block_b=block_b,
-                          n_features=F)
+    ws = vmem_working_set(feature, threshold, leaf, thr_scale, leaf_scale,
+                          block_b=block_b, n_features=F)
     if ws >= VMEM_BUDGET:
-        raise ValueError(
-            f"fused FoG working set {ws} B ({O} heads x {G} groves x {t} "
-            f"trees, depth {depth}, {C} classes, block_b={block_b}) exceeds "
-            f"the ~16 MB VMEM budget ({VMEM_BUDGET} B usable); shrink "
-            "n_groves/grove_size/depth or block_b, or use the per-hop "
-            "'pallas' backend (which pins only one hop's state)")
+        tables = vmem_table_bytes(feature, threshold, leaf, thr_scale,
+                                  leaf_scale)
+        raise vmem_error(
+            "fused FoG", ws,
+            f"{O} heads x {G} groves x {t} trees, depth {depth}, {C} "
+            f"classes, {threshold.dtype} tables = {tables} B resident + "
+            f"block_b={block_b} batch state = {ws - tables} B; the largest "
+            f"batch block fitting beside these tables is "
+            f"{fit_block_b(feature, threshold, leaf, thr_scale, leaf_scale, n_features=F)}",
+            chunkable=True)
 
     pad = (-B) % block_b
     live8 = jnp.ones((B,), jnp.int8)
@@ -166,6 +221,8 @@ def fused_fog_pallas(feature: jax.Array, threshold: jax.Array,
             pl.BlockSpec(feature.shape, whole4),    # tables: whole, VMEM-pinned
             pl.BlockSpec(threshold.shape, whole4),
             pl.BlockSpec(leaf.shape, whole5),
+            pl.BlockSpec(thr_scale.shape, whole4),
+            pl.BlockSpec(leaf_scale.shape, whole5),
             pl.BlockSpec((block_b, F), row),        # batch: tiled
             pl.BlockSpec((block_b,), vec),
             pl.BlockSpec((block_b,), vec),
@@ -181,7 +238,8 @@ def fused_fog_pallas(feature: jax.Array, threshold: jax.Array,
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(feature, threshold, leaf, x, start, thresh, budget, live8)
+    )(feature, threshold, leaf, thr_scale, leaf_scale, x, start, thresh,
+      budget, live8)
     if pad:
         proba, hops = proba[:-pad], hops[:-pad]
     return proba, hops

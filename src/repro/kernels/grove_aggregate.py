@@ -9,6 +9,13 @@ The confidence gate takes a per-lane threshold vector: a scalar threshold is
 broadcast to ``[B]`` before the call, so mixed-QoS batches (every lane with
 its own accuracy/energy trade-off, ``FogPolicy.threshold`` as a vector) run
 the same kernel at identical cost.
+
+Precision contract: grove tables are packed (fp32/bf16/int8 — see
+``forest.pack.ForestPack``) and the per-hop grove walk dequantizes its
+*contribution* rows to fp32 before this kernel sees them, so the
+accumulate/normalize/MaxDiff state here is always fp32 regardless of the
+table dtype ("int8 loads, fp32 compare/accumulate").  The wrapper enforces
+that contract rather than silently accumulating in a narrow dtype.
 """
 from __future__ import annotations
 
@@ -55,6 +62,11 @@ def grove_aggregate_pallas(prob_acc: jax.Array, contrib: jax.Array,
     margins never gate anything; the thresh vector pads along with them)
     and the outputs are sliced back to ``B``.
     """
+    if jnp.issubdtype(contrib.dtype, jnp.integer):
+        raise ValueError(
+            f"grove_aggregate accumulates in floating point; dequantize "
+            f"packed contributions before the hop update (got "
+            f"{contrib.dtype})")
     B, C = prob_acc.shape
     block_b = min(block_b, B)
     pad = (-B) % block_b

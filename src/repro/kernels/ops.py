@@ -23,9 +23,13 @@ def _interpret() -> bool:
 
 
 @partial(jax.jit, static_argnames=("block_b",))
-def tree_traverse(feature, threshold, leaf, x, *, block_b: int = 128):
-    """Grove bundle eval [B,F] -> [B,C] (Pallas; oracle: ref.tree_traverse_ref)."""
+def tree_traverse(feature, threshold, leaf, x, thr_scale=None,
+                  leaf_scale=None, *, block_b: int = 128):
+    """Grove bundle eval [B,F] -> [B,C] over packed fp32/bf16/int8 tables
+    (Pallas; oracle: ref.tree_traverse_ref).  int8 tables stay int8 in
+    VMEM; gathered values dequantize in-kernel via the per-tree scales."""
     return tree_traverse_pallas(feature, threshold, leaf, x,
+                                thr_scale, leaf_scale,
                                 block_b=block_b, interpret=_interpret())
 
 
@@ -44,14 +48,18 @@ def grove_aggregate(prob_acc, contrib, live, hops, thresh, *, block_b: int = 256
 
 
 @partial(jax.jit, static_argnames=("max_hops", "block_b"))
-def fused_fog(feature, threshold, leaf, x, start, thresh, budget, *,
+def fused_fog(feature, threshold, leaf, x, start, thresh, budget,
+              thr_scale=None, leaf_scale=None, *,
               max_hops: int, block_b: int = 128):
-    """Whole Algorithm-2 loop in ONE kernel launch: head-stacked grove
-    tables [O,G,t,...] pinned in VMEM, per-lane thresh/budget, early-exit
-    while_loop inside the kernel.  Returns (proba [B,O,C], hops [B]);
-    oracle: the FogEngine reference backend."""
+    """Whole Algorithm-2 loop in ONE kernel launch: head-stacked packed
+    grove tables [O,G,t,...] pinned in VMEM at their packed width (fp32/
+    bf16/int8 — int8 fits ~4x the field), per-lane thresh/budget, early-
+    exit while_loop inside the kernel, gathered values dequantized in-
+    register.  Returns (proba [B,O,C], hops [B]); oracle: the FogEngine
+    reference backend over the same pack."""
     return fused_fog_pallas(feature, threshold, leaf, x, start, thresh,
-                            budget, max_hops=max_hops, block_b=block_b,
+                            budget, thr_scale, leaf_scale,
+                            max_hops=max_hops, block_b=block_b,
                             interpret=_interpret())
 
 

@@ -6,16 +6,50 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def dequantize_tables(threshold: jax.Array, leaf: jax.Array,
+                      thr_scale: jax.Array | None = None,
+                      leaf_scale: jax.Array | None = None):
+    """Packed table values -> the fp32 values every backend compares against.
+
+    The one dequantization rule shared by the jnp reference paths and the
+    Pallas kernels (which apply it to *gathered* elements in-register):
+    fp32 passes through, bf16 upcasts exactly, int8 multiplies by its
+    per-tree fp32 scale.  Scales broadcast over the trailing node/leaf axes
+    (``[..., k, 1]`` against ``[..., k, N]``).
+    """
+    quantized = threshold.dtype == jnp.int8
+    thr = threshold.astype(jnp.float32)
+    lf = leaf.astype(jnp.float32)
+    if quantized:
+        if thr_scale is None or leaf_scale is None:
+            raise ValueError("int8 tables need thr_scale/leaf_scale")
+        thr = thr * thr_scale
+        # ±127 are the padding sentinels (±inf thresholds, "always go
+        # left" complete-tree nodes) — restore them exactly
+        thr = jnp.where(threshold == 127, jnp.inf, thr)
+        thr = jnp.where(threshold == -127, -jnp.inf, thr)
+        lf = lf * leaf_scale
+    return thr, lf
+
+
 def tree_traverse_ref(feature: jax.Array, threshold: jax.Array,
-                      leaf: jax.Array, x: jax.Array) -> jax.Array:
+                      leaf: jax.Array, x: jax.Array,
+                      thr_scale: jax.Array | None = None,
+                      leaf_scale: jax.Array | None = None) -> jax.Array:
     """Grove bundle evaluation: mean leaf distribution over trees.
 
-    feature   int32   [t, 2**d - 1]
-    threshold float32 [t, 2**d - 1]
-    leaf      float32 [t, 2**d, C]
-    x         float32 [B, F]
-    returns   float32 [B, C]
+    feature   int32           [t, 2**d - 1]
+    threshold fp32|bf16|int8  [t, 2**d - 1]
+    leaf      fp32|bf16|int8  [t, 2**d, C]
+    x         float32         [B, F]
+    returns   float32         [B, C]
+
+    Packed (bf16/int8) tables are dequantized up front — the oracle for the
+    Pallas kernel's in-register dequantize of gathered values (elementwise,
+    so the fp32 compare/accumulate sees bitwise-identical numbers).
     """
+    threshold, leaf = dequantize_tables(threshold, leaf, thr_scale,
+                                        leaf_scale)
     depth = int(np.log2(leaf.shape[1]) + 0.5)
     B = x.shape[0]
     t = feature.shape[0]

@@ -9,9 +9,17 @@ block — VPU work, no MXU — so the kernel is gather-throughput-bound, and
 keeping the node tables in VMEM (vs HBM re-reads per level) is the entire
 win: d x 2 words/lane/level come from VMEM instead of HBM.
 
+Tables arrive packed (``forest.pack.ForestPack`` dtypes): fp32, bf16 or
+per-tree-scaled int8 with fp32 scales.  Quantized values are dequantized
+*in-kernel, after the gather* — the VMEM-resident table and every load from
+it stay at the packed width (int8 reads a quarter of the fp32 bytes per
+node), and only the gathered [BB, t] values are widened to fp32 for the
+compare, mirroring the ASIC's fixed-point SRAM + fp compare split.
+
 Block sizing: BB=128 lanes x t trees x (d levels) int32 index state fits
-easily; leaf tables dominate VMEM at t * 2**d * C * 4 bytes — the wrapper
-asserts the working set stays under the ~16 MB v5e VMEM budget.
+easily; leaf tables dominate VMEM at t * 2**d * C * itemsize bytes — the
+wrapper rejects working sets over the ~16 MB v5e VMEM budget with a
+ValueError that reports required vs available bytes and the remedies.
 """
 from __future__ import annotations
 
@@ -27,50 +35,95 @@ from jax.experimental import pallas as pl
 VMEM_BUDGET = 14 * 2**20
 
 
-def _tree_traverse_kernel(feature_ref, threshold_ref, leaf_ref, x_ref,
+def vmem_error(kind: str, required: int, detail: str,
+               chunkable: bool = False) -> ValueError:
+    """The shared over-budget rejection: required vs available bytes, plus
+    the remedies.  ``chunkable`` names auto-chunking only where the engine
+    actually applies it (the fused backend); the per-grove kernel's budget
+    is dominated by its resident tables, which chunking cannot shrink."""
+    chunk = ("evaluate in slices that fit (FogPolicy(chunk_b=\"auto\") "
+             "sizes them from the pack footprint), or " if chunkable else "")
+    return ValueError(
+        f"{kind} VMEM working set is {required} B ({required / 2**20:.1f} "
+        f"MiB) but only {VMEM_BUDGET} B ({VMEM_BUDGET / 2**20:.1f} MiB) is "
+        f"usable ({detail}); remedies: {chunk}shrink the resident tables "
+        "with precision=\"int8\" (~4x smaller than fp32); shrinking "
+        "block_b, n_groves, grove_size or depth also helps")
+
+
+def _dequant_gathered(vals, scale_rows, sentinel: bool = False):
+    """Widen gathered packed values to fp32 (int8: multiply by the gathered
+    per-tree scale; fp32/bf16: exact upcast).  Static on the table dtype.
+    ``sentinel`` restores the threshold padding codes (int8 ±127 -> ±inf,
+    the complete-tree "always go left" nodes — see forest.pack)."""
+    out = vals.astype(jnp.float32)
+    if vals.dtype == jnp.int8:
+        out = out * scale_rows
+        if sentinel:
+            out = jnp.where(vals == 127, jnp.inf, out)
+            out = jnp.where(vals == -127, -jnp.inf, out)
+    return out
+
+
+def _tree_traverse_kernel(feature_ref, threshold_ref, leaf_ref,
+                          thr_scale_ref, leaf_scale_ref, x_ref,
                           out_ref, *, depth: int):
     x = x_ref[...]                      # [BB, F]
     feature = feature_ref[...]          # [t, nodes]
-    threshold = threshold_ref[...]      # [t, nodes]
-    leaf = leaf_ref[...]                # [t, L, C]
+    threshold = threshold_ref[...]      # [t, nodes] packed dtype
+    leaf = leaf_ref[...]                # [t, L, C]  packed dtype
+    thr_scale = thr_scale_ref[...]      # [t, 1] fp32 per-tree scales
+    leaf_scale = leaf_scale_ref[...]    # [t, 1, 1]
     t = feature.shape[0]
     BB = x.shape[0]
 
     idx = jnp.zeros((BB, t), jnp.int32)
     trange = jax.lax.broadcasted_iota(jnp.int32, (BB, t), 1)
+    ts_rows = thr_scale[:, 0][None, :]                  # [1, t] broadcast
     for _ in range(depth):              # static unroll: d gather-compare levels
         f = feature[trange, idx]                        # [BB, t]
-        thr = threshold[trange, idx]                    # [BB, t]
+        thr = _dequant_gathered(threshold[trange, idx], ts_rows,
+                                sentinel=True)
         xv = jnp.take_along_axis(x, f, axis=1)          # [BB, t]
         idx = 2 * idx + 1 + (xv > thr).astype(jnp.int32)
     leaf_idx = idx - (leaf.shape[1] - 1)
-    dists = leaf[trange, leaf_idx]                      # [BB, t, C]
+    dists = _dequant_gathered(leaf[trange, leaf_idx],   # [BB, t, C]
+                              leaf_scale[:, 0, 0][None, :, None])
     out_ref[...] = dists.mean(axis=1)
 
 
 def tree_traverse_pallas(feature: jax.Array, threshold: jax.Array,
                          leaf: jax.Array, x: jax.Array,
+                         thr_scale: jax.Array | None = None,
+                         leaf_scale: jax.Array | None = None,
                          *, block_b: int = 128,
                          interpret: bool = True) -> jax.Array:
     """[t,N] x [t,N] x [t,L,C] x [B,F] -> [B,C] grove probabilities.
 
-    ``B`` need not divide ``block_b``: the batch is dead-padded with zero
-    rows up to the next block boundary (the padded walks are discarded) and
-    the output is sliced back to ``B``.
+    ``threshold``/``leaf`` may be fp32, bf16 or int8 (then ``thr_scale``
+    [t,1] / ``leaf_scale`` [t,1,1] carry the per-tree dequant scales;
+    omitted scales default to ones).  ``B`` need not divide ``block_b``:
+    the batch is dead-padded with zero rows up to the next block boundary
+    (the padded walks are discarded) and the output is sliced back to ``B``.
     """
     B, F = x.shape
     t, L, C = leaf.shape
     depth = int(np.log2(L) + 0.5)
     block_b = min(block_b, B)
+    if thr_scale is None:
+        thr_scale = jnp.ones((t, 1), jnp.float32)
+    if leaf_scale is None:
+        leaf_scale = jnp.ones((t, 1, 1), jnp.float32)
 
-    # VMEM budget check (v5e ~16MB usable): tables + one batch block
-    tables = (feature.size + threshold.size + leaf.size) * 4
+    tables = int(feature.nbytes + threshold.nbytes + leaf.nbytes
+                 + thr_scale.nbytes + leaf_scale.nbytes)
     block = block_b * (F + C + t * (depth + 2)) * 4
     if tables + block >= VMEM_BUDGET:
-        raise ValueError(
-            f"grove working set {tables + block} B ({t} trees, depth "
-            f"{depth}, {C} classes, block_b={block_b}) exceeds the ~16 MB "
-            "VMEM budget; shrink grove_size/depth or block_b")
+        raise vmem_error(
+            "grove", tables + block,
+            f"{t} trees, depth {depth}, {C} classes, "
+            f"{threshold.dtype} tables = {tables} B resident + "
+            f"block_b={block_b} batch state = {block} B")
 
     pad = (-B) % block_b
     if pad:  # dead-pad unaligned batches; padded rows are sliced off below
@@ -85,10 +138,12 @@ def tree_traverse_pallas(feature: jax.Array, threshold: jax.Array,
             pl.BlockSpec(feature.shape, lambda i: (0, 0)),    # tables: whole, VMEM-pinned
             pl.BlockSpec(threshold.shape, lambda i: (0, 0)),
             pl.BlockSpec(leaf.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(thr_scale.shape, lambda i: (0, 0)),
+            pl.BlockSpec(leaf_scale.shape, lambda i: (0, 0, 0)),
             pl.BlockSpec((block_b, F), lambda i: (i, 0)),     # batch: tiled
         ],
         out_specs=pl.BlockSpec((block_b, C), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
-    )(feature, threshold, leaf, x)
+    )(feature, threshold, leaf, thr_scale, leaf_scale, x)
     return out[:-pad] if pad else out

@@ -39,6 +39,14 @@ def main() -> None:
                     help="engine backend for the exit gate (kernel-flavored "
                          "choices route the pallas top-2 margin kernel)")
     ap.add_argument("--thresh", type=float, default=0.3)
+    ap.add_argument("--fog-precision", default=None,
+                    choices=["fp32", "bf16", "int8"],
+                    help="default FogPolicy precision stamped on the "
+                         "batcher (forest-backed decode_fns read it to pick "
+                         "their packed tables; this LM layer-grove gate has "
+                         "no forest tables and ignores it); requests may "
+                         "override per-policy — the batcher dispatches one "
+                         "program per precision group")
     ap.add_argument("--hop-budget", type=int, default=None,
                     help="per-request grove budget (anytime decoding cap)")
     ap.add_argument("--seed", type=int, default=0)
@@ -70,7 +78,8 @@ def main() -> None:
 
     default_policy = FogPolicy(threshold=args.thresh,
                                hop_budget=args.hop_budget,
-                               backend=args.fog_backend)
+                               backend=args.fog_backend,
+                               precision=args.fog_precision)
 
     def decode_fn(tokens, lengths, policy):
         # policy: the batcher's per-lane assembly of each slot's QoS contract

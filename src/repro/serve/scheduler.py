@@ -14,6 +14,15 @@ policy (:func:`repro.core.policy.assemble`) and hands it to a policy-aware
 ``decode_fn(tokens, lengths, policy)`` — one continuous batch, one compiled
 program, every lane buying its own accuracy/energy point.  Legacy two-arg
 ``decode_fn(tokens, lengths)`` callables keep working unchanged.
+
+Mixed-precision serving: a request's policy may additionally set
+``precision`` ("fp32" | "bf16" | "int8" packed tables).  Precision selects
+a compiled program, so it cannot ride the per-lane vectors; instead the
+scheduler buckets the step's slots by precision and dispatches ``decode_fn``
+once per distinct precision present (each call still carries the full
+per-lane threshold/budget vectors; each slot's outputs are harvested from
+its own precision's call).  A homogeneous batch — the common case — still
+costs exactly one dispatch.
 """
 from __future__ import annotations
 
@@ -100,13 +109,17 @@ class ContinuousBatcher:
                 raise ValueError(
                     f"request {req.rid}: per-request policies are scalar "
                     "contracts; the batcher assembles the per-lane vectors")
-            if req.policy.static_overrides:
+            # precision is static too, but the batcher handles it by
+            # dispatching one program per precision group (see step())
+            rejected = tuple(k for k in req.policy.static_overrides
+                             if k != "precision")
+            if rejected:
                 raise ValueError(
                     f"request {req.rid}: policy sets static knobs "
-                    f"{req.policy.static_overrides} — those select the "
+                    f"{rejected} — those select the "
                     "compiled program and cannot vary per request; set "
                     "them on the batcher's default_policy (per-request "
-                    "knobs are threshold and hop_budget)")
+                    "knobs are threshold, hop_budget and precision)")
         self.queue.append(req)
 
     def _refill(self) -> None:
@@ -128,6 +141,24 @@ class ContinuousBatcher:
              for s in self.slots],
             default=self.default_policy)
 
+    def _precision_groups(self) -> dict:
+        """Slot indices keyed by requested precision (None = the default
+        program).  One decode dispatch per key — see the module docstring."""
+        groups: dict[str | None, list[int]] = {}
+        for i, s in enumerate(self.slots):
+            p = (s.request.policy.precision
+                 if s.request is not None and s.request.policy is not None
+                 else None)
+            groups.setdefault(p, []).append(i)
+        none_idxs = groups.get(None)
+        if none_idxs is not None and len(groups) > 1 and all(
+                self.slots[i].request is None for i in none_idxs):
+            # lanes in the None group are all empty: don't spend a dispatch
+            # on them, fold into an arbitrary real group (outputs discarded)
+            groups.pop(None)
+            next(iter(groups.values())).extend(none_idxs)
+        return groups
+
     def step(self) -> int:
         """One decode step across all active slots.  Returns #active."""
         self._refill()
@@ -142,9 +173,24 @@ class ContinuousBatcher:
                 tokens[i] = last
                 lengths[i] = s.length
         if self._policy_aware:
-            logits, hops = self.decode_fn(jnp.asarray(tokens),
-                                          jnp.asarray(lengths),
-                                          self.lane_policy())
+            base = self.lane_policy()
+            groups = self._precision_groups()
+            n = len(self.slots)
+            logits, hops = None, None
+            for prec, idxs in groups.items():
+                pol = base if prec is None else base.replace(precision=prec)
+                lg, hp = self.decode_fn(jnp.asarray(tokens),
+                                        jnp.asarray(lengths), pol)
+                if len(groups) == 1:
+                    logits, hops = lg, hp
+                    break
+                if logits is None:
+                    logits = np.zeros(np.shape(lg), np.float32)
+                    hops = None if hp is None else np.zeros((n,), np.int64)
+                idxs = np.asarray(idxs)
+                logits[idxs] = np.asarray(lg)[idxs]
+                if hp is not None:
+                    hops[idxs] = np.asarray(hp)[idxs]
         else:
             logits, hops = self.decode_fn(jnp.asarray(tokens),
                                           jnp.asarray(lengths))

@@ -12,6 +12,13 @@ FogEngine construction, and policy-driven evaluation:
     cheap = clf.predict(X_test, policy=FogPolicy(threshold=0.1))
     print(clf.profile())    # mean hops + nJ/classification accounting
 
+Models persist as versioned ForestPack artifacts and quantize in place:
+
+    clf.quantize("int8")                 # 4x smaller tables, int8 SRAM reads
+    clf.save("model.npz")                # packed tables + facade state
+    clf2 = FogClassifier.load("model.npz")
+    clf2.predict(X_test)                 # identical labels, no retraining
+
 The estimator follows sklearn conventions — ``fit`` returns ``self``,
 fitted attributes carry a trailing underscore, ``get_params`` /
 ``set_params`` support grid searches — without importing sklearn (the
@@ -35,11 +42,12 @@ import numpy as np
 from repro.core.energy import fog_energy
 from repro.core.engine import FogEngine, FogResult
 from repro.core.grove import split
-from repro.core.policy import FogPolicy
+from repro.core.policy import PRECISIONS, FogPolicy
+from repro.forest.pack import ForestPack
 from repro.forest.train import TrainConfig, train_random_forest
 
 _PARAMS = ("n_trees", "grove_size", "max_depth", "policy", "backend", "seed",
-           "train_cfg")
+           "train_cfg", "precision")
 
 
 class FogClassifier:
@@ -56,12 +64,15 @@ class FogClassifier:
                 (fixed so repeated predictions are deterministic)
     train_cfg:  optional full :class:`TrainConfig`; n_trees/max_depth/seed
                 above override its corresponding fields
+    precision:  default packed-table dtype ("fp32" | "bf16" | "int8") —
+                see :meth:`quantize`; per-call policies may still override
     """
 
     def __init__(self, n_trees: int = 16, grove_size: int = 2,
                  max_depth: int = 8, *, policy: FogPolicy | None = None,
                  backend: str = "reference", seed: int = 0,
-                 train_cfg: TrainConfig | None = None):
+                 train_cfg: TrainConfig | None = None,
+                 precision: str = "fp32"):
         self.n_trees = n_trees
         self.grove_size = grove_size
         self.max_depth = max_depth
@@ -69,6 +80,7 @@ class FogClassifier:
         self.backend = backend
         self.seed = seed
         self.train_cfg = train_cfg
+        self.precision = precision
 
     # -- sklearn param protocol ------------------------------------------
     def get_params(self, deep: bool = True) -> dict:
@@ -81,6 +93,36 @@ class FogClassifier:
                                  f"valid: {_PARAMS}")
             setattr(self, k, v)
         return self
+
+    # -- fitted artifacts --------------------------------------------------
+    # gc_/forest_ are properties so a model loaded from a packed artifact
+    # can serve without ever dequantizing: the fp32 views realize only on
+    # first access (fit() assigns them directly through the setters).
+    @property
+    def gc_(self):
+        gc = getattr(self, "_gc", None)
+        if gc is None:
+            if not hasattr(self, "engine_"):
+                raise AttributeError("gc_ (classifier is not fitted)")
+            gc = self._gc = self.engine_.gcs[0]
+        return gc
+
+    @gc_.setter
+    def gc_(self, value):
+        self._gc = value
+
+    @property
+    def forest_(self):
+        forest = getattr(self, "_forest", None)
+        if forest is None:
+            if not hasattr(self, "engine_"):
+                raise AttributeError("forest_ (classifier is not fitted)")
+            forest = self._forest = self.gc_.as_forest()
+        return forest
+
+    @forest_.setter
+    def forest_(self, value):
+        self._forest = value
 
     # -- estimator API ----------------------------------------------------
     def fit(self, X, y, n_classes: int | None = None) -> "FogClassifier":
@@ -100,10 +142,11 @@ class FogClassifier:
         self.forest_ = train_random_forest(X, y, n_classes, cfg)
         self.gc_ = split(self.forest_, self.grove_size)
         self.engine_ = FogEngine(self.gc_, backend=self.backend,
-                                 policy=self.policy)
+                                 policy=self.policy,
+                                 precision=self.precision)
         self.n_classes_ = n_classes
         self.n_features_in_ = X.shape[1]
-        self._hops: list[np.ndarray] = []
+        self._hops: list[tuple[np.ndarray, str]] = []
         return self
 
     def _check_fitted(self) -> None:
@@ -123,7 +166,10 @@ class FogClassifier:
             key = jax.random.key(self.seed)
         res = self.engine_.eval(jnp.asarray(X, jnp.float32), key,
                                 policy=policy)
-        self._hops.append(np.asarray(res.hops))
+        # record the precision each batch actually ran at, so profile()'s
+        # per-node byte accounting matches the evaluation
+        self._hops.append((np.asarray(res.hops),
+                           self.engine_.resolve(policy).precision))
         return res
 
     def predict(self, X, *, policy: FogPolicy | None = None,
@@ -156,15 +202,21 @@ class FogClassifier:
             return {"n_classified": 0, "mean_hops": 0.0,
                     "energy_nj_per_classification": 0.0,
                     "total_energy_nj": 0.0, "hops_histogram": {}}
-        hops = np.concatenate(self._hops)
-        rep = fog_energy(hops, self.gc_.grove_size, self.gc_.depth,
-                         self.gc_.n_classes, self.n_features_in_)
+        hops = np.concatenate([h for h, _ in self._hops])
+        # energy accumulates per (batch, precision): an int8 batch reads
+        # fewer SRAM bytes per node than an fp32 one of the same hops.
+        # Geometry comes from the engine's pack (never dequantizes).
+        pk = self.engine_.tables.pack(self.engine_.precision)
+        total_pj = sum(
+            fog_energy(h, pk.grove_size, pk.depth, pk.n_classes,
+                       self.n_features_in_, precision=prec).total_pj
+            for h, prec in self._hops)
         vals, counts = np.unique(hops, return_counts=True)
         return {
             "n_classified": int(hops.size),
             "mean_hops": float(hops.mean()),
-            "energy_nj_per_classification": rep.per_example_nj,
-            "total_energy_nj": rep.total_pj * 1e-3,
+            "energy_nj_per_classification": total_pj * 1e-3 / hops.size,
+            "total_energy_nj": total_pj * 1e-3,
             "hops_histogram": {int(v): int(c) for v, c in zip(vals, counts)},
         }
 
@@ -173,10 +225,103 @@ class FogClassifier:
         self._check_fitted()
         self._hops.clear()
 
+    # -- precision & persistence ------------------------------------------
+    def quantize(self, precision: str = "int8") -> "FogClassifier":
+        """Switch the default evaluation precision (no retraining).
+
+        The engine's TableCache packs the trained tables at ``precision``
+        lazily; subsequent ``predict``/``save`` calls use it by default.
+        A default policy that pins its own ``precision`` is re-pinned too
+        (the policy knob outranks the engine default, so leaving it would
+        silently keep the old dtype).  Returns ``self`` (sklearn chaining
+        idiom).
+        """
+        self._check_fitted()
+        if precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {precision!r}; "
+                             f"pick from {PRECISIONS}")
+        self.precision = precision
+        self.engine_.precision = precision
+        if self.policy.precision is not None:
+            self.policy = self.policy.replace(precision=precision)
+            self.engine_.policy = self.policy
+        return self
+
+    def save(self, path, *, precision: str | None = None):
+        """Persist the fitted model as a versioned ForestPack ``.npz``.
+
+        The artifact holds the packed tables at the classifier's default
+        precision (or an explicit ``precision=``) plus the facade state
+        needed to reconstruct the estimator — including the default
+        FogPolicy, so the loaded model predicts under the same knobs;
+        ``FogClassifier.load`` round-trips it bit-exactly at the saved
+        precision.  (``train_cfg`` is training-time-only state and is not
+        persisted.)  A per-lane default policy is batch-shaped and cannot
+        travel with the model.
+        """
+        self._check_fitted()
+        if self.policy.per_lane:
+            raise ValueError(
+                "cannot save a per-lane default policy (its threshold/"
+                "hop_budget vectors are batch-shaped); set scalar knobs on "
+                "the default policy and pass per-lane vectors per call")
+        prec = precision if precision is not None else self.precision
+        pack = self.engine_.tables.pack(prec)
+
+        def scalar(v):
+            return v if v is None else np.asarray(v).item()
+
+        extra = {
+            "estimator": "FogClassifier",
+            "n_trees": self.n_trees, "grove_size": self.grove_size,
+            "max_depth": self.max_depth, "backend": self.backend,
+            "seed": self.seed, "n_classes": self.n_classes_,
+            "n_features_in": self.n_features_in_,
+            "policy": {
+                "threshold": scalar(self.policy.threshold),
+                "max_hops": self.policy.max_hops,
+                "hop_budget": scalar(self.policy.hop_budget),
+                "backend": self.policy.backend,
+                "block_b": self.policy.block_b,
+                "chunk_b": self.policy.chunk_b,
+                "lazy": self.policy.lazy,
+                "precision": self.policy.precision,
+            },
+        }
+        return pack.save(path, extra=extra)
+
+    @classmethod
+    def load(cls, path) -> "FogClassifier":
+        """Reconstruct a fitted classifier from a ``save`` artifact.
+
+        The loaded engine evaluates the stored pack directly (its precision
+        becomes the default), so an int8 artifact serves int8 without ever
+        materializing fp32 tables on the accelerator.
+        """
+        pack, extra = ForestPack.load_with_meta(path)
+        if extra.get("estimator") != "FogClassifier":
+            raise ValueError(
+                f"{path} is a ForestPack artifact but not a FogClassifier "
+                f"save (estimator={extra.get('estimator')!r})")
+        policy = FogPolicy(**extra["policy"]) if "policy" in extra else None
+        clf = cls(n_trees=extra["n_trees"], grove_size=extra["grove_size"],
+                  max_depth=extra["max_depth"], backend=extra["backend"],
+                  seed=extra["seed"], precision=pack.precision,
+                  policy=policy)
+        # gc_/forest_ stay lazy: the engine evaluates the stored pack
+        # directly, so loading an int8 artifact never materializes fp32
+        # tables unless a caller asks for the dequantized views
+        clf.engine_ = FogEngine(pack, backend=clf.backend, policy=clf.policy)
+        clf.n_classes_ = extra["n_classes"]
+        clf.n_features_in_ = extra["n_features_in"]
+        clf._hops = []
+        return clf
+
     # -- repr --------------------------------------------------------------
     def __repr__(self) -> str:
-        fitted = f", fitted {self.gc_.n_groves}x{self.gc_.grove_size}" \
-            if hasattr(self, "gc_") else ""
+        # engine metadata, not gc_: repr must never trigger a dequantize
+        fitted = (f", fitted {self.engine_.n_groves}x{self.grove_size}"
+                  if hasattr(self, "engine_") else "")
         return (f"FogClassifier(n_trees={self.n_trees}, "
                 f"grove_size={self.grove_size}, max_depth={self.max_depth}, "
                 f"backend={self.backend!r}{fitted})")

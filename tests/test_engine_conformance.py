@@ -12,8 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (NO_BUDGET, FogEngine, FogPolicy, fog_eval,
-                        fog_eval_lazy, fog_eval_multioutput, split)
+from repro.core import (NO_BUDGET, FogEngine, FogPolicy, ForestPack,
+                        fog_eval, fog_eval_lazy, fog_eval_multioutput, split)
 
 
 THRESHES = [0.1, 0.3, 1.1]
@@ -266,6 +266,187 @@ def test_multioutput_per_lane_policy(trained, rf8_penbased,
                                                       max_hops=4))
     np.testing.assert_array_equal(np.asarray(want.hops[:64]),
                                   np.asarray(lo.hops[:64]))
+
+
+# ---------------------------------------------------------------------------
+# ForestPack precision axis: every backend evaluates packed fp32/bf16/int8
+# tables; fp32/bf16 reproduce the legacy results bit-exactly, int8 stays
+# within the quantization gates and is backend-conformant with itself.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas", "fused", "ring"])
+def test_fp32_pack_bit_identical_to_legacy(gc, x256, backend):
+    """fp32 packs store the training arrays verbatim: hops, labels and
+    probabilities must equal the legacy path bit-for-bit on every backend."""
+    key = jax.random.key(7)
+    want = FogEngine(gc).eval(
+        x256, key, policy=FogPolicy(threshold=0.3, max_hops=gc.n_groves))
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves, precision="fp32")
+    res = _engine_for(gc, backend).eval(x256, key, policy=pol)
+    _assert_conforms(res, want)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas", "fused", "ring"])
+def test_bf16_cross_backend_bit_identical_and_near_fp32(gc, x256, backend):
+    """Every backend dequantizes the SAME bf16 pack to the same fp32
+    values: hops/labels/proba agree bit-for-bit across backends.  Against
+    fp32, bf16 rounding (~2^-8 relative on leaves) shifts margins by up to
+    ~2e-3, so lanes sitting that close to the confidence gate or an argmax
+    tie may flip — >= 97% of hops and labels must still match."""
+    key = jax.random.key(7)
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves, precision="bf16")
+    want16 = _engine_for(gc, "reference").eval(x256, key, policy=pol)
+    res = _engine_for(gc, backend).eval(x256, key, policy=pol)
+    _assert_conforms(res, want16)
+    want32 = FogEngine(gc).eval(
+        x256, key, policy=FogPolicy(threshold=0.3, max_hops=gc.n_groves))
+    assert (np.asarray(res.hops)
+            == np.asarray(want32.hops)).mean() >= 0.97
+    assert (np.asarray(res.label)
+            == np.asarray(want32.label)).mean() >= 0.97
+
+
+def test_int8_cross_backend_bit_identical(gc, x256):
+    """All four backends dequantize the SAME int8 pack to the same fp32
+    values, so hops, labels and probabilities agree bit-for-bit — the
+    energy accounting stays backend-invariant at every precision."""
+    key = jax.random.key(13)
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves, precision="int8")
+    want = _engine_for(gc, "reference").eval(x256, key, policy=pol)
+    for backend in ["pallas", "fused", "ring"]:
+        res = _engine_for(gc, backend).eval(x256, key, policy=pol)
+        _assert_conforms(res, want)
+
+
+def test_int8_label_agreement_gate(gc, x257, trained):
+    """The quantization gate: with every grove voting (no confidence gate
+    in play) int8 labels agree with fp32 on >= 99% of examples; under the
+    default gated policy, lanes whose margin sits within the quantization
+    error of the threshold may flip hops, but labels still agree >= 97%
+    and accuracy stays within 1% of fp32 (the CI gate)."""
+    ds, _ = trained
+    y = ds.y_test[:x257.shape[0]]
+    key = jax.random.key(7)
+    full = FogPolicy(threshold=1.1, max_hops=gc.n_groves)
+    want_f = FogEngine(gc).eval(x257, key, policy=full)
+    res_f = FogEngine(gc, precision="int8").eval(x257, key, policy=full)
+    agree = (np.asarray(res_f.label) == np.asarray(want_f.label)).mean()
+    assert agree >= 0.99, agree
+
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves)
+    want = FogEngine(gc).eval(x257, key, policy=pol)
+    res = FogEngine(gc, precision="int8").eval(x257, key, policy=pol)
+    agree = (np.asarray(res.label) == np.asarray(want.label)).mean()
+    assert agree >= 0.97, agree
+    acc32 = (np.asarray(want.label) == y).mean()
+    acc8 = (np.asarray(res.label) == y).mean()
+    assert acc8 >= acc32 - 0.01, (acc8, acc32)
+
+
+def test_int8_margin_error_bound(gc, x257):
+    """Leaf quantization error is grid-bounded: against a hybrid forest
+    that walks the SAME paths (int8-dequantized thresholds) but keeps fp32
+    leaves, the full-hop int8 probabilities differ by at most half an int8
+    grid step, and MaxDiff margins by at most a full step."""
+    from repro.core import GroveCollection
+    pack = ForestPack.from_groves(gc, "int8")
+    feat, thr_dq, leaf_dq = pack.dequantize()
+    hybrid = GroveCollection(feat[0], thr_dq[0], gc.leaf)
+    key = jax.random.key(3)
+    pol = FogPolicy(threshold=1.1, max_hops=gc.n_groves)   # full hops
+    want = FogEngine(hybrid).eval(x257, key, policy=pol)
+    got = FogEngine(gc, precision="int8").eval(x257, key, policy=pol)
+    np.testing.assert_array_equal(np.asarray(got.hops),
+                                  np.asarray(want.hops))
+    bound = 0.5 * float(np.asarray(pack.leaf_scale).max()) + 1e-6
+    err = np.abs(np.asarray(got.proba) - np.asarray(want.proba)).max()
+    assert err <= bound, (err, bound)
+    from repro.core import maxdiff
+    m_got = np.asarray(maxdiff(got.proba))
+    m_want = np.asarray(maxdiff(want.proba))
+    assert np.abs(m_got - m_want).max() <= 2 * bound
+
+
+def test_pack_save_load_eval_round_trip(gc, x257, tmp_path):
+    """A saved pack reloads to bit-identical tables: every backend's
+    evaluation of the loaded pack equals the pre-save evaluation."""
+    key = jax.random.key(11)
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves)
+    for precision in ["fp32", "bf16", "int8"]:
+        pack = ForestPack.from_groves(gc, precision)
+        path = pack.save(tmp_path / f"pack_{precision}.npz")
+        loaded = ForestPack.load(path)
+        assert loaded.precision == precision
+        want = FogEngine(pack).eval(x257, key, policy=pol)
+        for backend in ["reference", "pallas", "fused"]:
+            res = FogEngine(loaded, backend=backend,
+                            block_b=64).eval(x257, key, policy=pol)
+            _assert_conforms(res, want)
+
+
+def test_auto_chunk_only_when_pack_exceeds_vmem(gc, x256):
+    """The fused backend's chunk_b=None/'auto' must NOT chunk a pack that
+    fits VMEM (the BENCH_engine fused-chunked regression), and an int8 pack
+    of a field whose fp32 pack is over budget must run un-chunked where the
+    fp32 evaluation raises the VMEM ValueError."""
+    eng = FogEngine(gc, backend="fused")
+    small = eng.tables.pack("fp32")
+    assert eng._resolve_chunk("fused", small, x256.shape[0], 256, None,
+                              x256.shape[1]) is None
+    assert eng._resolve_chunk("fused", small, x256.shape[0], 256, "auto",
+                              x256.shape[1]) is None
+    # explicit chunking is always respected
+    assert eng._resolve_chunk("fused", small, 256, 256, 64, 16) == 64
+
+    from repro.core import GroveCollection
+    rng = np.random.default_rng(0)
+    G, t, depth, C, F, B = 8, 4, 10, 120, 8, 32    # fp32 field ~15.2 MiB
+    gc_big = GroveCollection(
+        jnp.asarray(rng.integers(0, F, size=(G, t, 2**depth - 1)),
+                    jnp.int32),
+        jnp.asarray(rng.normal(size=(G, t, 2**depth - 1)), jnp.float32),
+        jnp.asarray(rng.dirichlet(np.ones(C), size=(G, t, 2**depth)),
+                    jnp.float32))
+    x = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    key = jax.random.key(0)
+    pol = FogPolicy(threshold=0.25, max_hops=G)
+    big = FogEngine(gc_big, backend="fused", block_b=16)
+    with pytest.raises(ValueError, match="usable"):
+        big.eval(x, key, policy=pol)               # fp32 tables alone > VMEM
+    got = big.eval(x, key, policy=pol.replace(precision="int8"))
+    assert big._resolve_chunk(
+        "fused", big.tables.pack("int8"), B, 16, None, F) is None
+    want = FogEngine(gc_big, precision="int8").eval(x, key, policy=pol)
+    _assert_conforms(got, want)
+
+
+def test_auto_chunk_sizes_from_pack_footprint(gc):
+    """When the packed tables fit but the batch block state would push the
+    working set over budget, auto-chunking picks the largest lane count
+    that fits beside the resident tables and the chunked evaluation matches
+    the reference bit-for-bit."""
+    from repro.core import GroveCollection
+    from repro.kernels.fused_fog import fit_block_b
+    rng = np.random.default_rng(1)
+    G, t, depth, C, F = 4, 4, 9, 250, 2000         # tables ~7.9 MiB fp32
+    gc_mid = GroveCollection(
+        jnp.asarray(rng.integers(0, F, size=(G, t, 2**depth - 1)),
+                    jnp.int32),
+        jnp.asarray(rng.normal(size=(G, t, 2**depth - 1)), jnp.float32),
+        jnp.asarray(rng.dirichlet(np.ones(C), size=(G, t, 2**depth)),
+                    jnp.float32))
+    B = 700
+    x = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    eng = FogEngine(gc_mid, backend="fused", block_b=1024)
+    pack = eng.tables.pack("fp32")
+    cb = eng._resolve_chunk("fused", pack, B, 1024, None, F)
+    fit = fit_block_b(*pack.layout("fused"), n_features=F)
+    assert cb is not None and cb <= fit < B
+    key = jax.random.key(2)
+    pol = FogPolicy(threshold=0.3, max_hops=G)
+    want = FogEngine(gc_mid).eval(x, key, policy=pol)
+    got = eng.eval(x, key, policy=pol)
+    _assert_conforms(got, want)
 
 
 def test_deprecated_positional_eval_warns_and_matches(gc, x256):

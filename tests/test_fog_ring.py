@@ -48,11 +48,13 @@ RING_SCRIPT = textwrap.dedent("""
     # reference engine run with identical start groves
     from repro.core.policy import NO_BUDGET
     from repro.core.engine import _eval_core, sample_starts
+    from repro.forest.pack import ForestPack
+    pack = ForestPack.from_groves(gc)
     from repro.core.fog_ring import ring_eval
     start = sample_starts(jax.random.key(0), 512, 8, 8)
     no_budget = jnp.full((512,), NO_BUDGET, jnp.int32)
     pr, hr = ring_eval(gc, x, start, 0.3, 5, mesh)
-    want = _eval_core((gc,), x, start, jnp.float32(0.3), no_budget, 5,
+    want = _eval_core(pack, x, start, jnp.float32(0.3), no_budget, 5,
                       "reference", 256, False)
     np.testing.assert_array_equal(np.asarray(hr), np.asarray(want.hops))
     np.testing.assert_allclose(np.asarray(pr), np.asarray(want.proba),
@@ -64,7 +66,7 @@ RING_SCRIPT = textwrap.dedent("""
     tvec = jnp.where(jnp.arange(512) < 256, 0.05, 0.6)
     bvec = jnp.where(jnp.arange(512) % 2 == 0, 2, NO_BUDGET).astype(jnp.int32)
     pr2, hr2 = ring_eval(gc, x, start, tvec, 8, mesh, hop_budget=bvec)
-    want2 = _eval_core((gc,), x, start, tvec, bvec, 8, "reference",
+    want2 = _eval_core(pack, x, start, tvec, bvec, 8, "reference",
                        256, False)
     np.testing.assert_array_equal(np.asarray(hr2), np.asarray(want2.hops))
     np.testing.assert_allclose(np.asarray(pr2), np.asarray(want2.proba),

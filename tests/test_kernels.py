@@ -111,6 +111,126 @@ def test_fused_fog_matches_engine_reference():
                                rtol=1e-6, atol=1e-7)
 
 
+# ---------------------------------------------------------------------------
+# packed (bf16/int8) tables: in-kernel dequantize must match the dequantize-
+# up-front oracle bit-for-bit, and the VMEM rejection must name the remedies
+# ---------------------------------------------------------------------------
+
+def _packed_grove(rng, t, depth, C, F, precision):
+    from repro.core.grove import GroveCollection
+    from repro.forest.pack import ForestPack
+    n_nodes = 2**depth - 1
+    feature = rng.integers(0, F, size=(1, t, n_nodes)).astype(np.int32)
+    threshold = rng.normal(size=(1, t, n_nodes)).astype(np.float32)
+    # sprinkle the complete-tree padding sentinel (+inf = always go left)
+    threshold[0, :, n_nodes // 2:] = np.inf
+    leaf = rng.dirichlet(np.ones(C), size=(1, t, 2**depth)).astype(np.float32)
+    gc = GroveCollection(jnp.asarray(feature), jnp.asarray(threshold),
+                         jnp.asarray(leaf))
+    return ForestPack.from_groves(gc, precision)
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+def test_tree_traverse_packed_matches_dequantized_ref(precision):
+    rng = np.random.default_rng(17)
+    pack = _packed_grove(rng, t=4, depth=5, C=7, F=16, precision=precision)
+    x = rng.normal(size=(83, 16)).astype(np.float32)
+    got = ops.tree_traverse(pack.feature[0, 0], pack.threshold[0, 0],
+                            pack.leaf[0, 0], x,
+                            pack.thr_scale[0, 0], pack.leaf_scale[0, 0],
+                            block_b=32)
+    feat, thr, leaf = pack.dequantize()
+    want = ref.tree_traverse_ref(feat[0, 0], thr[0, 0], leaf[0, 0],
+                                 jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+def test_fused_fog_packed_matches_reference_backend(precision):
+    """One packed launch == the reference backend evaluating the same pack:
+    bit-identical hops/labels, equal probabilities."""
+    from repro.core.engine import FogEngine
+    from repro.core.grove import GroveCollection
+    from repro.core.policy import FogPolicy
+    from repro.forest.pack import ForestPack
+    rng = np.random.default_rng(23)
+    G = 6
+    feature = rng.integers(0, 12, size=(G, 3, 15)).astype(np.int32)
+    threshold = rng.normal(size=(G, 3, 15)).astype(np.float32)
+    threshold[:, :, 10:] = np.inf
+    leaf = rng.dirichlet(np.ones(5), size=(G, 3, 16)).astype(np.float32)
+    gc = GroveCollection(jnp.asarray(feature), jnp.asarray(threshold),
+                         jnp.asarray(leaf))
+    pack = ForestPack.from_groves(gc, precision)
+    x = jnp.asarray(rng.normal(size=(83, 12)).astype(np.float32))
+    key = jax.random.key(0)
+    pol = FogPolicy(threshold=0.25, max_hops=G)
+    want = FogEngine(pack).eval(x, key, policy=pol)
+    got = FogEngine(pack, backend="fused", block_b=32).eval(x, key,
+                                                            policy=pol)
+    np.testing.assert_array_equal(np.asarray(got.hops), np.asarray(want.hops))
+    np.testing.assert_array_equal(np.asarray(got.label),
+                                  np.asarray(want.label))
+    np.testing.assert_allclose(np.asarray(got.proba), np.asarray(want.proba),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_vmem_rejection_reports_bytes_and_remedies():
+    """Satellite contract: the over-budget ValueError states required vs
+    available bytes and suggests chunk_b and precision=\"int8\"."""
+    from repro.kernels.fused_fog import fused_fog_pallas
+    from repro.kernels.tree_traverse import tree_traverse_pallas
+    O, G, t, depth, C, F, B = 1, 8, 4, 10, 120, 8, 64
+    feature = jnp.zeros((O, G, t, 2**depth - 1), jnp.int32)
+    threshold = jnp.zeros((O, G, t, 2**depth - 1), jnp.float32)
+    leaf = jnp.zeros((O, G, t, 2**depth, C), jnp.float32)
+    with pytest.raises(ValueError) as ei:
+        fused_fog_pallas(feature, threshold, leaf,
+                         jnp.zeros((B, F), jnp.float32),
+                         jnp.zeros((B,), jnp.int32),
+                         jnp.full((B,), 0.3, jnp.float32),
+                         jnp.full((B,), 2**31 - 1, jnp.int32),
+                         max_hops=G, block_b=64)
+    msg = str(ei.value)
+    for needle in ["MiB", "usable", "chunk_b", 'precision="int8"']:
+        assert needle in msg, (needle, msg)
+    with pytest.raises(ValueError) as ei:
+        tree_traverse_pallas(jnp.zeros((32, 2**12 - 1), jnp.int32),
+                             jnp.zeros((32, 2**12 - 1), jnp.float32),
+                             jnp.zeros((32, 2**12, 30), jnp.float32),
+                             jnp.zeros((B, F), jnp.float32), block_b=64)
+    msg = str(ei.value)
+    for needle in ["MiB", "usable", 'precision="int8"']:
+        assert needle in msg, (needle, msg)
+
+
+def test_int8_field_fits_where_fp32_does_not():
+    """The acceptance scenario: a field whose fp32 tables exceed the VMEM
+    budget evaluates un-chunked through the fused kernel once packed int8."""
+    from repro.core.engine import FogEngine
+    from repro.core.grove import GroveCollection
+    from repro.core.policy import FogPolicy
+    from repro.kernels.tree_traverse import VMEM_BUDGET
+    rng = np.random.default_rng(5)
+    G, t, depth, C, F, B = 8, 4, 10, 120, 8, 48
+    gc = GroveCollection(
+        jnp.asarray(rng.integers(0, F, size=(G, t, 2**depth - 1)),
+                    jnp.int32),
+        jnp.asarray(rng.normal(size=(G, t, 2**depth - 1)), jnp.float32),
+        jnp.asarray(rng.dirichlet(np.ones(C), size=(G, t, 2**depth)),
+                    jnp.float32))
+    eng = FogEngine(gc, backend="fused", block_b=16)
+    assert eng.tables.pack("fp32").table_bytes >= VMEM_BUDGET
+    assert eng.tables.pack("int8").table_bytes < VMEM_BUDGET
+    x = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    pol = FogPolicy(threshold=0.25, max_hops=G, precision="int8")
+    got = eng.eval(x, jax.random.key(1), policy=pol)
+    want = FogEngine(gc).eval(x, jax.random.key(1), policy=pol)
+    np.testing.assert_array_equal(np.asarray(got.hops), np.asarray(want.hops))
+    np.testing.assert_array_equal(np.asarray(got.label),
+                                  np.asarray(want.label))
+
+
 @pytest.mark.parametrize("B,C", [(4, 2), (32, 10), (256, 26), (128, 7), (64, 1000)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_top2_confidence_matches_ref(B, C, dtype):

@@ -1,0 +1,196 @@
+"""ForestPack (forest/pack.py): dtype packing, byte accounting, derived
+layouts, quantization error bounds, and versioned save/load artifacts."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FogEngine, FogPolicy, GroveCollection, split
+from repro.core.energy import fog_energy, tree_bytes
+from repro.forest import PACK_FORMAT_VERSION, PRECISIONS, ForestPack
+
+
+@pytest.fixture(scope="module")
+def gc(trained):
+    _, rf = trained
+    return split(rf, 2)
+
+
+def test_fp32_pack_stores_training_arrays_verbatim(gc):
+    pack = ForestPack.from_groves(gc)
+    assert pack.precision == "fp32"
+    assert (pack.n_heads, pack.n_groves, pack.grove_size) == (
+        1, gc.n_groves, gc.grove_size)
+    assert (pack.depth, pack.n_classes) == (gc.depth, gc.n_classes)
+    np.testing.assert_array_equal(np.asarray(pack.feature[0]),
+                                  np.asarray(gc.feature))
+    np.testing.assert_array_equal(np.asarray(pack.threshold[0]),
+                                  np.asarray(gc.threshold))
+    np.testing.assert_array_equal(np.asarray(pack.leaf[0]),
+                                  np.asarray(gc.leaf))
+
+
+def test_table_bytes_counts_packed_widths(gc):
+    packs = {p: ForestPack.from_groves(gc, p) for p in PRECISIONS}
+    for p, pack in packs.items():
+        want = sum(int(a.nbytes) for a in (pack.feature, pack.threshold,
+                                           pack.leaf, pack.thr_scale,
+                                           pack.leaf_scale))
+        assert pack.table_bytes == want
+    # threshold+leaf shrink 2x / 4x; feature+scales stay fp32/int32
+    assert packs["bf16"].table_bytes < packs["fp32"].table_bytes
+    assert packs["int8"].table_bytes < packs["bf16"].table_bytes
+    assert packs["int8"].threshold.dtype == jnp.int8
+    assert packs["bf16"].leaf.dtype == jnp.bfloat16
+
+
+def test_unknown_precision_rejected(gc):
+    with pytest.raises(ValueError, match="precision"):
+        ForestPack.from_groves(gc, "fp16")
+    with pytest.raises(ValueError, match="precision"):
+        FogPolicy(precision="fp64")
+    with pytest.raises(ValueError, match="precision"):
+        FogEngine(gc, precision="int4")
+
+
+def test_int8_dequant_error_is_grid_bounded(gc):
+    """Half-ULP of the per-tree grid: |dequant - fp32| <= 0.5 * scale for
+    leaves and finite thresholds; the ±inf padding sentinels survive
+    exactly (the "always go left" complete-tree nodes)."""
+    pack = ForestPack.from_groves(gc, "int8")
+    _, thr_dq, leaf_dq = pack.dequantize()
+    thr = np.asarray(gc.threshold)
+    thr_dq = np.asarray(thr_dq[0])
+    finite = np.isfinite(thr)
+    np.testing.assert_array_equal(thr_dq[~finite], thr[~finite])
+    ts = np.broadcast_to(np.asarray(pack.thr_scale[0]), thr.shape)
+    assert (np.abs(thr_dq[finite] - thr[finite])
+            <= 0.5 * ts[finite] + 1e-7).all()
+    leaf_err = np.abs(np.asarray(leaf_dq[0]) - np.asarray(gc.leaf))
+    ls = np.broadcast_to(np.asarray(pack.leaf_scale[0]),
+                         leaf_err.shape)
+    assert (leaf_err <= 0.5 * ls + 1e-7).all()
+
+
+def test_to_groves_round_trips_fp32(gc):
+    back = ForestPack.from_groves(gc).to_groves()
+    assert len(back) == 1
+    np.testing.assert_array_equal(np.asarray(back[0].threshold),
+                                  np.asarray(gc.threshold))
+    np.testing.assert_array_equal(np.asarray(back[0].leaf),
+                                  np.asarray(gc.leaf))
+
+
+def test_astype_repack_and_idempotence(gc):
+    pack8 = ForestPack.from_groves(gc, "int8")
+    assert pack8.astype("int8") is pack8
+    again = pack8.astype("fp32").astype("int8")
+    np.testing.assert_array_equal(np.asarray(again.threshold),
+                                  np.asarray(pack8.threshold))
+    np.testing.assert_array_equal(np.asarray(again.leaf),
+                                  np.asarray(pack8.leaf))
+
+
+def test_ring_layout_matches_legacy_reorder_and_caches(gc):
+    from repro.core.fog_ring import reorder_tables
+    pack = ForestPack.from_groves(gc)
+    tables = pack.layout("ring", 2)
+    assert tables is pack.layout("ring", 2)        # cached per (name, n)
+    legacy = reorder_tables(gc, 2)
+    for got, want in zip(tables[:3], legacy):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(ValueError, match="layout"):
+        pack.layout("torus")
+
+
+def test_fused_layout_is_canonical_storage(gc):
+    pack = ForestPack.from_groves(gc, "int8")
+    feat, thr, leaf, ts, ls = pack.layout("fused")
+    assert feat is pack.feature and thr is pack.threshold
+    assert ts is pack.thr_scale and ls is pack.leaf_scale
+
+
+def test_mismatched_heads_rejected(gc):
+    gc2 = GroveCollection(gc.feature, gc.threshold, gc.leaf[..., :-1])
+    with pytest.raises(ValueError, match="identical table shapes"):
+        ForestPack.from_groves((gc, gc2))
+
+
+def test_pack_is_a_pytree(gc):
+    pack = ForestPack.from_groves(gc, "int8")
+    leaves, treedef = jax.tree.flatten(pack)
+    assert len(leaves) == 5
+    back = jax.tree.unflatten(treedef, leaves)
+    assert back.precision == "int8"
+    np.testing.assert_array_equal(np.asarray(back.threshold),
+                                  np.asarray(pack.threshold))
+
+
+def test_engine_adopts_pack_and_its_precision(gc, trained):
+    ds, _ = trained
+    x = jnp.asarray(ds.x_test[:64])
+    key = jax.random.key(0)
+    pack = ForestPack.from_groves(gc, "int8")
+    eng = FogEngine(pack, backend="fused")
+    assert eng.precision == "int8"
+    assert eng.tables.pack("int8") is pack         # adopted, not rebuilt
+    want = FogEngine(gc, precision="int8").eval(x, key, 0.3)
+    got = eng.eval(x, key, 0.3)
+    np.testing.assert_array_equal(np.asarray(got.label),
+                                  np.asarray(want.label))
+    np.testing.assert_array_equal(np.asarray(got.hops),
+                                  np.asarray(want.hops))
+
+
+@pytest.mark.parametrize("precision", list(PRECISIONS))
+def test_save_load_round_trip_bitwise(gc, tmp_path, precision):
+    pack = ForestPack.from_groves(gc, precision)
+    path = pack.save(tmp_path / f"m_{precision}.npz", extra={"note": "hi"})
+    loaded, extra = ForestPack.load_with_meta(path)
+    assert extra == {"note": "hi"}
+    assert loaded.precision == precision
+    assert loaded.threshold.dtype == pack.threshold.dtype
+    for a, b in zip(jax.tree.leaves(pack), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_load_rejects_future_and_foreign_artifacts(gc, tmp_path):
+    pack = ForestPack.from_groves(gc)
+    path = pack.save(tmp_path / "m.npz")
+    with np.load(path) as z:
+        fields = dict(z)
+    fields["format_version"] = np.int64(PACK_FORMAT_VERSION + 1)
+    future = tmp_path / "future.npz"
+    with open(future, "wb") as f:
+        np.savez(f, **fields)
+    with pytest.raises(ValueError, match="format"):
+        ForestPack.load(future)
+    foreign = tmp_path / "foreign.npz"
+    with open(foreign, "wb") as f:
+        np.savez(f, whatever=np.zeros(3))
+    with pytest.raises(ValueError, match="format_version"):
+        ForestPack.load(foreign)
+
+
+def test_energy_model_reads_packed_bytes():
+    """int8 node entries are 5 bytes vs fp32's 8: the energy report must
+    fall accordingly (and fp32 must reproduce the original accounting)."""
+    assert tree_bytes(6, 10, "fp32") == (2**6 - 1) * 8.0 + 2**6 * 10
+    assert tree_bytes(6, 10, "int8") < tree_bytes(6, 10, "bf16") < \
+        tree_bytes(6, 10, "fp32")
+    hops = np.full(64, 3)
+    e = {p: fog_energy(hops, 2, 6, 10, 16, p).per_example_nj
+         for p in PRECISIONS}
+    assert e["int8"] < e["bf16"] < e["fp32"]
+
+
+def test_policy_precision_is_static_metadata(gc):
+    """precision must live in the pytree aux (jit cache key), not the
+    traced data, and survive replace()."""
+    pol = FogPolicy(threshold=0.3, precision="int8")
+    _, treedef = jax.tree.flatten(pol)
+    assert "int8" in str(treedef)
+    assert pol.replace(threshold=0.5).precision == "int8"
+    assert "precision" in pol.static_overrides

@@ -213,3 +213,67 @@ def test_int8_roundtrip_bounded_error(seed, n):
     q, scale = compress_int8(x)
     err = np.abs(np.asarray(decompress_int8(q, scale)) - np.asarray(x))
     assert err.max() <= float(scale) * 0.5 + 1e-9   # half-ULP of the grid
+
+
+# ------------------------------------------------ ForestPack quantization ---
+@st.composite
+def _random_field(draw):
+    G = draw(st.integers(1, 6))
+    t = draw(st.integers(1, 4))
+    depth = draw(st.integers(1, 5))
+    C = draw(st.integers(2, 9))
+    F = draw(st.integers(2, 16))
+    B = draw(st.integers(1, 64))
+    seed = draw(st.integers(0, 2**31 - 1))
+    pad_frac = draw(st.sampled_from([0.0, 0.3, 0.7]))
+    rng = np.random.default_rng(seed)
+    n_nodes = 2**depth - 1
+    feature = rng.integers(0, F, size=(G, t, n_nodes)).astype(np.int32)
+    threshold = (rng.normal(size=(G, t, n_nodes))
+                 * rng.uniform(0.01, 50)).astype(np.float32)
+    # complete-tree padding: some nodes carry the +inf "go left" sentinel
+    threshold[rng.random((G, t, n_nodes)) < pad_frac] = np.inf
+    leaf = rng.dirichlet(np.ones(C), size=(G, t, 2**depth)).astype(np.float32)
+    x = rng.normal(size=(B, F)).astype(np.float32)
+    return feature, threshold, leaf, x, seed
+
+
+@settings(max_examples=30, deadline=None)
+@given(_random_field())
+def test_int8_pack_quantization_bounds(case):
+    """ForestPack int8 invariants on random grove fields: dequant error is
+    half a per-tree grid step (finite values), ±inf padding survives
+    exactly, and — against a hybrid field walking the SAME paths with fp32
+    leaves — full-hop probabilities shift by at most half a leaf grid step
+    and MaxDiff margins by at most a full step."""
+    from repro.core import FogEngine, FogPolicy, maxdiff
+    from repro.core.grove import GroveCollection
+    from repro.forest.pack import ForestPack
+    feature, threshold, leaf, x, seed = case
+    gc = GroveCollection(jnp.asarray(feature), jnp.asarray(threshold),
+                         jnp.asarray(leaf))
+    pack = ForestPack.from_groves(gc, "int8")
+    _, thr_dq, leaf_dq = pack.dequantize()
+    thr_dq, leaf_dq = np.asarray(thr_dq[0]), np.asarray(leaf_dq[0])
+    finite = np.isfinite(threshold)
+    np.testing.assert_array_equal(thr_dq[~finite], threshold[~finite])
+    ts = np.broadcast_to(np.asarray(pack.thr_scale[0]), threshold.shape)
+    assert (np.abs(thr_dq[finite] - threshold[finite])
+            <= 0.5 * ts[finite] + 1e-6).all()
+    ls = np.broadcast_to(np.asarray(pack.leaf_scale[0]), leaf.shape)
+    assert (np.abs(leaf_dq - leaf) <= 0.5 * ls + 1e-6).all()
+
+    hybrid = GroveCollection(jnp.asarray(feature), jnp.asarray(thr_dq),
+                             jnp.asarray(leaf))
+    key = jax.random.key(seed)
+    pol = FogPolicy(threshold=1.1, max_hops=gc.n_groves)    # full hops
+    want = FogEngine(hybrid).eval(x, key, policy=pol)
+    got = FogEngine(gc, precision="int8").eval(x, key, policy=pol)
+    np.testing.assert_array_equal(np.asarray(got.hops),
+                                  np.asarray(want.hops))
+    bound = 0.5 * float(np.asarray(pack.leaf_scale).max()) + 1e-5
+    err = np.abs(np.asarray(got.proba) - np.asarray(want.proba)).max()
+    assert err <= bound, (err, bound)
+    m_err = np.abs(np.asarray(maxdiff(got.proba))
+                   - np.asarray(maxdiff(want.proba))).max()
+    assert m_err <= 2 * bound

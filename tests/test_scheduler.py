@@ -159,6 +159,72 @@ def test_static_knobs_on_request_policy_rejected():
                                policy=FogPolicy(backend="pallas")))
 
 
+def _mock_precision_decode(n_slots, vocab=16):
+    """Precision-aware mock: records each dispatch's precision and encodes
+    it into hops (fp32 -> 32, int8 -> 8, default/None -> 1), so tests can
+    see exactly which program served which slot."""
+    calls = []
+    code = {None: 1, "fp32": 32, "bf16": 16, "int8": 8}
+
+    def decode_fn(tokens, lengths, policy):
+        calls.append(policy.precision)
+        nxt = (np.asarray(tokens) + 1) % vocab
+        logits = np.zeros((n_slots, vocab), np.float32)
+        logits[np.arange(n_slots), nxt] = 1.0
+        hops = np.full((n_slots,), code[policy.precision], np.int32)
+        return jnp.asarray(logits), jnp.asarray(hops)
+
+    return decode_fn, calls
+
+
+def test_per_request_precision_not_rejected():
+    """precision is the one static knob a request may set — the batcher
+    handles it by bucketed dispatch instead of rejecting it."""
+    n = 2
+    decode_fn, _ = _mock_precision_decode(n)
+    batcher = ContinuousBatcher(n, decode_fn,
+                                lambda slot, prompt: len(prompt))
+    batcher.submit(Request(rid=0, prompt=np.asarray([0]),
+                           policy=FogPolicy(precision="int8")))   # no raise
+
+
+def test_mixed_precision_buckets_dispatch_per_group():
+    """Two precisions in one continuous batch: one dispatch per distinct
+    precision per step, and every request's outputs come from ITS OWN
+    precision's program."""
+    n = 3
+    decode_fn, calls = _mock_precision_decode(n)
+    batcher = ContinuousBatcher(
+        n, decode_fn, lambda slot, prompt: len(prompt), eos_id=-1,
+        default_policy=FogPolicy(threshold=0.3))
+    batcher.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=2,
+                           policy=FogPolicy(precision="int8")))
+    batcher.submit(Request(rid=1, prompt=np.asarray([0]), max_new_tokens=2,
+                           policy=FogPolicy(precision="fp32")))
+    batcher.submit(Request(rid=2, prompt=np.asarray([0]), max_new_tokens=2))
+    done = batcher.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].hops == [8, 8]         # served by the int8 program
+    assert by_rid[1].hops == [32, 32]       # served by the fp32 program
+    assert by_rid[2].hops == [1, 1]         # default program
+    # 3 groups active for 2 steps -> 6 dispatches, all precisions present
+    assert len(calls) == 6
+    assert set(calls) == {None, "fp32", "int8"}
+
+
+def test_homogeneous_precision_costs_one_dispatch():
+    """All requests on one precision (or none): exactly one decode dispatch
+    per step — bucketing must not tax the common case."""
+    n = 2
+    decode_fn, calls = _mock_precision_decode(n)
+    batcher = ContinuousBatcher(n, decode_fn,
+                                lambda slot, prompt: len(prompt), eos_id=-1)
+    batcher.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=3,
+                           policy=FogPolicy(precision="int8")))
+    batcher.run()
+    assert calls == ["int8", "int8", "int8"]
+
+
 def test_per_lane_default_policy_rejected_at_construction():
     n = 2
     decode_fn, _ = _mock_policy_decode(n)

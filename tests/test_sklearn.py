@@ -90,6 +90,109 @@ def test_reset_profile(fitted):
     assert clf.profile()["n_classified"] == 0
 
 
+def test_quantize_switches_default_precision(fitted):
+    """quantize('int8') swaps packed tables without retraining, stays
+    within 1% of fp32 accuracy, and reports a cheaper energy profile."""
+    ds = fitted[0]
+    clf = FogClassifier(n_trees=16, grove_size=2, max_depth=6, seed=1)
+    clf.fit(ds.x_train, ds.y_train)
+    acc32 = clf.score(ds.x_test, ds.y_test)
+    clf.reset_profile()
+    clf.predict(ds.x_test)
+    nj32 = clf.profile()["energy_nj_per_classification"]
+    assert clf.quantize("int8") is clf
+    assert clf.engine_.precision == "int8"
+    acc8 = clf.score(ds.x_test, ds.y_test)
+    assert acc8 >= acc32 - 0.01
+    clf.reset_profile()
+    clf.predict(ds.x_test)
+    nj8 = clf.profile()["energy_nj_per_classification"]
+    assert nj8 < nj32
+    with pytest.raises(ValueError):
+        clf.quantize("fp64")
+
+
+def test_save_load_serves_identically(fitted, tmp_path):
+    """The acceptance contract: save/load round-trips a trained model and
+    the loaded estimator serves — identical labels at the saved precision,
+    working score/profile, no retraining."""
+    ds, clf = fitted
+    path = clf.save(tmp_path / "model.npz")
+    clf2 = FogClassifier.load(path)
+    np.testing.assert_array_equal(clf2.predict(ds.x_test[:256]),
+                                  clf.predict(ds.x_test[:256]))
+    assert clf2.score(ds.x_test, ds.y_test) > 0.85
+    assert clf2.profile()["n_classified"] > 0
+
+    path8 = clf.save(tmp_path / "model8.npz", precision="int8")
+    clf8 = FogClassifier.load(path8)
+    assert clf8.precision == "int8"
+    assert clf8.engine_.tables.pack("int8").precision == "int8"
+    want = clf.predict(ds.x_test[:256],
+                       policy=clf.policy.replace(precision="int8"))
+    np.testing.assert_array_equal(clf8.predict(ds.x_test[:256]), want)
+
+
+def test_save_persists_default_policy(ds_penbased, tmp_path):
+    """The default FogPolicy travels with the artifact: a loaded model must
+    predict under the trained knobs, not FogPolicy() defaults."""
+    import jax.numpy as jnp
+    ds = ds_penbased
+    pol = FogPolicy(threshold=0.9, max_hops=4, hop_budget=3, lazy=True)
+    clf = FogClassifier(n_trees=8, grove_size=2, max_depth=5, seed=2,
+                        policy=pol)
+    clf.fit(ds.x_train, ds.y_train)
+    path = clf.save(tmp_path / "pol.npz")
+    clf2 = FogClassifier.load(path)
+    assert clf2.policy == pol
+    np.testing.assert_array_equal(clf2.predict(ds.x_test[:200]),
+                                  clf.predict(ds.x_test[:200]))
+    clf2.reset_profile(); clf.reset_profile()
+    clf.predict(ds.x_test[:200]); clf2.predict(ds.x_test[:200])
+    assert clf2.profile()["mean_hops"] == clf.profile()["mean_hops"]
+    # per-lane default policies are batch-shaped and must refuse to save
+    clf.policy = FogPolicy(threshold=jnp.asarray([0.1, 0.9]))
+    with pytest.raises(ValueError, match="per-lane"):
+        clf.save(tmp_path / "bad.npz")
+
+
+def test_quantize_overrides_policy_pinned_precision(ds_penbased):
+    """A default policy that pins precision must not silently defeat
+    quantize(): the pin is re-pointed at the new precision."""
+    ds = ds_penbased
+    clf = FogClassifier(n_trees=8, grove_size=2, max_depth=5, seed=2,
+                        policy=FogPolicy(threshold=0.3, precision="fp32"))
+    clf.fit(ds.x_train, ds.y_train)
+    clf.quantize("int8")
+    assert clf.policy.precision == "int8"
+    assert clf.engine_.resolve(None).precision == "int8"
+
+
+def test_loaded_model_serves_without_dequantizing(fitted, tmp_path):
+    """An int8 artifact must serve from its packed bytes alone: predict()
+    never realizes the fp32 grove views (gc_/forest_ stay lazy)."""
+    ds, clf = fitted
+    path = clf.save(tmp_path / "m8.npz", precision="int8")
+    clf8 = FogClassifier.load(path)
+    clf8.predict(ds.x_test[:64])
+    clf8.profile()
+    assert repr(clf8).startswith("FogClassifier(")
+    assert clf8.engine_._gcs is None            # never dequantized
+    assert getattr(clf8, "_gc", None) is None
+    # explicit access still works, lazily
+    assert clf8.gc_.n_groves == clf.gc_.n_groves
+    assert clf8.engine_._gcs is not None
+
+
+def test_load_rejects_bare_pack_artifacts(fitted, tmp_path):
+    from repro.forest import ForestPack
+    ds, clf = fitted
+    pack = ForestPack.from_groves(clf.gc_)
+    path = pack.save(tmp_path / "bare.npz")
+    with pytest.raises(ValueError, match="FogClassifier"):
+        FogClassifier.load(path)
+
+
 def test_param_protocol_and_errors(ds_penbased):
     clf = FogClassifier(n_trees=8, grove_size=4)
     params = clf.get_params()
