@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.baselines import train_cnn, train_mlp, train_svm_lr, train_svm_rbf
 from repro.core import (
-    FogEngine, FogPolicy, find_opt_threshold, fog_energy, rf_report, split,
+    FogEngine, FogPolicy, find_opt_threshold, rf_report, split,
     threshold_sweep,
 )
 from repro.data import Dataset, make_dataset
@@ -67,12 +67,13 @@ def evaluate_all(name: str) -> dict[str, ClassifierResult]:
     out["rf"] = ClassifierResult("rf", rf_acc, e_rf.per_example_nj)
 
     gc = split(rf, 2)   # 8x2 topology (the paper's min-EDP pick)
-    # FoG_max: threshold above 1 -> every grove votes
+    # FoG_max: threshold above 1 -> every grove votes; energy comes from
+    # the EvalReport's own model (one accounting path, one set of per-op
+    # constants — core/energy.py's)
     res = FogEngine(gc).eval(x_test, jax.random.key(0),
                              policy=FogPolicy(threshold=1.1))
     acc = float(np.mean(np.asarray(res.label) == ds.y_test))
-    e = fog_energy(np.asarray(res.hops), gc.grove_size, gc.depth,
-                   gc.n_classes, ds.n_features)
+    e = res.energy_report()
     out["fog_max"] = ClassifierResult("fog_max", acc, e.per_example_nj)
 
     # FoG_opt: accuracy-optimal threshold from the sweep

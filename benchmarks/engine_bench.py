@@ -20,11 +20,19 @@ future PR has a perf trajectory for the unified hot path.  Backends:
 
 The record's ``kernel_launches`` field is the analytic per-eval Pallas
 dispatch count; ``table_bytes`` is each precision's packed ForestPack
-footprint (the fused kernel's VMEM load and the paper's SRAM capacity).
-Rows sharing a precision must agree bit-for-bit on hops (the energy
-contract); int8 rows additionally face the quantization gate —
-``quant_gate`` fails the run if int8 accuracy drops more than 1% below
-fp32, and CI invokes it against the emitted JSON.
+footprint (the fused kernel's VMEM load and the paper's SRAM capacity);
+``energy_pj`` is each row's modeled pJ/example from the EvalReport's own
+EnergyModel (the README backend matrix's pJ column).  Rows sharing a
+precision must agree bit-for-bit on hops (the energy contract); int8 rows
+additionally face the quantization gate — ``quant_gate`` fails the run if
+int8 accuracy drops more than 1% below fp32, and CI invokes it against the
+emitted JSON.
+
+The record also carries a ``frontier`` dump: the Pareto frontier the
+planning layer builds over (threshold x precision) on this forest
+(``core/frontier.py``), which CI's ``energy_gate`` re-checks for
+monotonicity — no frontier point may have both lower accuracy and higher
+energy than a neighbor.
 
 The ring backend is timed separately in fog_ring_bench (needs forced
 multi-device XLA in a subprocess).
@@ -50,6 +58,21 @@ def _time_engine(engine, x, key, policy, reps=3):
         res.proba.block_until_ready()
         best = min(best, time.perf_counter() - t0)
     return best, res
+
+
+def energy_gate(record: dict | None = None,
+                path: Path | str = OUT_PATH) -> None:
+    """Fail (raise) unless the dumped frontier is monotone: sorted by
+    energy ascending, accuracy must strictly increase (Frontier's Pareto
+    invariant — a violation means the builder regressed)."""
+    from repro.core.frontier import Frontier
+    if record is None:
+        record = json.loads(Path(path).read_text())
+    frontier = Frontier.from_dict(record["frontier"])
+    frontier.check_monotone()
+    print(f"CSV,engine,energy_gate=pass,points={len(frontier)},"
+          f"span_nj={frontier.points[0].energy_nj:.3f}"
+          f"-{frontier.points[-1].energy_nj:.3f}")
 
 
 def quant_gate(record: dict | None = None,
@@ -111,6 +134,7 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
     rows, record = [], {"bench": "engine_backends", "B": B,
                         "n_groves": gc.n_groves, "thresh": thresh,
                         "backend_us": {}, "mean_hops": {}, "acc": {},
+                        "energy_pj": {},
                         "kernel_launches": launches,
                         "table_bytes": table_bytes}
     base_hops = {}
@@ -126,21 +150,33 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
             # within each precision (int8 walks legitimately differ)
             assert (hops == base_hops[prec]).all(), \
                 f"{name} diverged on hops"
+        energy_pj = res.energy_report().per_example_pj
         record["backend_us"][name] = round(dt * 1e6)
         record["mean_hops"][name] = float(hops.mean())
         record["acc"][name] = acc
+        record["energy_pj"][name] = energy_pj
         rows.append(f"CSV,engine,backend={name},us={dt * 1e6:.0f},"
                     f"acc={acc:.4f},mean_hops={hops.mean():.2f},"
+                    f"energy_pj={energy_pj:.1f},"
                     f"launches={launches[name]},"
                     f"table_bytes={table_bytes[prec]}")
     # the auto-chunk regression fix: auto must not chunk a resident pack
     assert engines["fused-auto"]._resolve_chunk(
         "fused", engines["fused-auto"].tables.pack("fp32"), B, 256, "auto",
         int(x.shape[1])) is None, "fused-auto chunked a VMEM-resident pack"
+    # the planning layer's Pareto frontier over (threshold x precision) on
+    # this forest — persisted so CI's energy_gate can assert monotonicity
+    # and the README pJ column has a calibrated source
+    from repro.core.frontier import build_frontier
+    frontier = build_frontier(
+        engines["reference"], np.asarray(ds.x_test), ds.y_test)
+    record["frontier"] = frontier.to_dict()
+    rows.extend(f"CSV,engine,frontier,{p}" for p in frontier)
     if out_path is not None:
         Path(out_path).write_text(json.dumps(record, indent=2) + "\n")
         rows.append(f"CSV,engine,wrote={out_path}")
     quant_gate(record)
+    energy_gate(record)
     return rows
 
 
@@ -148,5 +184,7 @@ if __name__ == "__main__":
     import sys
     if "--gate-only" in sys.argv:
         quant_gate()
+    elif "--energy-gate-only" in sys.argv:
+        energy_gate()
     else:
         print("\n".join(run()))

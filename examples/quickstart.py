@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FogEngine, FogPolicy, fog_energy, rf_report, split
+from repro.core import FogEngine, FogPolicy, rf_report, split
 from repro.data import make_dataset
 from repro.forest import TrainConfig, rf_predict, train_random_forest
 from repro.sklearn import FogClassifier
@@ -43,7 +43,7 @@ for thresh in [0.1, 0.3, 0.6, 1.1]:
                       policy=FogPolicy(threshold=thresh))
     acc = np.mean(np.asarray(res.label) == ds.y_test)
     hops = np.asarray(res.hops)
-    e = fog_energy(hops, gc.grove_size, gc.depth, gc.n_classes, ds.n_features)
+    e = res.energy_report()   # the EvalReport prices its own evaluation
     tag = " (== RF, every grove votes)" if thresh > 1 else ""
     print(f"FoG thresh={thresh:<4} acc={acc:.3f}  mean_hops={hops.mean():.2f}  "
           f"energy={e.per_example_nj:.2f} nJ/example{tag}")
@@ -83,6 +83,20 @@ reloaded = FogClassifier.load("/tmp/fog_quickstart.npz")
 same = np.array_equal(reloaded.predict(ds.x_test), clf.predict(ds.x_test))
 print(f"save -> load     : precision={reloaded.precision}  "
       f"identical labels: {same}")
+
+# 9. the energy budget as a control plane: calibrate the Pareto frontier
+#    over (threshold x precision), pin the best policy under 2 nJ, and read
+#    measured-vs-budget from the profile (Fig. 5's operating-point
+#    selection as one call; the frontier persists through save/load, and
+#    the profile accounting restarts at the pin)
+clf.set_energy_budget(2.0, ds.x_test[:512], ds.y_test[:512])
+acc_b = clf.score(ds.x_test, ds.y_test)
+prof = clf.profile()
+print(f"2 nJ budget      : acc={acc_b:.3f}  "
+      f"measured={prof['energy_nj_per_classification']:.2f} nJ  "
+      f"within_budget={prof['within_budget']}  "
+      f"(pinned thr={clf.policy.threshold}, "
+      f"precision={clf.policy.precision})")
 
 print("\nThe run-time knobs: lower threshold -> fewer groves per input -> "
       "less energy, graceful accuracy decay (paper Fig. 5); int8 packs -> "

@@ -2,30 +2,38 @@ from repro.core.confidence import maxdiff, maxdiff_multioutput, top2
 from repro.core.grove import GroveCollection, gc_train, split, grove_predict_proba
 from repro.core.policy import (BACKENDS, NO_BUDGET, PRECISIONS, FogPolicy,
                                assemble)
-from repro.core.engine import (FogEngine, FogResult, HopMeter, TableCache,
-                               confidence_margin, hop_update, sample_starts)
+from repro.core.engine import (EvalReport, FogEngine, FogResult, HopMeter,
+                               TableCache, confidence_margin, hop_update,
+                               sample_starts)
 from repro.forest.pack import ForestPack
 from repro.core.fog_eval import fog_eval, fog_eval_lazy, fog_eval_multioutput
 from repro.core.energy import (
-    EnergyReport, fog_energy, rf_report, dt_energy_pj, rf_energy_pj,
-    grove_energy_pj, svm_lr_energy_pj, svm_rbf_energy_pj, mlp_energy_pj,
-    cnn_energy_pj,
+    AffineEnergy, EnergyModel, EnergyReport, fog_energy, rf_report, dt_energy_pj,
+    rf_energy_pj, grove_energy_pj, svm_lr_energy_pj, svm_rbf_energy_pj,
+    mlp_energy_pj, cnn_energy_pj,
 )
 from repro.core.budget import (
     TopologyPoint, evaluate_topology, policy_sweep, topology_sweep,
     select_min_edp, threshold_sweep, find_opt_threshold,
+)
+from repro.core.frontier import (
+    Frontier, FrontierPoint, auto_policy, build_frontier, default_grid,
+    sweep_policies,
 )
 
 __all__ = [
     "maxdiff", "maxdiff_multioutput", "top2",
     "GroveCollection", "gc_train", "split", "grove_predict_proba",
     "BACKENDS", "NO_BUDGET", "PRECISIONS", "FogPolicy", "assemble",
-    "FogEngine", "FogResult", "HopMeter", "TableCache", "ForestPack",
-    "confidence_margin", "hop_update", "sample_starts",
+    "EvalReport", "FogEngine", "FogResult", "HopMeter", "TableCache",
+    "ForestPack", "confidence_margin", "hop_update", "sample_starts",
     "fog_eval", "fog_eval_lazy", "fog_eval_multioutput",
-    "EnergyReport", "fog_energy", "rf_report", "dt_energy_pj",
+    "AffineEnergy", "EnergyModel", "EnergyReport", "fog_energy", "rf_report",
+    "dt_energy_pj",
     "rf_energy_pj", "grove_energy_pj", "svm_lr_energy_pj",
     "svm_rbf_energy_pj", "mlp_energy_pj", "cnn_energy_pj",
     "TopologyPoint", "evaluate_topology", "policy_sweep", "topology_sweep",
     "select_min_edp", "threshold_sweep", "find_opt_threshold",
+    "Frontier", "FrontierPoint", "auto_policy", "build_frontier",
+    "default_grid", "sweep_policies",
 ]

@@ -9,6 +9,16 @@ runtime-knob object the engine, the serving path and the sklearn facade
 consume — so a sweep's winning point can be handed directly to
 ``FogEngine.eval(..., policy=point)`` or ``FogClassifier(policy=point)``
 without translating loose floats.
+
+Energy comes straight from the engine's :class:`~repro.core.engine.
+EvalReport` telemetry (no separate ``HopMeter`` + ``fog_energy`` rederiving)
+and is reported in **nJ/classification** (``EnergyReport.per_example_nj``)
+everywhere — sweep rows, ``TopologyPoint.__str__`` and frontier logs share
+one unit.  The point-selection rules (min-EDP within an accuracy slack,
+accuracy-optimal threshold) are the generic implementations in
+:mod:`repro.core.frontier`; richer budget questions — the full Pareto
+frontier over every runtime knob, ``auto_policy`` under an nJ budget —
+live there too.
 """
 from __future__ import annotations
 
@@ -18,7 +28,7 @@ from typing import Iterable, Sequence
 import jax
 import numpy as np
 
-from repro.core.energy import fog_energy
+from repro.core import frontier as _frontier
 from repro.core.engine import FogEngine
 from repro.core.grove import split
 from repro.core.policy import FogPolicy
@@ -71,14 +81,12 @@ def evaluate_topology(forest: TensorForest, grove_size: int,
                       policy=pol)
     acc = float(np.mean(np.asarray(res.label) == y_val))
     hops = np.asarray(res.hops)
-    # the energy model reads the precision the evaluation actually ran at
-    # (int8 packs read fewer SRAM bytes per node), so a sweep over
-    # FogPolicy(precision=...) grids maps the full dtype x threshold plane
-    rep = fog_energy(hops, grove_size, gc.depth, gc.n_classes,
-                     x_val.shape[1],
-                     precision=engine.resolve(pol).precision)
+    # the EvalReport's own EnergyModel priced this evaluation (at the
+    # precision it actually ran — int8 packs read fewer SRAM bytes per
+    # node), so a sweep over FogPolicy(precision=...) grids maps the full
+    # dtype x threshold plane without re-deriving anything here
+    e_nj = res.energy_report().per_example_nj
     delay = float(hops.mean())
-    e_nj = rep.per_example_nj
     thresh_scalar = float(np.asarray(pol.threshold, np.float64).mean())
     return TopologyPoint(gc.n_groves, grove_size, thresh_scalar, acc,
                          e_nj, delay, e_nj * delay, policy=pol)
@@ -111,10 +119,9 @@ def topology_sweep(forest: TensorForest, x_val: np.ndarray, y_val: np.ndarray,
 
 def select_min_edp(points: list[TopologyPoint],
                    accuracy_slack: float = 0.02) -> TopologyPoint:
-    """Min-EDP point whose accuracy is within ``slack`` of the best."""
-    best_acc = max(p.accuracy for p in points)
-    ok = [p for p in points if p.accuracy >= best_acc - accuracy_slack]
-    return min(ok, key=lambda p: p.edp)
+    """Min-EDP point whose accuracy is within ``slack`` of the best
+    (delegates to the generic rule in :mod:`repro.core.frontier`)."""
+    return _frontier.select_min_edp(points, accuracy_slack)
 
 
 def threshold_sweep(forest: TensorForest, grove_size: int,
@@ -132,10 +139,6 @@ def threshold_sweep(forest: TensorForest, grove_size: int,
 def find_opt_threshold(points: list[TopologyPoint],
                        tolerance: float = 0.005) -> TopologyPoint:
     """FoG_opt: the accuracy-optimal threshold — smallest threshold above
-    which accuracy stops increasing (paper §4.2)."""
-    pts = sorted(points, key=lambda p: p.threshold)
-    best_acc = max(p.accuracy for p in pts)
-    for p in pts:
-        if p.accuracy >= best_acc - tolerance:
-            return p
-    return pts[-1]
+    which accuracy stops increasing (paper §4.2; delegates to the generic
+    rule in :mod:`repro.core.frontier`)."""
+    return _frontier.find_opt_threshold(points, tolerance)

@@ -5,6 +5,19 @@ per-op energies over each classifier's evaluation path.  Offline we do the
 same arithmetic with published 40/45 nm per-op energies (Horowitz, ISSCC'14
 "Computing's energy problem"), counting ops *exactly* from the algorithms:
 
+FoG energy is owned by :class:`EnergyModel` — a frozen dataclass whose
+per-classification cost is a *pure function* of (pack precision, topology,
+hops): ``lane_pj(hops)`` is affine in the hop count
+(``hops * per_hop_pj + (hops-1) * transfer_pj``), so the same object serves
+post-hoc reports (:meth:`EnergyModel.report`, float64 — ``fp32`` reproduces
+the pre-EnergyModel ``fog_energy`` numbers bit-for-bit), live per-lane
+telemetry inside :class:`~repro.core.engine.EvalReport` (``lane_pj`` on
+device arrays), and the governor's inverse question (:meth:`hops_within` —
+the largest hop budget affordable under a pJ budget).  ``fog_energy``
+remains as a thin wrapper.
+
+Op-count recipes:
+
   DT       : d node-reads + d feature-reads + d comparisons (visited path only)
   RF       : t * DT + majority vote (t int adds)
   grove    : k * DT + prob accumulate (C fp adds) + MaxDiff (C comparisons)
@@ -28,6 +41,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.forest.pack import PRECISION_BYTES
@@ -56,6 +71,11 @@ class EnergyReport:
     @property
     def per_example_nj(self) -> float:
         return self.per_example_pj * 1e-3
+
+    def __str__(self) -> str:
+        # the human-facing unit is nJ/classification everywhere (frontier
+        # logs, sweep rows, bench output) — never raw pJ totals
+        return f"{self.per_example_nj:.3f} nJ/example"
 
 
 # ---------------------------------------------------------------- trees ----
@@ -110,18 +130,110 @@ def hop_transfer_energy_pj(n_features: int, n_classes: int) -> float:
     return gamma_words * (E_SRAM_R32 + E_SRAM_W32)
 
 
+# ---------------------------------------------------------- EnergyModel ----
+class AffineHopCost:
+    """Shared hops -> pJ arithmetic: anything exposing ``per_hop_pj`` and
+    ``transfer_pj`` prices a hop vector the same affine way.  Mixed into
+    :class:`EnergyModel` (tree-topology pricing) and :class:`AffineEnergy`
+    (raw per-hop costs, e.g. the LM layer-grove gate)."""
+
+    def lane_pj(self, hops):
+        """Per-example pJ for a [B] hop vector — dtype-generic: a jnp array
+        stays on device (EvalReport telemetry), a numpy array stays host."""
+        xp = jnp if isinstance(hops, jax.Array) else np
+        h = xp.asarray(hops)
+        return (h * self.per_hop_pj
+                + xp.maximum(h - 1, 0) * self.transfer_pj)
+
+    def report(self, hops) -> EnergyReport:
+        """Float64 post-hoc report — the original ``fog_energy`` arithmetic,
+        bit-for-bit."""
+        per_ex = self.lane_pj(np.asarray(hops, np.float64))
+        return EnergyReport(float(per_ex.sum()), float(per_ex.mean()))
+
+    def mean_pj(self, mean_hops: float) -> float:
+        """Expected pJ/classification at a mean hop count (affinity in hops
+        makes the mean exact for any hop distribution with that mean, as
+        long as every example hops at least once — which Algorithm 2
+        guarantees)."""
+        return (mean_hops * self.per_hop_pj
+                + max(mean_hops - 1.0, 0.0) * self.transfer_pj)
+
+    def hops_within(self, budget_pj: float) -> int:
+        """Largest per-example hop budget whose worst-case cost fits
+        ``budget_pj`` (>= 1: the first hop is always spent — a budget below
+        one hop's cost still buys one hop, matching FogPolicy.hop_budget's
+        floor)."""
+        per_extra = self.per_hop_pj + self.transfer_pj
+        return max(1, int((budget_pj - self.per_hop_pj) // per_extra) + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineEnergy(AffineHopCost):
+    """Affine hops -> pJ pricing from raw per-hop costs, for evaluation
+    paths with no tree topology — the LM layer-grove early-exit gate prices
+    a "hop" as one layer-block's MACs.  Same contract as
+    :class:`EnergyModel` (``lane_pj`` / ``report`` / ``hops_within``), so
+    the serving governor accepts either."""
+
+    per_hop_pj: float
+    transfer_pj: float = 0.0
+    precision: str = "fp32"
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel(AffineHopCost):
+    """Per-classification FoG energy as a pure function of (precision,
+    topology, hops).
+
+    One frozen, hashable object per (topology, precision) pair: the engine
+    stamps it on every :class:`~repro.core.engine.EvalReport`, the frontier
+    builder prices policy grids with it, and the serving governor inverts it
+    (:meth:`hops_within`) to turn an nJ budget into a hop budget.  The cost
+    is affine in hops::
+
+        pJ(example) = hops * per_hop_pj + max(hops - 1, 0) * transfer_pj
+
+    (the first grove receives its input from the processor, so an example
+    pays one fewer handshake transfer than it pays grove evaluations).
+    ``fp32`` reproduces the pre-EnergyModel ``fog_energy`` accounting
+    bit-for-bit.
+    """
+
+    grove_size: int
+    depth: int
+    n_classes: int
+    n_features: int
+    precision: str = "fp32"
+
+    @property
+    def per_hop_pj(self) -> float:
+        """One grove evaluation: k tree walks + accumulate + MaxDiff."""
+        return grove_energy_pj(self.grove_size, self.depth, self.n_classes,
+                               self.precision)
+
+    @property
+    def transfer_pj(self) -> float:
+        """One queue-entry handshake copy between groves."""
+        return hop_transfer_energy_pj(self.n_features, self.n_classes)
+
+    @classmethod
+    def from_pack(cls, pack, n_features: int) -> "EnergyModel":
+        """Model of a :class:`~repro.forest.pack.ForestPack`'s geometry at
+        the pack's own precision."""
+        return cls(pack.grove_size, pack.depth, pack.n_classes,
+                   int(n_features), pack.precision)
+
+
 def fog_energy(hops: np.ndarray, grove_size: int, depth: int,
                n_classes: int, n_features: int,
                precision: str = "fp32") -> EnergyReport:
     """hops: [B] groves-used per example (FogResult.hops); ``precision`` is
     the packed-table dtype the evaluation ran at (scales the per-node SRAM
-    bytes — the paper's dominant energy term)."""
-    hops = np.asarray(hops, np.float64)
-    per_grove = grove_energy_pj(grove_size, depth, n_classes, precision)
-    transfer = hop_transfer_energy_pj(n_features, n_classes)
-    # (hops-1) forwards per example; first grove receives from the processor
-    per_ex = hops * per_grove + np.maximum(hops - 1, 0) * transfer
-    return EnergyReport(float(per_ex.sum()), float(per_ex.mean()))
+    bytes — the paper's dominant energy term).  Thin wrapper over
+    :meth:`EnergyModel.report`."""
+    return EnergyModel(grove_size, depth, n_classes, n_features,
+                       precision).report(hops)
 
 
 def rf_report(batch: int, n_trees: int, depth: int, n_classes: int) -> EnergyReport:

@@ -64,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.confidence import maxdiff
+from repro.core.energy import EnergyModel, EnergyReport
 from repro.core.grove import GroveCollection
 from repro.core.policy import BACKENDS, PRECISIONS, FogPolicy
 from repro.forest.pack import ForestPack
@@ -84,6 +85,43 @@ class FogResult:
     proba: jax.Array
     label: jax.Array
     hops: jax.Array
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("proba", "label", "hops", "energy_pj"),
+         meta_fields=("model",))
+@dataclasses.dataclass(frozen=True)
+class EvalReport(FogResult):
+    """What ``FogEngine.eval`` returns: the FogResult contract plus the
+    energy telemetry every consumer used to re-derive by hand
+    (``HopMeter`` + ``fog_energy``).
+
+    energy_pj: [B] estimated pJ per example — ``model.lane_pj(hops)``,
+               computed on device alongside the evaluation outputs
+    model:     the :class:`~repro.core.energy.EnergyModel` the estimate was
+               priced with (topology + the precision the evaluation actually
+               ran at) — callers can re-price or invert budgets without
+               reaching back into the engine
+    """
+    energy_pj: jax.Array = None
+    model: EnergyModel = None
+
+    @property
+    def precision(self) -> str:
+        return self.model.precision
+
+    @property
+    def mean_energy_pj(self) -> float:
+        return float(np.asarray(self.energy_pj).mean())
+
+    @property
+    def mean_energy_nj(self) -> float:
+        return self.mean_energy_pj * 1e-3
+
+    def energy_report(self) -> EnergyReport:
+        """Float64 post-hoc report over this evaluation's hops —
+        bit-identical to the legacy ``fog_energy(hops, ...)`` call."""
+        return self.model.report(np.asarray(self.hops))
 
 
 def sample_starts(key: jax.Array, B: int, G: int,
@@ -353,6 +391,8 @@ class FogEngine:
         self.lazy = lazy
         self.policy = policy if policy is not None else FogPolicy()
         self.tables = TableCache(lambda: self.gcs)
+        self._energy_models: dict[tuple[str, int], EnergyModel] = {}
+        self._n_features: int | None = None
         if self._seed_pack is not None:
             self.tables.seed(self._seed_pack)
         if use_kernels and backend != "ring":
@@ -462,13 +502,41 @@ class FogEngine:
         n_shards = self.mesh.shape[self.axis] if backend == "ring" else 1
         start = sample_starts(key, B, self.n_groves, n_shards)
         if backend == "ring":
-            return self._eval_ring(x, start, thresh_v, budget_v, max_hops,
-                                   p.precision)
-        return self._eval_chunked(x, start, thresh_v, budget_v, max_hops,
-                                  backend, p.block_b, p.chunk_b, p.lazy,
+            res = self._eval_ring(x, start, thresh_v, budget_v, max_hops,
                                   p.precision)
+        else:
+            res = self._eval_chunked(x, start, thresh_v, budget_v, max_hops,
+                                     backend, p.block_b, p.chunk_b, p.lazy,
+                                     p.precision)
+        # every evaluation path carries its own energy telemetry: callers
+        # read res.energy_pj instead of re-deriving HopMeter + fog_energy
+        self._n_features = int(x.shape[1])
+        model = self.energy_model(p.precision, x.shape[1])
+        return EvalReport(proba=res.proba, label=res.label, hops=res.hops,
+                          energy_pj=model.lane_pj(res.hops), model=model)
 
     __call__ = eval
+
+    def energy_model(self, precision: str | None = None,
+                     n_features: int | None = None) -> EnergyModel:
+        """The engine's :class:`EnergyModel` at ``precision`` (default: the
+        engine default precision).  ``n_features`` defaults to the pack's
+        feature-index domain only implicitly via the last evaluation; pass
+        it explicitly when pricing before any eval."""
+        precision = precision if precision is not None else self.precision
+        if n_features is None:
+            n_features = self._n_features
+            if n_features is None:
+                raise ValueError(
+                    "n_features unknown before the first eval; pass "
+                    "energy_model(precision, n_features=...) explicitly")
+        key = (precision, int(n_features))
+        model = self._energy_models.get(key)
+        if model is None:
+            model = EnergyModel.from_pack(
+                self.tables.pack(precision), n_features)
+            self._energy_models[key] = model
+        return model
 
     def _resolve_chunk(self, backend, pack: ForestPack, B: int, block_b: int,
                        chunk_b, n_features: int):
@@ -550,10 +618,22 @@ class FogEngine:
 # --------------------------------------------------------------------------
 
 class HopMeter:
-    """Streaming hop/energy accounting (the paper's per-input hop counter,
-    reused by the continuous-batching scheduler for per-request stats)."""
+    """DEPRECATED streaming hop counter.
+
+    Evaluation results now carry their own telemetry: ``FogEngine.eval``
+    returns an :class:`EvalReport` with per-lane ``energy_pj`` and the
+    pricing :class:`EnergyModel`, and the serving scheduler accumulates
+    :class:`~repro.serve.scheduler.ServeStats` (fed to an
+    ``EnergyGovernor`` when one is installed).  This shim keeps the old
+    accounting arithmetic working for external callers.
+    """
 
     def __init__(self) -> None:
+        warnings.warn(
+            "HopMeter is deprecated; read EvalReport.energy_pj from "
+            "FogEngine.eval (or ContinuousBatcher.stats on the serving "
+            "path) instead",
+            DeprecationWarning, stacklevel=2)
         self.total_hops = 0
         self.n_events = 0
 

@@ -125,6 +125,30 @@ class FogPolicy:
                                  "chunk_b", "lazy", "precision")
                      if getattr(self, k) is not None)
 
+    # -- persistence -----------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-safe scalar-knob dict (artifact persistence: FogClassifier
+        saves, frontier dumps).  Per-lane policies are batch-shaped state
+        and refuse to serialize."""
+        if self.per_lane:
+            raise ValueError(
+                "cannot serialize a per-lane policy (its threshold/"
+                "hop_budget vectors are batch-shaped)")
+
+        def scalar(v):
+            return v if v is None else np.asarray(v).item()
+
+        return {"threshold": scalar(self.threshold),
+                "max_hops": self.max_hops,
+                "hop_budget": scalar(self.hop_budget),
+                "backend": self.backend, "block_b": self.block_b,
+                "chunk_b": self.chunk_b, "lazy": self.lazy,
+                "precision": self.precision}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FogPolicy":
+        return cls(**d)
+
     # -- lane-vector materialization (the engines' single entry) ---------
     def lane_thresholds(self, B: int) -> jax.Array:
         """``threshold`` as a per-lane float32 ``[B]`` vector."""

@@ -17,11 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, smoke_config
-from repro.core.engine import HopMeter
 from repro.core.policy import FogPolicy
 from repro.data.lm_data import DataConfig, batch_at_step
 from repro.models import transformer as T
-from repro.models.fog_exit import decode_step_fog, grove_boundaries
+from repro.models.fog_exit import decode_step_fog, grove_boundaries, lm_hop_energy
+from repro.serve.governor import EnergyGovernor
 from repro.serve.scheduler import ContinuousBatcher, Request
 
 
@@ -49,8 +49,20 @@ def main() -> None:
                          "program per precision group")
     ap.add_argument("--hop-budget", type=int, default=None,
                     help="per-request grove budget (anytime decoding cap)")
+    ap.add_argument("--energy-budget-nj", type=float, default=None,
+                    help="serving SLO: rolling nJ/classification target — "
+                         "installs an EnergyGovernor that walks a "
+                         "threshold-tightening / hop-capping ladder when "
+                         "the rolling estimate breaches the budget "
+                         "(energy priced by the LM layer-grove FLOP proxy, "
+                         "models/fog_exit.lm_hop_energy)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.energy_budget_nj is not None and not args.fog:
+        # without --fog the decode step reports no hop telemetry: the
+        # governor would be a silent no-op, which is worse than an error
+        ap.error("--energy-budget-nj requires --fog (the governor needs "
+                 "the FoG decode path's hop telemetry)")
 
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     if cfg.frontend:
@@ -92,8 +104,28 @@ def main() -> None:
                                                 state["caches"], length)
         return logits, None
 
+    governor = None
+    if args.energy_budget_nj is not None:
+        model = lm_hop_energy(cfg)
+        t = args.thresh
+        # quality-descending LM ladder: tighten the exit threshold, then
+        # cap hops at whatever the budget affords (int8 rungs are moot —
+        # the layer-grove gate has no packed forest tables).  An explicit
+        # --hop-budget stays a ceiling on every rung: the bottom rung may
+        # only TIGHTEN it, or the ladder would stop descending
+        cap = model.hops_within(args.energy_budget_nj * 1e3)
+        if args.hop_budget is not None:
+            cap = min(cap, args.hop_budget)
+        ladder = [default_policy,
+                  default_policy.replace(threshold=t * 0.5),
+                  default_policy.replace(threshold=t * 0.25),
+                  default_policy.replace(threshold=t * 0.25,
+                                         hop_budget=cap)]
+        governor = EnergyGovernor(ladder, args.energy_budget_nj,
+                                  model=model, window=max(args.slots * 4, 16))
     batcher = ContinuousBatcher(args.slots, decode_fn, prefill_fn, eos_id=-1,
-                                meter=HopMeter(), default_policy=default_policy)
+                                default_policy=default_policy,
+                                governor=governor)
     dcfg = DataConfig(cfg.vocab_size, 32, 8, seed=args.seed + 7)
     for rid in range(args.requests):
         prompt = batch_at_step(dcfg, rid)["tokens"][0, :24] % cfg.vocab_size
@@ -111,7 +143,9 @@ def main() -> None:
             h = np.asarray(r.hops, np.float64)
             print(f"  req {r.rid}: groves/token {h.mean():.2f} "
                   f"(flops frac {h.mean() / g:.2f})")
-        print(f"[serve] fleet {batcher.meter.summary(g)}")
+        print(f"[serve] fleet {batcher.stats.summary(g)}")
+        if governor is not None:
+            print(f"[serve] governor {governor.summary()}")
 
 
 if __name__ == "__main__":

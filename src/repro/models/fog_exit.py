@@ -44,6 +44,21 @@ def grove_boundaries(cfg: ArchConfig) -> list[int]:
     return sizes
 
 
+def lm_hop_energy(cfg: ArchConfig):
+    """Price one layer-grove "hop" of the LM exit gate: the grove's share
+    of the active per-token MACs at the shared per-op energies
+    (:mod:`repro.core.energy` constants — a FLOP-proportional proxy, not
+    the classifier's tree-SRAM model).  Returns an
+    :class:`~repro.core.energy.AffineEnergy`, so the serving
+    ``EnergyGovernor`` prices LM hop telemetry with the same contract it
+    uses for forest EvalReports."""
+    from repro.configs.base import param_count
+    from repro.core.energy import E_FP32_MAC, E_SRAM_R32, AffineEnergy
+    _, active = param_count(cfg)
+    per_grove_macs = active / max(1, len(grove_boundaries(cfg)))
+    return AffineEnergy(per_hop_pj=per_grove_macs * (E_FP32_MAC + E_SRAM_R32))
+
+
 def _stack_slice(stack, start: int, size: int):
     return jax.tree.map(lambda x: jax.lax.slice_in_dim(x, start, start + size,
                                                        axis=0), stack)

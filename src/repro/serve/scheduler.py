@@ -23,11 +23,23 @@ once per distinct precision present (each call still carries the full
 per-lane threshold/budget vectors; each slot's outputs are harvested from
 its own precision's call).  A homogeneous batch — the common case — still
 costs exactly one dispatch.
+
+Energy governance: install an :class:`~repro.serve.governor.EnergyGovernor`
+and the batcher serves under an nJ/classification SLO — each step's default
+policy is the governor's active ladder rung, every step's hop telemetry
+feeds its rolling estimate, and the governor steps down the ladder (tighten
+threshold -> int8 -> cut hop budget) on a breach, back up when headroom
+returns.  A request may carry ``energy_budget_nj`` instead of an explicit
+policy: the governor resolves it against the calibrated frontier into the
+highest-accuracy rung fitting that budget (hop budget clamped so the
+contract is hard).  Telemetry lives in :class:`ServeStats` — the old
+``HopMeter`` plumbing survives only as a deprecation shim.
 """
 from __future__ import annotations
 
 import dataclasses
 import inspect
+import warnings
 from collections import deque
 from typing import Callable
 
@@ -47,10 +59,57 @@ class Request:
     # per-request QoS contract (scalar threshold / hop budget); None = the
     # batcher's default policy
     policy: FogPolicy | None = None
+    # per-request energy contract: resolved at submit() into a policy via
+    # the batcher's governor (mutually exclusive with an explicit policy)
+    energy_budget_nj: float | None = None
     # filled by the scheduler:
     generated: list = dataclasses.field(default_factory=list)
     hops: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Fleet-level serving telemetry (replaces the deprecated HopMeter):
+    hop counts of every decoded event, plus modeled pJ when a governor (or
+    its energy model) is installed to price them."""
+
+    total_hops: int = 0
+    n_events: int = 0
+    total_pj: float = 0.0
+    has_energy: bool = False
+
+    def update(self, hops, energy_pj=None) -> None:
+        h = np.asarray(hops)
+        self.total_hops += int(h.sum())
+        self.n_events += int(h.size)
+        if energy_pj is not None:
+            self.total_pj += float(np.asarray(energy_pj, np.float64).sum())
+            self.has_energy = True
+
+    def reset(self) -> None:
+        self.total_hops = 0
+        self.n_events = 0
+        self.total_pj = 0.0
+        self.has_energy = False
+
+    @property
+    def mean_hops(self) -> float:
+        return self.total_hops / max(1, self.n_events)
+
+    @property
+    def mean_energy_nj(self) -> float:
+        """Mean modeled nJ per decoded event (0.0 until priced telemetry
+        arrives)."""
+        return self.total_pj * 1e-3 / max(1, self.n_events)
+
+    def summary(self, n_groves: int) -> str:
+        s = (f"hops/event {self.mean_hops:.2f} "
+             f"(grove fraction {self.mean_hops / max(1, n_groves):.2f}, "
+             f"{self.n_events} events)")
+        if self.has_energy:
+            s += f", {self.mean_energy_nj:.3f} nJ/event"
+        return s
 
 
 @dataclasses.dataclass
@@ -80,12 +139,17 @@ class ContinuousBatcher:
     prefill_fn(slot, prompt) -> int  (returns prompt length in cache)
     default_policy: applied to slots whose request carries no policy (and
         to empty lanes); its static knobs select the compiled program.
+    governor: optional EnergyGovernor — when set, the *governor's active
+        rung* replaces default_policy each step, per-step hop telemetry
+        feeds its rolling estimate, and requests may carry
+        ``energy_budget_nj`` contracts.
+    meter: DEPRECATED — pass nothing and read ``batcher.stats`` instead.
     """
 
     def __init__(self, n_slots: int, decode_fn: Callable,
                  prefill_fn: Callable, eos_id: int = 1,
-                 meter: HopMeter | None = None,
-                 default_policy: FogPolicy | None = None):
+                 meter=None, default_policy: FogPolicy | None = None,
+                 governor=None):
         self.slots = [SlotState() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
         self.decode_fn = decode_fn
@@ -98,12 +162,68 @@ class ContinuousBatcher:
             raise ValueError(
                 "default_policy must carry scalar knobs; the batcher "
                 "assembles the per-lane vectors itself each step")
+        self.governor = governor
         self._policy_aware = _takes_policy(decode_fn)
-        # fleet-level FoG accounting: hop counts of every decoded token feed
-        # the same meter the engine's energy model reads
-        self.meter = meter if meter is not None else HopMeter()
+        if governor is not None:
+            # a governor that can never act must be rejected loudly — a
+            # silently unenforced SLO is worse than no governor at all
+            if governor.model is None:
+                raise ValueError(
+                    "the batcher's governor needs an energy model to price "
+                    "hop telemetry; construct EnergyGovernor(..., "
+                    "model=...)")
+            if not self._policy_aware:
+                raise ValueError(
+                    "a governor needs a policy-aware decode_fn(tokens, "
+                    "lengths, policy) — a legacy two-arg decode_fn would "
+                    "never serve the governor's rung policy")
+        # fleet-level FoG accounting: hop counts (and, with a governor's
+        # energy model, modeled pJ) of every decoded token
+        self.stats = ServeStats()
+        if meter is not None:
+            warnings.warn(
+                "ContinuousBatcher(meter=...) is deprecated; per-step "
+                "telemetry lives in batcher.stats (and the governor's "
+                "rolling estimate)", DeprecationWarning, stacklevel=2)
+        self._meter = meter
+
+    @property
+    def meter(self):
+        """DEPRECATED — legacy readers of the always-present HopMeter get
+        a shim seeded from ``stats`` (same totals), plus the warning."""
+        if self._meter is None:
+            warnings.warn(
+                "ContinuousBatcher.meter is deprecated; read "
+                "batcher.stats (ServeStats) instead",
+                DeprecationWarning, stacklevel=2)
+            m = HopMeter.__new__(HopMeter)   # we already warned just above
+            m.total_hops = self.stats.total_hops
+            m.n_events = self.stats.n_events
+            self._meter = m
+        return self._meter
 
     def submit(self, req: Request) -> None:
+        if req.energy_budget_nj is not None:
+            if req.policy is not None:
+                raise ValueError(
+                    f"request {req.rid}: pass either policy or "
+                    "energy_budget_nj, not both (the budget is resolved "
+                    "into a policy)")
+            if self.governor is None:
+                raise ValueError(
+                    f"request {req.rid}: energy_budget_nj needs a "
+                    "governor (construct ContinuousBatcher(..., "
+                    "governor=EnergyGovernor(frontier, ...)))")
+            pol = self.governor.policy_for_budget(req.energy_budget_nj)
+            # the per-request contract is the per-lane/bucketed knobs only
+            # (threshold, hop budget, precision); any static knobs the
+            # ladder rung inherited from the fleet default (backend,
+            # max_hops, ...) stay with the fleet default — they select the
+            # compiled program and would otherwise trip the static-knob
+            # rejection below
+            req.policy = FogPolicy(threshold=pol.threshold,
+                                   hop_budget=pol.hop_budget,
+                                   precision=pol.precision)
         if req.policy is not None:
             if req.policy.per_lane:
                 raise ValueError(
@@ -135,11 +255,14 @@ class ContinuousBatcher:
 
     def lane_policy(self) -> FogPolicy:
         """The current batch policy: slot policies stacked into per-lane
-        threshold / hop-budget vectors (empty lanes get the default)."""
+        threshold / hop-budget vectors (empty lanes get the default — the
+        governor's active ladder rung when one is installed)."""
+        default = (self.governor.current if self.governor is not None
+                   else self.default_policy)
         return assemble(
             [s.request.policy if s.request is not None else None
              for s in self.slots],
-            default=self.default_policy)
+            default=default)
 
     def _precision_groups(self) -> dict:
         """Slot indices keyed by requested precision (None = the default
@@ -196,6 +319,11 @@ class ContinuousBatcher:
                                           jnp.asarray(lengths))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         hops = np.asarray(hops) if hops is not None else None
+        if hops is None and self.governor is not None:
+            raise ValueError(
+                "the governor needs hop telemetry but decode_fn returned "
+                "hops=None; the energy SLO cannot be enforced")
+        step_hops = []
         for i, s in enumerate(self.slots):
             req = s.request
             if req is None:
@@ -205,13 +333,46 @@ class ContinuousBatcher:
             if hops is not None:
                 h = int(hops[i])
                 req.hops.append(h)
-                self.meter.update(h)
+                step_hops.append(
+                    (h, req.policy.precision if req.policy is not None
+                     else None))
             s.length += 1
             if tok == self.eos_id or len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 self.completed.append(req)
                 self.slots[i] = SlotState()
+        if step_hops:
+            self._account(step_hops)
         return self.active
+
+    def _account(self, step_hops: list) -> None:
+        """Fold one step's active-lane (hops, request precision) pairs into
+        the fleet telemetry and let the governor react (its rolling
+        estimate + ladder walk).  Each lane is priced at ITS OWN effective
+        precision — the request policy's, falling back to the governor's
+        active rung — so mixed-precision batches are billed at the byte
+        widths they actually dispatched and an int8 step-down shows up as
+        a measured saving."""
+        hops = np.asarray([h for h, _ in step_hops])
+        energy_pj = None
+        if self.governor is not None:
+            # one lane_pj call per distinct precision in the step (usually
+            # one), not per lane — this runs per decoded token
+            rung_prec = self.governor.current.precision
+            groups: dict[str | None, list[int]] = {}
+            for i, (_, prec) in enumerate(step_hops):
+                groups.setdefault(
+                    prec if prec is not None else rung_prec, []).append(i)
+            energy_pj = np.empty(len(step_hops), np.float64)
+            for prec, idxs in groups.items():
+                energy_pj[idxs] = np.asarray(
+                    self.governor.model_for(prec).lane_pj(hops[idxs]))
+        self.stats.update(hops, energy_pj)
+        if self._meter is not None:      # deprecated shim path
+            self._meter.update(hops)
+        if self.governor is not None:
+            self.governor.observe(energy_pj=energy_pj)
+            self.governor.step()
 
     def run(self, max_steps: int = 10000) -> list[Request]:
         steps = 0

@@ -28,8 +28,16 @@ default, and each ``predict`` / ``predict_proba`` / ``score`` call accepts a
 per-call override (including per-lane threshold vectors and hop budgets).
 
 ``profile()`` exposes the paper's energy story for everything classified so
-far: per-input hop counts are recorded at each evaluation and the energies
-come from :func:`~repro.core.energy.fog_energy`.
+far: every evaluation's :class:`~repro.core.engine.EvalReport` carries its
+own hop counts and :class:`~repro.core.energy.EnergyModel` pricing, and the
+profile aggregates them.
+
+Energy budgets are first-class: ``set_energy_budget(nj, X_cal, y_cal)``
+calibrates a Pareto frontier over the runtime knobs
+(:mod:`repro.core.frontier`) and pins the highest-accuracy policy meeting
+the budget; ``profile()`` then reports measured-vs-budget, and ``save``
+persists the frontier so a loaded model serves under the trained budget
+(and can hand the frontier straight to a serving ``EnergyGovernor``).
 """
 from __future__ import annotations
 
@@ -39,8 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.energy import fog_energy
-from repro.core.engine import FogEngine, FogResult
+from repro.core.engine import EvalReport, FogEngine
+from repro.core.frontier import Frontier, build_frontier, default_grid
 from repro.core.grove import split
 from repro.core.policy import PRECISIONS, FogPolicy
 from repro.forest.pack import ForestPack
@@ -154,8 +162,9 @@ class FogClassifier:
             raise RuntimeError("FogClassifier is not fitted; call fit(X, y)")
 
     def evaluate(self, X, *, policy: FogPolicy | None = None,
-                 key: jax.Array | None = None) -> FogResult:
-        """Full Algorithm-2 evaluation: the FogResult (proba/label/hops).
+                 key: jax.Array | None = None) -> EvalReport:
+        """Full Algorithm-2 evaluation: the EvalReport (proba/label/hops
+        plus per-lane ``energy_pj`` and the pricing EnergyModel).
 
         Start groves are drawn from ``key`` (default: a fixed seed-derived
         key, so repeated calls are deterministic).  Hop counts feed the
@@ -166,10 +175,9 @@ class FogClassifier:
             key = jax.random.key(self.seed)
         res = self.engine_.eval(jnp.asarray(X, jnp.float32), key,
                                 policy=policy)
-        # record the precision each batch actually ran at, so profile()'s
-        # per-node byte accounting matches the evaluation
-        self._hops.append((np.asarray(res.hops),
-                           self.engine_.resolve(policy).precision))
+        # the report carries the model it was priced with (the precision
+        # the batch actually ran at), so profile() just aggregates reports
+        self._hops.append((np.asarray(res.hops), res.model))
         return res
 
     def predict(self, X, *, policy: FogPolicy | None = None,
@@ -193,37 +201,106 @@ class FogClassifier:
         """Hop/energy accounting over everything classified since fit.
 
         Returns mean hops per input, the modeled energy per classification
-        (nJ, from :func:`fog_energy`'s per-op 40/45nm accounting), totals,
-        and the hop histogram — the per-input adaptive-energy distribution
-        that is the paper's whole point.
+        (nJ, each batch priced by its own EvalReport's
+        :class:`~repro.core.energy.EnergyModel` — an int8 batch reads fewer
+        SRAM bytes per node than an fp32 one of the same hops), totals, and
+        the hop histogram — the per-input adaptive-energy distribution that
+        is the paper's whole point.  When an energy budget is pinned
+        (:meth:`set_energy_budget`), the profile also reports
+        measured-vs-budget.
         """
         self._check_fitted()
+        budget = getattr(self, "energy_budget_nj_", None)
         if not self._hops:
-            return {"n_classified": 0, "mean_hops": 0.0,
-                    "energy_nj_per_classification": 0.0,
-                    "total_energy_nj": 0.0, "hops_histogram": {}}
-        hops = np.concatenate([h for h, _ in self._hops])
-        # energy accumulates per (batch, precision): an int8 batch reads
-        # fewer SRAM bytes per node than an fp32 one of the same hops.
-        # Geometry comes from the engine's pack (never dequantizes).
-        pk = self.engine_.tables.pack(self.engine_.precision)
-        total_pj = sum(
-            fog_energy(h, pk.grove_size, pk.depth, pk.n_classes,
-                       self.n_features_in_, precision=prec).total_pj
-            for h, prec in self._hops)
-        vals, counts = np.unique(hops, return_counts=True)
-        return {
-            "n_classified": int(hops.size),
-            "mean_hops": float(hops.mean()),
-            "energy_nj_per_classification": total_pj * 1e-3 / hops.size,
-            "total_energy_nj": total_pj * 1e-3,
-            "hops_histogram": {int(v): int(c) for v, c in zip(vals, counts)},
-        }
+            out = {"n_classified": 0, "mean_hops": 0.0,
+                   "energy_nj_per_classification": 0.0,
+                   "total_energy_nj": 0.0, "hops_histogram": {}}
+        else:
+            hops = np.concatenate([h for h, _ in self._hops])
+            total_pj = sum(model.report(h).total_pj
+                           for h, model in self._hops)
+            vals, counts = np.unique(hops, return_counts=True)
+            out = {
+                "n_classified": int(hops.size),
+                "mean_hops": float(hops.mean()),
+                "energy_nj_per_classification": total_pj * 1e-3 / hops.size,
+                "total_energy_nj": total_pj * 1e-3,
+                "hops_histogram": {int(v): int(c)
+                                   for v, c in zip(vals, counts)},
+            }
+        if budget is not None:
+            out["energy_budget_nj"] = float(budget)
+            # None until traffic exists: "no evidence yet" is not a breach
+            out["within_budget"] = (
+                None if out["n_classified"] == 0
+                else out["energy_nj_per_classification"] <= budget)
+        return out
 
     def reset_profile(self) -> None:
         """Clear the hop/energy accounting."""
         self._check_fitted()
         self._hops.clear()
+
+    # -- energy budgets ----------------------------------------------------
+    def set_energy_budget(self, energy_budget_nj: float, X_cal, y_cal, *,
+                          policies=None, key: jax.Array | None = None,
+                          ) -> "FogClassifier":
+        """Calibrate-and-pin: build the Pareto frontier over the runtime
+        knobs on (X_cal, y_cal) and make the highest-accuracy policy
+        meeting ``energy_budget_nj`` the default for every subsequent
+        ``predict``/``score`` call (paper Fig. 5's operating-point
+        selection, pinned on the estimator).
+
+        The calibrated frontier is kept on ``self.frontier_`` (and
+        persisted by :meth:`save`), so a serving ``EnergyGovernor`` can
+        walk the same ladder the budget was picked from.  The profile
+        accounting is reset: measured-vs-budget must describe traffic
+        served UNDER the pinned policy, not batches evaluated before the
+        budget existed.  Raises ValueError when no policy on the frontier
+        fits the budget.  Returns ``self`` (sklearn chaining idiom).
+        """
+        self._check_fitted()
+        if self.policy.per_lane:
+            raise ValueError(
+                "cannot calibrate a budget on a per-lane default policy "
+                "(its threshold/hop_budget vectors are batch-shaped); set "
+                "scalar knobs and pass per-lane vectors per call")
+        if policies is None:
+            # the default grid sweeps threshold x precision ON TOP OF the
+            # estimator's configured policy, so knobs the grid does not
+            # vary (max_hops, hop_budget, backend, ...) survive the pin
+            policies = default_grid(base=self.policy)
+        frontier = build_frontier(
+            self.engine_, np.asarray(X_cal, np.float32),
+            np.asarray(y_cal), policies,
+            key if key is not None else jax.random.key(self.seed))
+        # select BEFORE committing any state: an unmeetable budget must
+        # leave the previous (frontier, budget, policy) triple intact
+        point = frontier.under_budget(float(energy_budget_nj))
+        self.frontier_ = frontier
+        self.energy_budget_nj_ = float(energy_budget_nj)
+        self.policy = point.policy
+        self.engine_.policy = point.policy
+        self.reset_profile()
+        return self
+
+    def governor(self, energy_budget_nj: float | None = None, **kw):
+        """An :class:`~repro.serve.governor.EnergyGovernor` over this
+        model's calibrated frontier (requires :meth:`set_energy_budget`
+        first, or a loaded artifact that persisted one), priced by the
+        engine's own EnergyModel — ready to hand to
+        ``ContinuousBatcher(governor=...)``."""
+        from repro.serve.governor import EnergyGovernor
+        self._check_fitted()
+        if getattr(self, "frontier_", None) is None:
+            raise RuntimeError(
+                "no calibrated frontier; call set_energy_budget(nj, X_cal, "
+                "y_cal) first (or load an artifact that persisted one)")
+        budget = (energy_budget_nj if energy_budget_nj is not None
+                  else getattr(self, "energy_budget_nj_", None))
+        model = self.engine_.energy_model(self.engine_.precision,
+                                          self.n_features_in_)
+        return EnergyGovernor(self.frontier_, budget, model=model, **kw)
 
     # -- precision & persistence ------------------------------------------
     def quantize(self, precision: str = "int8") -> "FogClassifier":
@@ -253,11 +330,12 @@ class FogClassifier:
         The artifact holds the packed tables at the classifier's default
         precision (or an explicit ``precision=``) plus the facade state
         needed to reconstruct the estimator — including the default
-        FogPolicy, so the loaded model predicts under the same knobs;
-        ``FogClassifier.load`` round-trips it bit-exactly at the saved
-        precision.  (``train_cfg`` is training-time-only state and is not
-        persisted.)  A per-lane default policy is batch-shaped and cannot
-        travel with the model.
+        FogPolicy and, when :meth:`set_energy_budget` calibrated one, the
+        energy budget and its Pareto frontier — so the loaded model serves
+        under the trained budget; ``FogClassifier.load`` round-trips it
+        bit-exactly at the saved precision.  (``train_cfg`` is
+        training-time-only state and is not persisted.)  A per-lane default
+        policy is batch-shaped and cannot travel with the model.
         """
         self._check_fitted()
         if self.policy.per_lane:
@@ -265,29 +343,53 @@ class FogClassifier:
                 "cannot save a per-lane default policy (its threshold/"
                 "hop_budget vectors are batch-shaped); set scalar knobs on "
                 "the default policy and pass per-lane vectors per call")
-        prec = precision if precision is not None else self.precision
+        # the artifact's pack matches what the model must be able to
+        # serve.  With a calibrated frontier aboard, that is EVERY rung:
+        # the pack is saved at the highest-fidelity precision any rung
+        # uses (an fp32 pack re-quantizes int8 rungs bit-exactly; an int8
+        # pack cannot reconstruct an fp32 rung's tables, which would let
+        # the governor climb onto rungs whose calibration no longer
+        # describes what runs).  Without a frontier, the pinned policy's
+        # precision (else the estimator default) keeps the artifact as
+        # small as its one operating point needs.
+        frontier = getattr(self, "frontier_", None)
+        rung_precs = (None if frontier is None else
+                      {p.policy.precision for p in frontier.points})
+        prec = precision
+        if prec is None:
+            if rung_precs is not None:
+                prec = next(q for q in PRECISIONS
+                            if q in rung_precs or None in rung_precs)
+            else:
+                prec = (self.policy.precision if self.policy.precision
+                        is not None else self.precision)
+        elif rung_precs is not None:
+            # an explicit precision may not strand frontier rungs that
+            # need higher fidelity: after load their tables would be
+            # rebuilt from the lossier pack and the stored calibration
+            # would no longer describe what runs
+            needed = next(q for q in PRECISIONS
+                          if q in rung_precs or None in rung_precs)
+            if PRECISIONS.index(prec) > PRECISIONS.index(needed):
+                raise ValueError(
+                    f"cannot save at precision={prec!r}: the calibrated "
+                    f"frontier carries {needed} rungs whose tables an "
+                    f"{prec} pack cannot reconstruct; save without "
+                    "precision=, or recalibrate on an all-"
+                    f"{prec} grid first")
         pack = self.engine_.tables.pack(prec)
-
-        def scalar(v):
-            return v if v is None else np.asarray(v).item()
-
         extra = {
             "estimator": "FogClassifier",
             "n_trees": self.n_trees, "grove_size": self.grove_size,
             "max_depth": self.max_depth, "backend": self.backend,
             "seed": self.seed, "n_classes": self.n_classes_,
             "n_features_in": self.n_features_in_,
-            "policy": {
-                "threshold": scalar(self.policy.threshold),
-                "max_hops": self.policy.max_hops,
-                "hop_budget": scalar(self.policy.hop_budget),
-                "backend": self.policy.backend,
-                "block_b": self.policy.block_b,
-                "chunk_b": self.policy.chunk_b,
-                "lazy": self.policy.lazy,
-                "precision": self.policy.precision,
-            },
+            "policy": self.policy.to_dict(),
         }
+        if getattr(self, "frontier_", None) is not None:
+            extra["frontier"] = self.frontier_.to_dict()
+        if getattr(self, "energy_budget_nj_", None) is not None:
+            extra["energy_budget_nj"] = self.energy_budget_nj_
         return pack.save(path, extra=extra)
 
     @classmethod
@@ -314,6 +416,18 @@ class FogClassifier:
         clf.engine_ = FogEngine(pack, backend=clf.backend, policy=clf.policy)
         clf.n_classes_ = extra["n_classes"]
         clf.n_features_in_ = extra["n_features_in"]
+        if "frontier" in extra:
+            clf.frontier_ = Frontier.from_dict(extra["frontier"])
+            try:
+                # under_budget/ladder assume the Pareto invariant; a
+                # corrupted or hand-edited artifact must fail at load, not
+                # silently resolve budgets to a lower-accuracy point
+                clf.frontier_.check_monotone()
+            except AssertionError as e:
+                raise ValueError(
+                    f"{path}: persisted frontier is corrupt: {e}") from e
+        if "energy_budget_nj" in extra:
+            clf.energy_budget_nj_ = float(extra["energy_budget_nj"])
         clf._hops = []
         return clf
 

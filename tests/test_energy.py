@@ -1,0 +1,173 @@
+"""EnergyModel regression wall (core/energy.py).
+
+The refactor's contract: the fp32 :class:`EnergyModel` reproduces the
+pre-EnergyModel ``fog_energy`` accounting *bit-for-bit* on the Table-1
+topologies (the inline legacy formula below is a frozen copy of the
+pre-refactor arithmetic, plus hard golden floats), and quantized packs are
+strictly cheaper — as BOUNDS, never cross-precision bit-identity (see the
+cross-compile ULP flakiness note: quantized comparisons assert ordering and
+tolerances only).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AffineEnergy, EnergyModel, EvalReport, FogEngine,
+                        FogPolicy, fog_energy, split)
+from repro.core.energy import (E_CMP8, E_INT8_ADD, E_SRAM_R32, E_SRAM_W32,
+                               grove_energy_pj, hop_transfer_energy_pj)
+from repro.forest.pack import PRECISION_BYTES
+
+HOPS = np.array([1, 1, 2, 3, 5, 8, 8, 16])
+
+# (grove_size, depth, n_classes, n_features, golden per_example_pj @ HOPS)
+# — goldens computed from the pre-refactor fog_energy and frozen here
+TABLE1_TOPOLOGIES = {
+    "isolet": (2, 12, 26, 617, 13790.048101780703),
+    "penbased": (2, 9, 10, 16, 2031.0327186969062),
+    "mnist": (2, 12, 10, 784, 13747.210150421675),
+    "letter": (2, 11, 26, 16, 5024.898240865146),
+    "segmentation": (2, 8, 7, 19, 1750.115),
+}
+
+
+def _legacy_fog_energy_per_example(hops, grove_size, depth, n_classes,
+                                   n_features, precision="fp32"):
+    """Frozen copy of the pre-EnergyModel fog_energy arithmetic."""
+    hops = np.asarray(hops, np.float64)
+    per_grove = grove_energy_pj(grove_size, depth, n_classes, precision)
+    transfer = hop_transfer_energy_pj(n_features, n_classes)
+    per_ex = hops * per_grove + np.maximum(hops - 1, 0) * transfer
+    return float(per_ex.mean()), float(per_ex.sum())
+
+
+@pytest.mark.parametrize("name", sorted(TABLE1_TOPOLOGIES))
+def test_fp32_model_reproduces_legacy_fog_energy_bit_for_bit(name):
+    k, d, C, F, golden = TABLE1_TOPOLOGIES[name]
+    model = EnergyModel(k, d, C, F)
+    rep = model.report(HOPS)
+    mean, total = _legacy_fog_energy_per_example(HOPS, k, d, C, F)
+    assert rep.per_example_pj == mean          # bit-for-bit, not allclose
+    assert rep.total_pj == total
+    assert rep.per_example_pj == golden        # frozen pre-refactor value
+    # and the wrapper is the model
+    assert fog_energy(HOPS, k, d, C, F) == rep
+
+
+@pytest.mark.parametrize("name", sorted(TABLE1_TOPOLOGIES))
+@pytest.mark.parametrize("quant", ["bf16", "int8"])
+def test_quantized_energy_strictly_below_fp32(name, quant):
+    """Bounds, not bit-identity: same topology + hops, narrower thresholds
+    must cost strictly less (fewer SRAM bytes per node), and int8 <= bf16."""
+    k, d, C, F, _ = TABLE1_TOPOLOGIES[name]
+    fp32 = EnergyModel(k, d, C, F, "fp32").report(HOPS).per_example_pj
+    q = EnergyModel(k, d, C, F, quant).report(HOPS).per_example_pj
+    assert q < fp32
+    if quant == "int8":
+        bf16 = EnergyModel(k, d, C, F, "bf16").report(HOPS).per_example_pj
+        assert q < bf16
+
+
+def test_precision_scales_only_the_tree_walk_term():
+    """The quantized saving is exactly the per-node byte difference: the
+    accumulate/MaxDiff and transfer terms are precision-independent."""
+    m32 = EnergyModel(2, 9, 10, 16, "fp32")
+    m8 = EnergyModel(2, 9, 10, 16, "int8")
+    assert m32.transfer_pj == m8.transfer_pj
+    # per-hop difference is entirely inside the k tree walks
+    words = max(1, (10 + 3) // 4)
+    agg_conf = (10 * E_INT8_ADD + words * (E_SRAM_R32 + E_SRAM_W32)
+                + 10 * E_CMP8 + E_INT8_ADD)
+    assert m32.per_hop_pj - agg_conf > m8.per_hop_pj - agg_conf > 0
+    assert PRECISION_BYTES["int8"] < PRECISION_BYTES["fp32"]
+
+
+def test_hops_within_inverts_lane_pj():
+    m = EnergyModel(2, 8, 10, 16)
+    for budget_pj in [100.0, 500.0, 2000.0, 10_000.0]:
+        h = m.hops_within(budget_pj)
+        assert h >= 1
+        if h > 1:   # affordable: h hops fit, h+1 would overspend
+            assert float(m.lane_pj(np.asarray([h]))[0]) <= budget_pj
+        assert float(m.lane_pj(np.asarray([h + 1]))[0]) > budget_pj
+    # a budget below one hop still buys the mandatory first hop
+    assert m.hops_within(0.0) == 1
+
+
+def test_affine_energy_same_contract():
+    m = EnergyModel(2, 8, 10, 16)
+    a = AffineEnergy(per_hop_pj=m.per_hop_pj, transfer_pj=m.transfer_pj)
+    assert a.report(HOPS) == m.report(HOPS)
+    assert a.hops_within(1234.5) == m.hops_within(1234.5)
+
+
+def test_mean_pj_matches_report_mean():
+    m = EnergyModel(2, 8, 10, 16)
+    hops = np.array([2, 3, 4, 7])   # all >= 1: affinity is exact
+    assert m.mean_pj(float(hops.mean())) == pytest.approx(
+        m.report(hops).per_example_pj, rel=1e-12)
+
+
+def test_energy_report_str_uses_nj():
+    rep = EnergyModel(2, 8, 10, 16).report(HOPS)
+    assert "nJ" in str(rep) and "pJ" not in str(rep)
+
+
+# ---------------------------------------------------------------------------
+# EvalReport: the engine's own telemetry replaces HopMeter + fog_energy
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine(trained):
+    _, rf = trained
+    return FogEngine(split(rf, 2))
+
+
+def test_eval_returns_report_with_consistent_energy(engine, trained):
+    ds, _ = trained
+    x = jnp.asarray(ds.x_test[:128])
+    res = engine.eval(x, jax.random.key(0), policy=FogPolicy(threshold=0.3))
+    assert isinstance(res, EvalReport)
+    assert res.energy_pj.shape == res.hops.shape
+    assert res.precision == "fp32"
+    # the device-side estimate agrees with the model's pricing
+    np.testing.assert_allclose(
+        np.asarray(res.energy_pj),
+        np.asarray(res.model.lane_pj(np.asarray(res.hops))), rtol=1e-6)
+    # and the float64 report is bit-identical to the legacy call
+    gc = engine.gcs[0]
+    assert res.energy_report() == fog_energy(
+        np.asarray(res.hops), gc.grove_size, gc.depth, gc.n_classes,
+        ds.x_test.shape[1])
+
+
+def test_eval_report_precision_follows_policy(engine, trained):
+    ds, _ = trained
+    x = jnp.asarray(ds.x_test[:64])
+    res8 = engine.eval(x, jax.random.key(0),
+                       policy=FogPolicy(threshold=0.3, precision="int8"))
+    assert res8.precision == "int8"
+    # same hops would be strictly cheaper at int8 (bounds only)
+    m32 = engine.energy_model("fp32")
+    assert res8.model.report(np.asarray(res8.hops)).per_example_pj < \
+        m32.report(np.asarray(res8.hops)).per_example_pj
+
+
+def test_chunked_eval_carries_energy_too(engine, trained):
+    ds, _ = trained
+    x = jnp.asarray(ds.x_test[:97])     # prime-ish: forces a padded tail
+    pol = FogPolicy(threshold=0.3, chunk_b=32)
+    res = engine.eval(x, jax.random.key(1), policy=pol)
+    want = engine.eval(x, jax.random.key(1), policy=FogPolicy(threshold=0.3))
+    np.testing.assert_array_equal(np.asarray(res.hops), np.asarray(want.hops))
+    np.testing.assert_allclose(np.asarray(res.energy_pj),
+                               np.asarray(want.energy_pj), rtol=1e-6)
+
+
+def test_energy_model_cached_per_precision(engine, trained):
+    ds, _ = trained
+    engine.eval(jnp.asarray(ds.x_test[:32]), jax.random.key(0),
+                policy=FogPolicy(threshold=0.3))
+    assert engine.energy_model("fp32") is engine.energy_model("fp32")
+    assert engine.energy_model("fp32") != engine.energy_model("int8")

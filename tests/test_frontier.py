@@ -1,0 +1,195 @@
+"""Pareto frontier + auto_policy (core/frontier.py) — the planning layer."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (FogEngine, FogPolicy, Frontier, FrontierPoint,
+                        auto_policy, build_frontier, default_grid,
+                        sweep_policies, split)
+from repro.core.frontier import find_opt_threshold, select_min_edp
+
+
+def _pt(thresh, acc, nj, hops=1.0):
+    return FrontierPoint(policy=FogPolicy(threshold=thresh), accuracy=acc,
+                         energy_nj=nj, mean_hops=hops)
+
+
+# ---------------------------------------------------------------- pruning ----
+def test_dominated_points_are_pruned():
+    pts = [_pt(0.1, 0.90, 1.0), _pt(0.2, 0.95, 2.0),
+           _pt(0.3, 0.93, 3.0),      # dominated: pricier AND less accurate
+           _pt(0.4, 0.97, 4.0),
+           _pt(0.5, 0.95, 2.5)]      # dominated by the 0.95 @ 2.0 point
+    f = Frontier(pts)
+    assert [p.accuracy for p in f.points] == [0.90, 0.95, 0.97]
+    f.check_monotone()
+
+
+def test_duplicate_accuracy_keeps_cheapest():
+    f = Frontier([_pt(0.1, 0.95, 1.0), _pt(0.2, 0.95, 2.0)])
+    assert len(f) == 1 and f.points[0].energy_nj == 1.0
+
+
+def test_check_monotone_rejects_violation():
+    f = Frontier([_pt(0.1, 0.9, 1.0), _pt(0.2, 0.95, 2.0)])
+    # sabotage the invariant the way a regressed builder would
+    object.__setattr__(f.points[1], "accuracy", 0.5)
+    with pytest.raises(AssertionError, match="not monotone"):
+        f.check_monotone()
+
+
+def test_empty_frontier_rejected():
+    with pytest.raises(ValueError):
+        Frontier([])
+
+
+# ----------------------------------------------------------- under budget ----
+def test_under_budget_picks_highest_accuracy_fitting():
+    f = Frontier([_pt(0.1, 0.90, 1.0), _pt(0.2, 0.95, 2.0),
+                  _pt(0.4, 0.97, 4.0)])
+    assert f.under_budget(2.5).accuracy == 0.95
+    assert f.under_budget(100.0).accuracy == 0.97
+    with pytest.raises(ValueError, match="below the cheapest"):
+        f.under_budget(0.5)
+
+
+def test_ladder_is_quality_descending():
+    f = Frontier([_pt(0.1, 0.90, 1.0), _pt(0.2, 0.95, 2.0)])
+    ladder = f.ladder()
+    assert [p.accuracy for p in ladder] == [0.95, 0.90]
+
+
+# ----------------------------------------------------------- persistence ----
+def test_frontier_round_trips_through_dict():
+    f = Frontier([_pt(0.1, 0.90, 1.0),
+                  FrontierPoint(FogPolicy(threshold=0.3, precision="int8",
+                                          hop_budget=3), 0.95, 2.0, 1.5)])
+    f2 = Frontier.from_dict(f.to_dict())
+    assert len(f2) == len(f)
+    for a, b in zip(f.points, f2.points):
+        assert a.policy == b.policy
+        assert (a.accuracy, a.energy_nj, a.mean_hops) == \
+            (b.accuracy, b.energy_nj, b.mean_hops)
+
+
+def test_from_dict_is_verbatim_so_the_energy_gate_can_fail():
+    """CI's energy_gate loads the dumped frontier and runs check_monotone:
+    from_dict must NOT re-sort/re-prune, or a regressed builder's
+    non-monotone dump would be silently repaired and the gate could never
+    fail."""
+    bad = {"points": [_pt(0.1, 0.95, 1.0).to_dict(),
+                      _pt(0.2, 0.90, 2.0).to_dict()]}   # acc drops: bogus
+    f = Frontier.from_dict(bad)
+    assert len(f) == 2                       # nothing silently dropped
+    with pytest.raises(AssertionError, match="not monotone"):
+        f.check_monotone()
+    # but an energy-UNSORTED dump fails at load: under_budget's last-
+    # fitting-point scan depends on the stored order
+    unsorted = {"points": [_pt(0.2, 0.95, 2.0).to_dict(),
+                           _pt(0.1, 0.90, 1.0).to_dict()]}
+    with pytest.raises(ValueError, match="energy-sorted"):
+        Frontier.from_dict(unsorted)
+
+
+def test_per_lane_policy_refuses_to_serialize():
+    import jax.numpy as jnp
+    p = FogPolicy(threshold=jnp.asarray([0.1, 0.2]))
+    with pytest.raises(ValueError, match="per-lane"):
+        p.to_dict()
+
+
+# ------------------------------------------------------ generic selectors ----
+def test_selectors_work_on_frontier_points():
+    pts = [_pt(0.1, 0.90, 1.0, 1.0), _pt(0.3, 0.95, 2.0, 2.0),
+           _pt(0.7, 0.952, 4.0, 4.0)]
+    assert select_min_edp(pts, accuracy_slack=0.02).accuracy == 0.95
+    assert find_opt_threshold(pts, tolerance=0.005).accuracy == 0.95
+
+
+# ------------------------------------------------------------ the real API ----
+@pytest.fixture(scope="module")
+def quickstart(ds_penbased):
+    """The README quickstart forest: 16 trees, depth 8, 8x2 groves."""
+    from repro.forest import TrainConfig, train_random_forest
+    ds = ds_penbased
+    rf = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                             TrainConfig(n_trees=16, max_depth=8, seed=0))
+    return ds, FogEngine(split(rf, 2))
+
+
+def test_default_grid_covers_knob_plane():
+    grid = default_grid(thresholds=(0.1, 0.3), hop_budgets=(None, 2),
+                        precisions=(None, "int8"))
+    assert len(grid) == 8
+    assert {p.precision for p in grid} == {None, "int8"}
+    assert {p.hop_budget for p in grid} == {None, 2}
+
+
+def test_sweep_prices_with_engine_telemetry(quickstart):
+    ds, engine = quickstart
+    pts = sweep_policies(engine, ds.x_test[:256], ds.y_test[:256],
+                         [FogPolicy(threshold=0.1), FogPolicy(threshold=0.9)])
+    assert pts[0].energy_nj < pts[1].energy_nj      # tighter = cheaper
+    assert all(p.energy_nj > 0 and 0 < p.accuracy <= 1 for p in pts)
+    assert "nJ" in str(pts[0])                      # nJ units in sweep logs
+
+
+def test_auto_policy_meets_2nj_budget_within_2pct_accuracy(quickstart):
+    """The PR's acceptance criterion: on the quickstart forest, auto_policy
+    under a 2 nJ/classification budget stays within 2% of the unconstrained
+    fp32 default policy's accuracy — and actually fits the budget when
+    re-evaluated."""
+    ds, engine = quickstart
+    x_cal, y_cal = ds.x_test[:512], ds.y_test[:512]
+    budget_nj = 2.0
+    pol = auto_policy(engine, x_cal, y_cal, energy_budget_nj=budget_nj)
+    import jax.numpy as jnp
+    key = jax.random.key(0)
+    unconstrained = engine.eval(jnp.asarray(x_cal), key,
+                                policy=FogPolicy(threshold=0.3))
+    chosen = engine.eval(jnp.asarray(x_cal), key, policy=pol)
+    acc_unc = float((np.asarray(unconstrained.label) == y_cal).mean())
+    acc = float((np.asarray(chosen.label) == y_cal).mean())
+    assert acc >= acc_unc - 0.02
+    assert chosen.energy_report().per_example_nj <= budget_nj
+    assert float(np.asarray(chosen.energy_pj).mean()) * 1e-3 <= budget_nj
+
+
+def test_sweep_dedupes_policies_that_resolve_identically(quickstart):
+    """On an int8-default engine, precision=None grid points resolve to
+    the explicit int8 axis — the sweep must not pay two calibration evals
+    for one effective policy, and stored points carry the RESOLVED
+    precision (never None) so artifacts stay faithful."""
+    ds, engine = quickstart
+    int8_engine = FogEngine(engine.gcs[0], precision="int8")
+    pts = sweep_policies(int8_engine, ds.x_test[:128], ds.y_test[:128],
+                         default_grid(thresholds=(0.1, 0.3)))
+    assert len(pts) == 2                      # not 4: (None,int8) collapsed
+    assert all(p.policy.precision == "int8" for p in pts)
+
+
+def test_save_keeps_highest_fidelity_frontier_precision(quickstart, tmp_path):
+    """An artifact carrying a mixed-precision frontier must persist the
+    pack at the highest-fidelity rung precision: an int8 pack could not
+    faithfully serve an fp32 rung after load."""
+    from repro.sklearn import FogClassifier
+    ds, _ = quickstart
+    clf = FogClassifier(n_trees=16, grove_size=2, max_depth=6, seed=1)
+    clf.fit(ds.x_train, ds.y_train)
+    clf.set_energy_budget(
+        2.0, ds.x_test[:128], ds.y_test[:128],
+        policies=[FogPolicy(threshold=0.3),
+                  FogPolicy(threshold=0.3, precision="int8"),
+                  FogPolicy(threshold=0.1, precision="int8")])
+    precs = {p.policy.precision for p in clf.frontier_.points}
+    path = clf.save(tmp_path / "mixed.npz")
+    from repro.forest.pack import ForestPack
+    pack, _ = ForestPack.load_with_meta(path)
+    assert pack.precision == ("fp32" if "fp32" in precs else "int8")
+
+
+def test_frontier_monotone_on_real_forest(quickstart):
+    ds, engine = quickstart
+    f = build_frontier(engine, ds.x_test[:512], ds.y_test[:512])
+    f.check_monotone()
+    assert len(f) >= 3

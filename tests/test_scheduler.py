@@ -69,16 +69,17 @@ def test_hops_metering_accumulates():
     assert all(h >= 1 for h in done[0].hops)
 
 
-def test_hop_meter_reset():
+def test_serve_stats_accumulate_and_reset():
     n = 2
     batcher = ContinuousBatcher(n, _mock_decode(n),
                                 lambda slot, prompt: len(prompt), eos_id=-1)
     batcher.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=3))
     batcher.run()
-    assert batcher.meter.n_events == 3
-    batcher.meter.reset()
-    assert batcher.meter.n_events == 0 and batcher.meter.total_hops == 0
-    assert batcher.meter.mean_hops == 0.0
+    assert batcher.stats.n_events == 3
+    assert not batcher.stats.has_energy      # no governor: hops only
+    batcher.stats.reset()
+    assert batcher.stats.n_events == 0 and batcher.stats.total_hops == 0
+    assert batcher.stats.mean_hops == 0.0
 
 
 def _mock_policy_decode(n_slots, vocab=16):
@@ -243,3 +244,142 @@ def test_legacy_two_arg_decode_fn_still_works():
     batcher.submit(Request(rid=0, prompt=np.asarray([2]), max_new_tokens=2))
     done = batcher.run()
     assert len(done) == 1 and len(done[0].generated) == 2
+
+
+# ---------------------------------------------------------------------------
+# energy governance (the EnergyGovernor control plane)
+# ---------------------------------------------------------------------------
+
+def _threshold_driven_decode(n_slots, vocab=16):
+    """Governor-visible mock: hops track each lane's threshold (tighter
+    threshold -> earlier exit), capped by the lane's hop budget — the same
+    monotone response a real forest has."""
+    def decode_fn(tokens, lengths, policy):
+        thr = np.asarray(policy.lane_thresholds(n_slots))
+        bud = np.asarray(policy.lane_budgets(n_slots))
+        hops = np.minimum(np.maximum(1, np.round(thr * 10)).astype(np.int64),
+                          bud)
+        nxt = (np.asarray(tokens) + 1) % vocab
+        logits = np.zeros((n_slots, vocab), np.float32)
+        logits[np.arange(n_slots), nxt] = 1.0
+        return jnp.asarray(logits), jnp.asarray(hops)
+    return decode_fn
+
+
+def _governor(budget_nj, base_thresh=0.5, **kw):
+    from repro.core import EnergyModel
+    from repro.serve.governor import EnergyGovernor, default_ladder
+    model = EnergyModel(2, 8, 10, 16)
+    ladder = default_ladder(FogPolicy(threshold=base_thresh), model,
+                            budget_nj)
+    kw.setdefault("window", 4)
+    kw.setdefault("patience", 2)
+    # long cooldown: a rung measured over budget stays blocked for the
+    # whole test run (deterministic steady state)
+    kw.setdefault("cooldown", 10_000)
+    return EnergyGovernor(ladder, budget_nj, model=model, **kw)
+
+
+def test_governor_steps_down_ladder_and_holds_budget():
+    """The acceptance loop: under a tight budget the governor must walk
+    down the ladder (threshold tightening, then the hop-budget rung) until
+    the rolling estimate sits under the SLO, and fleet telemetry must show
+    priced energy."""
+    n = 2
+    gov = _governor(budget_nj=0.5)
+    batcher = ContinuousBatcher(n, _threshold_driven_decode(n),
+                                lambda slot, prompt: len(prompt), eos_id=-1,
+                                governor=gov)
+    for rid in range(8):
+        batcher.submit(Request(rid=rid, prompt=np.asarray([0]),
+                               max_new_tokens=6))
+    batcher.run()
+    assert gov.transitions, "governor never stepped"
+    assert gov.transitions[0][:2] == (0, 1), "first step must tighten"
+    assert gov.rolling_nj <= gov.budget_nj          # steady state: under SLO
+    assert batcher.stats.has_energy
+    assert batcher.stats.n_events > 0
+
+
+def test_governor_rejects_ungovernable_decode_paths():
+    """A governor that can never act must fail loudly, not serve at full
+    energy under the illusion of an SLO: legacy two-arg decode_fns are
+    rejected at construction, hop-less telemetry on the first step."""
+    with pytest.raises(ValueError, match="policy-aware"):
+        ContinuousBatcher(2, _mock_decode(2), lambda slot, prompt: 1,
+                          governor=_governor(budget_nj=1.0))
+
+    def no_hops(tokens, lengths, policy):
+        n = tokens.shape[0]
+        logits = np.zeros((n, 16), np.float32)
+        return jnp.asarray(logits), None
+
+    b = ContinuousBatcher(2, no_hops, lambda slot, prompt: 1, eos_id=-1,
+                          governor=_governor(budget_nj=1.0))
+    b.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=2))
+    with pytest.raises(ValueError, match="hop telemetry"):
+        b.step()
+
+
+def test_governor_restores_quality_when_headroom_returns():
+    from repro.core import EnergyModel, FogPolicy as FP
+    from repro.serve.governor import EnergyGovernor
+    model = EnergyModel(2, 8, 10, 16)
+    gov = EnergyGovernor([FP(threshold=0.5), FP(threshold=0.1)],
+                         budget_nj=1.0, model=model, window=4, patience=2,
+                         cooldown=8)
+    # breach: expensive batches push it down a rung (and the breach is
+    # remembered, so an immediate climb is blocked)
+    gov.observe(hops=np.full(8, 8)); gov.step()
+    assert gov.rung == 1
+    # sustained headroom: once the breach evidence goes stale (cooldown),
+    # two compliant observations climb back up
+    for _ in range(2):
+        gov.observe(hops=np.ones(8, np.int64)); gov.step()
+    assert gov.rung == 0
+    assert len(gov.transitions) == 2
+
+
+def test_per_request_energy_budget_resolved_via_governor():
+    """A Request carrying energy_budget_nj gets the calibrated rung fitting
+    that budget, with a hard hop-budget clamp — submitted against a
+    governor-less batcher it must fail loudly."""
+    n = 2
+    gov = _governor(budget_nj=2.0)
+    decode_fn = _threshold_driven_decode(n)
+    batcher = ContinuousBatcher(n, decode_fn,
+                                lambda slot, prompt: len(prompt), eos_id=-1,
+                                governor=gov)
+    req = Request(rid=0, prompt=np.asarray([0]), max_new_tokens=2,
+                  energy_budget_nj=0.4)
+    batcher.submit(req)
+    assert req.policy is not None
+    # 0.4 nJ buys exactly one 271 pJ hop on the 2x8 topology model
+    assert int(np.asarray(req.policy.hop_budget)) == 1
+    done = batcher.run()
+    assert all(h == 1 for h in done[0].hops)        # contract held
+
+    plain = ContinuousBatcher(n, decode_fn, lambda slot, prompt: len(prompt))
+    with pytest.raises(ValueError, match="governor"):
+        plain.submit(Request(rid=1, prompt=np.asarray([0]),
+                             energy_budget_nj=1.0))
+
+    # a ladder built from a fleet default with STATIC knobs (backend,
+    # max_hops) must not trip submit()'s static-knob rejection: the
+    # resolved per-request contract carries only threshold/budget/precision
+    from repro.core import EnergyModel
+    from repro.serve.governor import EnergyGovernor, default_ladder
+    model = EnergyModel(2, 8, 10, 16)
+    base = FogPolicy(threshold=0.5, backend="reference", max_hops=8)
+    gov2 = EnergyGovernor(default_ladder(base, model, 0.4), 0.4, model=model)
+    b2 = ContinuousBatcher(n, decode_fn, lambda slot, prompt: len(prompt),
+                           eos_id=-1, governor=gov2)
+    req2 = Request(rid=5, prompt=np.asarray([0]), max_new_tokens=1,
+                   energy_budget_nj=0.4)
+    b2.submit(req2)                              # no raise
+    assert req2.policy.backend is None and req2.policy.max_hops is None
+    assert int(np.asarray(req2.policy.hop_budget)) == 1
+    with pytest.raises(ValueError, match="not both"):
+        batcher.submit(Request(rid=2, prompt=np.asarray([0]),
+                               policy=FogPolicy(threshold=0.1),
+                               energy_budget_nj=1.0))

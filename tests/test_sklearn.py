@@ -206,3 +206,151 @@ def test_param_protocol_and_errors(ds_penbased):
     with pytest.raises(ValueError):
         FogClassifier(n_trees=5, grove_size=2).fit(
             ds_penbased.x_train, ds_penbased.y_train)  # 5 % 2 != 0
+
+
+# ---------------------------------------------------------------------------
+# energy budgets (set_energy_budget / profile budget keys / persistence)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def budgeted(ds_penbased):
+    ds = ds_penbased
+    clf = FogClassifier(n_trees=16, grove_size=2, max_depth=6, seed=1)
+    clf.fit(ds.x_train, ds.y_train)
+    clf.set_energy_budget(2.0, ds.x_test[:512], ds.y_test[:512])
+    return ds, clf
+
+
+def test_set_energy_budget_pins_frontier_policy(budgeted):
+    ds, clf = budgeted
+    assert clf.energy_budget_nj_ == 2.0
+    assert len(clf.frontier_) >= 2
+    clf.frontier_.check_monotone()
+    # the pinned default policy IS the selected frontier point's policy
+    assert clf.policy == clf.frontier_.under_budget(2.0).policy
+    assert clf.engine_.policy == clf.policy
+
+
+def test_profile_reports_measured_vs_budget(budgeted):
+    ds, clf = budgeted
+    clf.reset_profile()
+    clf.predict(ds.x_test)           # serves under the pinned policy
+    prof = clf.profile()
+    assert prof["energy_budget_nj"] == 2.0
+    assert prof["within_budget"] is True
+    assert prof["energy_nj_per_classification"] <= 2.0
+
+
+def test_set_energy_budget_restarts_accounting(ds_penbased):
+    """Batches evaluated BEFORE the budget existed must not pollute
+    measured-vs-budget: pinning resets the profile, so within_budget
+    describes only traffic served under the pinned policy."""
+    ds = ds_penbased
+    clf = FogClassifier(n_trees=16, grove_size=2, max_depth=6, seed=1)
+    clf.fit(ds.x_train, ds.y_train)
+    clf.predict(ds.x_test, policy=FogPolicy(threshold=1.1))   # expensive
+    expensive = clf.profile()["energy_nj_per_classification"]
+    clf.set_energy_budget(expensive * 0.8, ds.x_test[:256], ds.y_test[:256])
+    assert clf.profile()["n_classified"] == 0                 # restarted
+    clf.predict(ds.x_test)
+    assert clf.profile()["within_budget"] is True
+
+
+def test_unmeetable_budget_raises(ds_penbased):
+    ds = ds_penbased
+    clf = FogClassifier(n_trees=16, grove_size=2, max_depth=6, seed=1)
+    clf.fit(ds.x_train, ds.y_train)
+    with pytest.raises(ValueError, match="below the cheapest"):
+        clf.set_energy_budget(1e-6, ds.x_test[:128], ds.y_test[:128])
+    # a failed pin is atomic: no half-committed frontier/budget/policy
+    assert getattr(clf, "frontier_", None) is None
+    assert getattr(clf, "energy_budget_nj_", None) is None
+
+    clf.set_energy_budget(2.0, ds.x_test[:128], ds.y_test[:128])
+    before = (clf.frontier_, clf.energy_budget_nj_, clf.policy)
+    with pytest.raises(ValueError, match="below the cheapest"):
+        clf.set_energy_budget(1e-6, ds.x_test[:128], ds.y_test[:128])
+    assert (clf.frontier_, clf.energy_budget_nj_, clf.policy) == before
+
+
+def test_budget_round_trips_through_save_load(budgeted, tmp_path):
+    ds, clf = budgeted
+    path = tmp_path / "budgeted.npz"
+    clf.save(path)
+    clf2 = FogClassifier.load(path)
+    assert clf2.energy_budget_nj_ == 2.0
+    assert clf2.policy == clf.policy
+    assert len(clf2.frontier_) == len(clf.frontier_)
+    for a, b in zip(clf.frontier_.points, clf2.frontier_.points):
+        assert a.policy == b.policy and a.energy_nj == b.energy_nj
+    # the loaded model serves under the trained budget
+    np.testing.assert_array_equal(clf2.predict(ds.x_test[:128]),
+                                  clf.predict(ds.x_test[:128]))
+    assert clf2.profile()["energy_budget_nj"] == 2.0
+
+
+def test_governor_from_calibrated_facade(budgeted):
+    ds, clf = budgeted
+    gov = clf.governor()
+    assert gov.budget_nj == 2.0
+    assert gov.frontier is clf.frontier_
+    # the governor starts on the best rung PREDICTED to fit the budget
+    assert gov.current == clf.frontier_.under_budget(2.0).policy
+
+    fresh = FogClassifier(n_trees=8, grove_size=2, max_depth=4)
+    fresh.fit(ds.x_train[:512], ds.y_train[:512])
+    with pytest.raises(RuntimeError, match="no calibrated frontier"):
+        fresh.governor()
+
+
+def test_set_energy_budget_respects_configured_knobs(ds_penbased):
+    """The calibration grid sweeps ON TOP OF the estimator's default
+    policy: knobs the grid does not vary (hop_budget here) must survive
+    into the pinned policy, and a per-lane default must be refused."""
+    import jax.numpy as jnp
+    ds = ds_penbased
+    clf = FogClassifier(n_trees=16, grove_size=2, max_depth=6, seed=1,
+                        policy=FogPolicy(hop_budget=3))
+    clf.fit(ds.x_train, ds.y_train)
+    clf.set_energy_budget(2.0, ds.x_test[:256], ds.y_test[:256])
+    assert clf.policy.hop_budget == 3            # the user's knob survived
+
+    lane = FogClassifier(n_trees=8, grove_size=2, max_depth=4)
+    lane.fit(ds.x_train[:512], ds.y_train[:512])
+    lane.policy = FogPolicy(threshold=jnp.asarray([0.1] * 4))
+    with pytest.raises(ValueError, match="per-lane"):
+        lane.set_energy_budget(2.0, ds.x_test[:4], ds.y_test[:4])
+
+
+def test_explicit_precision_save_cannot_strand_frontier_rungs(
+        budgeted, tmp_path):
+    """save(precision='int8') with a frontier carrying higher-fidelity
+    rungs must refuse: after load those rungs' tables could only be
+    rebuilt from the lossier pack, silently invalidating their stored
+    calibration."""
+    ds, clf = budgeted
+    precs = {p.policy.precision for p in clf.frontier_.points}
+    if "fp32" not in precs:
+        pytest.skip("frontier calibrated all-int8; nothing to strand")
+    with pytest.raises(ValueError, match="cannot reconstruct"):
+        clf.save(tmp_path / "stranded.npz", precision="int8")
+    clf.save(tmp_path / "full.npz")          # automatic rule: fine
+
+
+def test_load_rejects_corrupt_frontier(budgeted, tmp_path):
+    """A tampered artifact whose frontier violates the Pareto invariant
+    fails at load — under_budget would otherwise resolve budgets to a
+    lower-accuracy point silently."""
+    from repro.forest.pack import ForestPack
+    ds, clf = budgeted
+    path = clf.save(tmp_path / "ok.npz")
+    pack, extra = ForestPack.load_with_meta(path)
+    # sabotage: make accuracy DROP along the energy-ascending order
+    pts = extra["frontier"]["points"]
+    if len(pts) < 2:
+        pytest.skip("frontier too small to corrupt meaningfully")
+    pts[-1]["accuracy"] = pts[0]["accuracy"] - 0.5
+    bad = tmp_path / "bad.npz"
+    pack.save(bad, extra=extra)
+    with pytest.raises(ValueError, match="frontier is corrupt"):
+        FogClassifier.load(bad)
