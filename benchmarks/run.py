@@ -22,7 +22,8 @@ def main() -> None:
 
     from benchmarks import (
         ablation_adaptive, engine_bench, fig4_topology, fig5_threshold,
-        fog_ring_bench, lm_fog_exit, table1_accuracy, table1_energy,
+        fog_ring_bench, lm_fog_exit, serve_bench, table1_accuracy,
+        table1_energy,
     )
     import benchmarks.common as common
 
@@ -38,6 +39,9 @@ def main() -> None:
         "fog_ring": fog_ring_bench.run,
         "ablation_adaptive": ablation_adaptive.run,
         "lm_fog_exit": lm_fog_exit.run,
+        # subprocess: forces 4 virtual host devices, which must land
+        # before jax initializes (this parent already initialized it)
+        "serve": lambda: serve_bench.run(smoke=args.quick),
     }
     only = set(args.only.split(",")) if args.only else None
 

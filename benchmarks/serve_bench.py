@@ -1,0 +1,491 @@
+"""Closed-loop load harness for the data-parallel serving plane.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.serve_bench --smoke
+
+Drives the REAL serving stack — ForestReplicaServer replicas behind a
+DeviceDispatcher behind a ContinuousBatcher, every dispatch a real fused-
+kernel evaluation with real per-request hop/energy telemetry — under a
+Poisson open-arrival workload with mixed QoS tiers, warmup + measurement
+windows, and admission control, and emits ``BENCH_serve.json`` with one row
+per (n_devices, precision, governor) config: throughput (req/s), p50/p99
+latency, mean nJ/request, shed rate.
+
+Concurrency accounting (the "virtual clock").  CI and this container run on
+a single CPU core, so N virtual XLA host devices execute their dispatches
+sequentially in wall time — wall-clock alone cannot show data-parallel
+speedup anywhere except on real multi-core/multi-chip hardware.  Following
+the profiling-and-modeling methodology the ISSUE cites (arXiv 1902.11119),
+the harness therefore runs everything for real but *accounts* device
+concurrency: a calibration phase measures each precision's per-dispatch
+service time ``s`` sequentially, and each step's virtual duration is
+
+    vstep = max(wall_step - sum_over_dispatches(s), 0) + max_over_devices(busy_d)
+
+i.e. the measured non-overlappable time (Python scheduling, policy
+assembly, harvest — everything that is NOT device compute) plus the
+longest single device's compute, which is what a concurrent fleet would
+wait for.  On one device ``max_d busy_d == sum s`` and the virtual clock
+EQUALS wall time — single-device rows are the built-in sanity check (see
+the ``wall_rps`` column).  Both clocks are reported; the gate reads the
+virtual one.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+# QoS mix: fraction of arrivals per tier.  "gold" buys accuracy with a
+# HIGHER exit threshold — in FoG a higher MaxDiff gate means more groves
+# vote (same compiled program, per-lane knob); "bulk" trades accuracy for
+# energy with a lower threshold AND int8 tables (its own precision group);
+# "contract" (governor rows only, carved out of "std") carries a hard
+# per-request energy_budget_nj.
+TIERS = (("std", 0.70), ("gold", 0.20), ("bulk", 0.10))
+CONTRACT_FRAC = 0.20
+BASE_THRESH = 0.7     # std tier / calibration
+GOLD_THRESH = 1.0     # premium: nearly every grove votes
+BULK_THRESH = 0.4     # bulk: exit early, and on int8 tables
+
+SMOKE_GRID = [
+    dict(n_devices=1, precision="fp32", governor=False),
+    dict(n_devices=4, precision="fp32", governor=False),
+    dict(n_devices=1, precision="int8", governor=False),
+    dict(n_devices=4, precision="int8", governor=False),
+    dict(n_devices=4, precision="fp32", governor=True),
+]
+FULL_GRID = [
+    dict(n_devices=d, precision=p, governor=g)
+    for p in ("fp32", "bf16", "int8")
+    for d in (1, 4)
+    for g in (False, True)
+]
+
+
+def _percentile(xs, q):
+    import numpy as np
+    return float(np.percentile(np.asarray(xs, float), q)) if xs else 0.0
+
+
+class _Plane:
+    """One (n_devices,)-keyed serving plane, shared across the grid rows so
+    each (span, precision) program compiles exactly once."""
+
+    def __init__(self, gc, ds, n_devices, n_slots, precisions, backend):
+        import numpy as np
+        from repro.launch.mesh import serve_devices
+        from repro.serve.dispatch import DeviceDispatcher, ForestReplicaServer
+
+        self.ds = ds
+        self.n_slots = n_slots
+        self.server = ForestReplicaServer(
+            gc, ds.x_test.shape[1], backend=backend, precisions=precisions)
+        self.dispatcher = DeviceDispatcher(self.server.factory,
+                                           serve_devices(n_devices))
+        self.dispatcher.bind(n_slots)
+        # real feature rows in every span buffer before calibration, so the
+        # calibrated service times see real early-exit behavior
+        for slot in range(n_slots):
+            self.server.prefill(slot, ds.x_test[slot % len(ds.x_test)])
+        self._warm_full_path(precisions, np)
+        self.svc: dict[str, float] = {}
+        self._calibrate(precisions, np, threshold=BASE_THRESH)
+
+    def _warm_full_path(self, precisions, np):
+        """Drain one throwaway batcher burst through the REAL step path
+        (policy assembly, dispatch, harvest, completion bookkeeping) so the
+        first timed capacity probe pays zero first-step costs."""
+        from repro.core.policy import FogPolicy
+        from repro.serve.scheduler import ContinuousBatcher, Request
+        b = ContinuousBatcher(self.n_slots, None, self.server.prefill,
+                              eos_id=-1,
+                              default_policy=FogPolicy(threshold=BASE_THRESH),
+                              dispatcher=self.dispatcher)
+        alt = [FogPolicy(threshold=BULK_THRESH, precision=p)
+               for p in precisions[1:]]
+        for rid in range(2 * self.n_slots):
+            pol = alt[rid % len(alt)] if alt and rid % 3 == 0 else None
+            b.submit(Request(rid=rid,
+                             prompt=self.ds.x_test[rid % len(self.ds.x_test)],
+                             max_new_tokens=1, policy=pol))
+        while b.active or b.queue:
+            b.step()
+
+    def _calibrate(self, precisions, np, threshold):
+        """Sequential per-dispatch service time per precision: warm every
+        device's program (compiles), then best-of-5 a single-device
+        dispatch+harvest."""
+        from repro.core.policy import FogPolicy
+        tokens = np.zeros((self.n_slots,), np.int32)
+        lengths = np.ones((self.n_slots,), np.int32)
+        span = self.dispatcher.span
+        all_lanes = list(range(0, self.n_slots, span))
+        for prec in precisions:
+            pol = FogPolicy(threshold=threshold, precision=prec)
+            for _ in range(2):   # compile + warm every replica
+                self.dispatcher.dispatch(tokens, lengths, pol, all_lanes)
+                self.dispatcher.harvest(self.n_slots)
+            best = float("inf")
+            for _ in range(5):   # then time ONE device's span, sequentially
+                t0 = time.perf_counter()
+                self.dispatcher.dispatch(tokens, lengths, pol, [0])
+                self.dispatcher.harvest(self.n_slots)
+                best = min(best, time.perf_counter() - t0)
+            self.svc[prec] = best
+
+
+def _make_governor(plane, base_policy, budget_nj):
+    from repro.serve.governor import EnergyGovernor, default_ladder
+    model = plane.server.energy_model("fp32")
+    ladder = default_ladder(base_policy, model, budget_nj)
+    return EnergyGovernor(ladder, budget_nj, model=model, window=64,
+                          patience=2)
+
+
+def _run_row(plane, cfg, n_requests, warmup_frac, seed, arrival_factor):
+    """One grid row: capacity probe, then the Poisson closed loop."""
+    import numpy as np
+    from repro.core.policy import FogPolicy
+    from repro.serve.scheduler import ContinuousBatcher, Request
+
+    ds = plane.ds
+    n_slots = plane.n_slots
+    row_prec = cfg["precision"]
+    base = FogPolicy(threshold=BASE_THRESH, precision=row_prec)
+    rng = np.random.default_rng(seed)
+
+    def svc_of(pending):
+        return plane.svc.get(pending.precision or row_prec,
+                             plane.svc[row_prec])
+
+    def new_batcher(governor=None, max_queue=None):
+        return ContinuousBatcher(
+            n_slots, None, plane.server.prefill, eos_id=-1,
+            default_policy=base, governor=governor,
+            dispatcher=plane.dispatcher, max_queue=max_queue,
+            shed_policy="reject")
+
+    def vclock_step(b):
+        t0 = time.perf_counter()
+        b.step()
+        wall = time.perf_counter() - t0
+        busy: dict[int, float] = {}
+        total = 0.0
+        for p in b.last_dispatches:
+            s = svc_of(p)
+            busy[p.device] = busy.get(p.device, 0.0) + s
+            total += s
+        vstep = max(wall - total, 0.0) + (max(busy.values()) if busy
+                                          else wall)
+        return vstep, wall
+
+    # -- capacity probe: saturated burst, no arrivals process ------------
+    cap_n = 4 * n_slots
+    b = new_batcher()
+    for rid in range(cap_n):
+        b.submit(Request(rid=rid, prompt=ds.x_test[rid % len(ds.x_test)],
+                         max_new_tokens=1))
+    vtot = wtot = 0.0
+    while len(b.completed) < cap_n:
+        v, w = vclock_step(b)
+        vtot += v
+        wtot += w
+    capacity_rps = cap_n / vtot
+    arrival_rps = arrival_factor * capacity_rps
+
+    # -- the measured closed loop ----------------------------------------
+    governor = None
+    energy_model = None
+    budget_nj = None
+    if cfg["governor"]:
+        # price the capacity burst to size the SLO: slightly under the
+        # measured mean forces the governor to actually govern
+        model0 = plane.server.energy_model(row_prec)
+        burst_hops = np.asarray([r.hops[0] for r in b.completed])
+        mean_nj = float(np.asarray(model0.lane_pj(burst_hops)).mean()) * 1e-3
+        budget_nj = 0.9 * mean_nj
+        governor = _make_governor(plane, base, budget_nj)
+        energy_model = governor.model  # fp32 base; re-priced per precision
+
+    b = new_batcher(governor=governor, max_queue=n_slots)
+    inter = rng.exponential(1.0 / arrival_rps, size=n_requests)
+    arrivals = np.cumsum(inter)
+    tiers = rng.choice([t for t, _ in TIERS], size=n_requests,
+                       p=[f for _, f in TIERS])
+    contract_mask = (cfg["governor"]
+                     & (tiers == "std")
+                     & (rng.random(n_requests) < CONTRACT_FRAC
+                        / TIERS[0][1]))
+    contract_budgets = {}
+
+    def make_request(rid):
+        tier = tiers[rid]
+        kw = {}
+        if contract_mask[rid]:
+            nj = float(rng.choice([1.3, 2.0])) * budget_nj
+            contract_budgets[rid] = nj
+            kw["energy_budget_nj"] = nj
+        elif tier == "gold":
+            kw["policy"] = FogPolicy(threshold=GOLD_THRESH)
+        elif tier == "bulk":
+            kw["policy"] = FogPolicy(threshold=BULK_THRESH,
+                                     precision="int8")
+        return Request(rid=rid, prompt=ds.x_test[rid % len(ds.x_test)],
+                       max_new_tokens=1, **kw)
+
+    vnow = 0.0
+    wall_total = 0.0
+    next_rid = 0
+    arrival_vtime = {}
+    done_vtime = {}
+    n_done_seen = 0
+    warmup_n = int(warmup_frac * n_requests)
+    v_measure_start = None
+    w_measure_start = None
+    shed_rids = set()
+    guard = 0
+    while len(b.completed) + len(b.shed_requests) < n_requests:
+        guard += 1
+        if guard > 500_000:
+            raise RuntimeError("serve_bench closed loop did not drain")
+        while next_rid < n_requests and arrivals[next_rid] <= vnow:
+            rid = next_rid
+            if rid == warmup_n:
+                v_measure_start, w_measure_start = vnow, wall_total
+            arrival_vtime[rid] = vnow
+            if not b.submit(make_request(rid)):
+                shed_rids.add(rid)
+            next_rid += 1
+        if b.active == 0 and not b.queue:
+            if next_rid < n_requests:      # idle: jump to the next arrival
+                vnow = max(vnow, float(arrivals[next_rid]))
+                continue
+            break
+        v, w = vclock_step(b)
+        vnow += v
+        wall_total += w
+        for r in b.completed[n_done_seen:]:
+            done_vtime[r.rid] = vnow
+        n_done_seen = len(b.completed)
+
+    # -- metrics over the measurement window -----------------------------
+    measured = [r for r in b.completed if r.rid >= warmup_n]
+    lat_ms = [(done_vtime[r.rid] - arrival_vtime[r.rid]) * 1e3
+              for r in measured]
+    v_window = vnow - (v_measure_start if v_measure_start is not None
+                       else 0.0)
+    w_window = wall_total - (w_measure_start if w_measure_start is not None
+                             else 0.0)
+    offered_m = sum(1 for rid in range(warmup_n, n_requests))
+    shed_m = sum(1 for rid in shed_rids if rid >= warmup_n)
+
+    def price(req):
+        prec = (req.policy.precision if req.policy is not None
+                and req.policy.precision is not None else row_prec)
+        model = (governor.model_for(prec) if governor is not None
+                 else plane.server.energy_model(prec))
+        return float(np.asarray(model.lane_pj(
+            np.asarray(req.hops))).sum()) * 1e-3
+
+    nj = [price(r) for r in measured]
+    contracts_offered = [r for r in b.completed if r.rid in contract_budgets]
+    contracts_held = [r for r in contracts_offered
+                      if price(r) <= contract_budgets[r.rid] + 1e-9]
+
+    row = dict(
+        n_devices=cfg["n_devices"], precision=row_prec,
+        governor=bool(cfg["governor"]), n_slots=n_slots,
+        n_requests=n_requests, warmup_n=warmup_n,
+        capacity_rps=round(capacity_rps, 1),
+        arrival_rps=round(arrival_rps, 1),
+        throughput_rps=round(len(measured) / max(v_window, 1e-9), 1),
+        wall_rps=round(len(measured) / max(w_window, 1e-9), 1),
+        p50_ms=round(_percentile(lat_ms, 50), 3),
+        p99_ms=round(_percentile(lat_ms, 99), 3),
+        mean_nj_per_req=round(float(np.mean(nj)) if nj else 0.0, 4),
+        mean_hops=round(float(np.mean([r.hops[0] for r in measured]))
+                        if measured else 0.0, 3),
+        completed=len(measured), offered=offered_m, shed=shed_m,
+        shed_rate=round(shed_m / max(1, offered_m), 4),
+        svc_us={p: round(s * 1e6, 1) for p, s in plane.svc.items()},
+        contracts=dict(offered=len(contracts_offered),
+                       held=len(contracts_held)),
+    )
+    if governor is not None:
+        row["governor_budget_nj"] = round(budget_nj, 4)
+        row["governor_rung_final"] = governor.rung
+        row["governor_transitions"] = len(governor.transitions)
+        row["device_nj"] = {str(d): round(v, 4)
+                            for d, v in sorted(governor.device_nj.items())}
+    return row
+
+
+def bench(smoke: bool, seed: int = 0) -> dict:
+    import numpy as np  # noqa: F401 (ensures numpy before jax init)
+    from benchmarks.common import forest_for
+    from repro.core.grove import split
+    from repro.data import make_dataset
+
+    grid = SMOKE_GRID if smoke else FULL_GRID
+    n_requests = 6144 if smoke else 12288
+    # slots per step sized so per-dispatch device COMPUTE dominates the
+    # fixed per-dispatch runtime cost (~0.3ms) even at span = n_slots/4:
+    # the fused kernel's wall time is flat below ~256 lanes (XLA-CPU op
+    # overhead), so smaller spans under-report the parallel fraction.  At
+    # 1024 slots both the single-device (span 1024) and 4-device (span
+    # 256) programs run in the ~4 us/lane scaling regime with the same
+    # block_b
+    n_slots = 1024
+    precisions = (("fp32", "int8") if smoke
+                  else ("fp32", "bf16", "int8"))
+
+    ds = make_dataset("penbased")
+    gc = split(forest_for("penbased"), 2)
+
+    planes: dict[int, _Plane] = {}
+    rows = []
+    for cfg in grid:
+        d = cfg["n_devices"]
+        if d not in planes:
+            planes[d] = _Plane(gc, ds, d, n_slots, precisions,
+                               backend="fused")
+        t0 = time.time()
+        row = _run_row(planes[d], cfg, n_requests, warmup_frac=0.2,
+                       seed=seed, arrival_factor=1.3)
+        row["row_seconds"] = round(time.time() - t0, 1)
+        print(f"[serve_bench] {row['n_devices']}dev {row['precision']} "
+              f"gov={row['governor']}: {row['throughput_rps']} req/s "
+              f"(wall {row['wall_rps']}), p50 {row['p50_ms']}ms "
+              f"p99 {row['p99_ms']}ms, {row['mean_nj_per_req']} nJ/req, "
+              f"shed {100 * row['shed_rate']:.1f}%", flush=True)
+        rows.append(row)
+
+    import jax
+    return dict(
+        dataset="penbased", topology="8x2", backend="fused",
+        smoke=smoke, seed=seed,
+        host_devices=len(jax.devices()),
+        methodology=(
+            "real dispatches on virtual XLA host devices; device "
+            "concurrency accounted in virtual time: vstep = "
+            "max(wall - sum(svc), 0) + max_device(busy); svc calibrated "
+            "sequentially per precision; single-device rows have "
+            "virtual == wall by construction"),
+        rows=rows,
+    )
+
+
+# --------------------------------------------------------------------------
+# gate
+# --------------------------------------------------------------------------
+
+def serve_gate(data: dict, min_speedup: float = 1.5) -> list[str]:
+    """CI gate over BENCH_serve.json: multi-device virtual throughput must
+    beat single-device by ``min_speedup`` per matched precision (governor
+    off), every completed per-request energy contract must have held, and
+    the overloaded closed loop must actually have shed."""
+    fails = []
+    rows = data.get("rows", [])
+    if not rows:
+        return ["no rows in BENCH_serve.json"]
+    by = {(r["n_devices"], r["precision"], r["governor"]): r for r in rows}
+    for r in rows:
+        if r["governor"] or r["n_devices"] < 4:
+            continue
+        single = by.get((1, r["precision"], False))
+        if single is None:
+            continue
+        ratio = r["throughput_rps"] / max(single["throughput_rps"], 1e-9)
+        if ratio < min_speedup:
+            fails.append(
+                f"{r['precision']}: {r['n_devices']}-device throughput "
+                f"{r['throughput_rps']} req/s is only {ratio:.2f}x the "
+                f"single-device {single['throughput_rps']} req/s "
+                f"(need >= {min_speedup}x)")
+    for r in rows:
+        c = r.get("contracts", {})
+        if c.get("offered", 0) and c["held"] != c["offered"]:
+            fails.append(
+                f"{r['n_devices']}dev {r['precision']} gov={r['governor']}: "
+                f"only {c['held']}/{c['offered']} energy contracts held")
+        if r["governor"] and not c.get("offered", 0):
+            fails.append(
+                f"{r['n_devices']}dev {r['precision']}: governor row "
+                "completed no contract requests (nothing verified)")
+    if not any(r["shed"] > 0 for r in rows):
+        fails.append("no row shed any request: the closed loop never "
+                     "overloaded admission control (arrival_factor bug?)")
+    return fails
+
+
+# --------------------------------------------------------------------------
+# CLI + benchmarks.run integration
+# --------------------------------------------------------------------------
+
+def run(smoke: bool = True):
+    """benchmarks.run section hook: subprocess so the forced host-device
+    count cannot collide with the parent's already-initialized jax."""
+    import subprocess
+    repo = Path(__file__).resolve().parent.parent
+    env = {
+        "PYTHONPATH": str(repo / "src"),
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+        "HOME": os.environ.get("HOME", "/root"),
+        "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+    }
+    cmd = [sys.executable, "-m", "benchmarks.serve_bench"]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                          text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"serve_bench failed:\n{proc.stdout}\n{proc.stderr}")
+    yield from (ln for ln in proc.stdout.splitlines() if ln.strip())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid + short windows (the CI tier-1 run)")
+    ap.add_argument("--gate-only", action="store_true",
+                    help="re-run the serve gate over an existing "
+                         "BENCH_serve.json without re-benchmarking")
+    ap.add_argument("--out", default=str(OUT_PATH))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.gate_only:
+        data = json.loads(Path(args.out).read_text())
+        fails = serve_gate(data)
+        if fails:
+            print("[serve_gate] FAIL:\n  " + "\n  ".join(fails))
+            sys.exit(1)
+        print("[serve_gate] ok")
+        return
+
+    # the forced host-device count must land before jax initializes; when
+    # the caller (CI) already set XLA_FLAGS we leave it alone
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_"
+                                     "count=4").strip()
+    data = bench(smoke=args.smoke, seed=args.seed)
+    Path(args.out).write_text(json.dumps(data, indent=1))
+    print(f"[serve_bench] wrote {args.out} ({len(data['rows'])} rows)")
+    fails = serve_gate(data)
+    if fails:
+        print("[serve_gate] FAIL:\n  " + "\n  ".join(fails))
+        sys.exit(1)
+    print("[serve_gate] ok")
+
+
+if __name__ == "__main__":
+    main()

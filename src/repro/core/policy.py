@@ -199,8 +199,12 @@ def assemble(policies: Sequence["FogPolicy | None"],
                for p in policies]
     budget_vec = None
     if any(b is not None for b in budgets):
-        budget_vec = jnp.asarray(
+        budget_vec = np.asarray(
             [int(b) if b is not None else NO_BUDGET for b in budgets],
-            jnp.int32)
-    return default.replace(threshold=jnp.asarray(thr, jnp.float32),
+            np.int32)
+    # host numpy on purpose: the vectors are assembled (and re-sliced by the
+    # data-parallel dispatcher) every decode step — jnp arrays here would
+    # cost a device round-trip per step before the jit boundary converts
+    # them anyway
+    return default.replace(threshold=np.asarray(thr, np.float32),
                            hop_budget=budget_vec)

@@ -22,6 +22,28 @@ def make_host_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def serve_devices(n: int | None = None) -> list:
+    """The first ``n`` local devices for the data-parallel serving plane
+    (None = all of them).
+
+    The serving tier replicates the model per device and shards the BATCH,
+    so it wants a flat device list, not a mesh.  On CPU-only hosts the
+    platform exposes one device unless ``XLA_FLAGS=
+    --xla_force_host_platform_device_count=N`` is set BEFORE jax first
+    initializes — the error message repeats that because by the time this
+    raises, it is too late to set it in-process.
+    """
+    devs = jax.devices()
+    if n is None:
+        return list(devs)
+    if n > len(devs):
+        raise ValueError(
+            f"serve_devices({n}): only {len(devs)} local devices exist; "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} in the environment before jax initializes")
+    return list(devs[:n])
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
     """Axes carrying the batch: ('pod','data') multi-pod, ('data',) else."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

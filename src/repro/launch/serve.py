@@ -6,6 +6,13 @@
 ``--smoke`` serves the reduced config on host devices; the full config +
 production mesh path goes through serve/decode.make_serve_step (the same
 functions the dry-run lowers).
+
+``--devices N`` serves data-parallel: the params are replicated per device,
+each device owns the KV caches for a fixed span of slots, and the batcher
+fans each step out through a :class:`~repro.serve.dispatch.DeviceDispatcher`
+(on CPU, export ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+first).  ``--max-queue`` / ``--shed-policy`` expose the admission-control
+knobs.
 """
 from __future__ import annotations
 
@@ -17,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, smoke_config
-from repro.core.policy import FogPolicy
+from repro.core.policy import BACKENDS, PRECISIONS, FogPolicy
 from repro.data.lm_data import DataConfig, batch_at_step
 from repro.models import transformer as T
 from repro.models.fog_exit import decode_step_fog, grove_boundaries, lm_hop_energy
@@ -25,7 +32,9 @@ from repro.serve.governor import EnergyGovernor
 from repro.serve.scheduler import ContinuousBatcher, Request
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI (a function so tests can assert the choices stay in
+    sync with the engine's registries — see the --fog-backend regression)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -35,12 +44,13 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fog", action="store_true")
     ap.add_argument("--fog-backend", default="reference",
-                    choices=["reference", "pallas", "fused"],
+                    choices=list(BACKENDS),
                     help="engine backend for the exit gate (kernel-flavored "
-                         "choices route the pallas top-2 margin kernel)")
+                         "choices route the pallas top-2 margin kernel; "
+                         "'ring' additionally needs a grove mesh)")
     ap.add_argument("--thresh", type=float, default=0.3)
     ap.add_argument("--fog-precision", default=None,
-                    choices=["fp32", "bf16", "int8"],
+                    choices=list(PRECISIONS),
                     help="default FogPolicy precision stamped on the "
                          "batcher (forest-backed decode_fns read it to pick "
                          "their packed tables; this LM layer-grove gate has "
@@ -56,53 +66,127 @@ def main() -> None:
                          "the rolling estimate breaches the budget "
                          "(energy priced by the LM layer-grove FLOP proxy, "
                          "models/fog_exit.lm_hop_energy)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-parallel serving: replicate params over the "
+                         "first N local devices and shard the slot batch "
+                         "across them (CPU: export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission control: bound the request queue "
+                         "(default unbounded)")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=["reject", "oldest"],
+                    help="who is shed when the queue is full")
     ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def _splice_row(batch_leaf, row_leaf, slot: int, n_slots: int):
+    """Write a 1-row prefill cache leaf into lane ``slot`` of a batched
+    cache leaf (axis found by its ``n_slots`` extent)."""
+    for ax in range(batch_leaf.ndim):
+        if batch_leaf.shape[ax] == n_slots and row_leaf.shape[ax] == 1:
+            sl = [slice(None)] * batch_leaf.ndim
+            sl[ax] = slice(slot, slot + 1)
+            for sax in range(batch_leaf.ndim):
+                if sax != ax and row_leaf.shape[sax] != batch_leaf.shape[sax]:
+                    sl[sax] = slice(0, row_leaf.shape[sax])
+            return batch_leaf.at[tuple(sl)].set(row_leaf)
+    return batch_leaf
+
+
+def main() -> None:
+    ap = build_parser()
     args = ap.parse_args()
     if args.energy_budget_nj is not None and not args.fog:
         # without --fog the decode step reports no hop telemetry: the
         # governor would be a silent no-op, which is worse than an error
         ap.error("--energy-budget-nj requires --fog (the governor needs "
                  "the FoG decode path's hop telemetry)")
+    if args.devices > 1 and args.slots % args.devices:
+        ap.error(f"--slots {args.slots} must divide evenly over "
+                 f"--devices {args.devices} (fixed per-device spans)")
 
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     if cfg.frontend:
         raise SystemExit(f"{cfg.name}: stub-frontend archs serve via "
                          "precomputed embeddings; use serve/decode.py directly")
     params = T.init_params(cfg, jax.random.key(args.seed), jnp.float32)
-    caches = T.cache_init(cfg, args.slots, args.max_seq, jnp.float32)
-    state = {"caches": caches}
-
-    def prefill_fn(slot: int, prompt: np.ndarray) -> int:
-        _, c = T.prefill(params, cfg, tokens=jnp.asarray(prompt)[None, :],
-                         max_seq=args.max_seq)
-        def splice(batch_leaf, row_leaf):
-            for ax in range(batch_leaf.ndim):
-                if batch_leaf.shape[ax] == args.slots and row_leaf.shape[ax] == 1:
-                    sl = [slice(None)] * batch_leaf.ndim
-                    sl[ax] = slice(slot, slot + 1)
-                    for sax in range(batch_leaf.ndim):
-                        if sax != ax and row_leaf.shape[sax] != batch_leaf.shape[sax]:
-                            sl[sax] = slice(0, row_leaf.shape[sax])
-                    return batch_leaf.at[tuple(sl)].set(row_leaf)
-            return batch_leaf
-        state["caches"] = jax.tree.map(splice, state["caches"], c)
-        return len(prompt)
 
     default_policy = FogPolicy(threshold=args.thresh,
                                hop_budget=args.hop_budget,
                                backend=args.fog_backend,
                                precision=args.fog_precision)
 
-    def decode_fn(tokens, lengths, policy):
-        # policy: the batcher's per-lane assembly of each slot's QoS contract
-        length = jnp.int32(int(np.asarray(lengths).max()))
-        if args.fog:
-            logits, state["caches"], hops = decode_step_fog(
-                params, cfg, tokens, state["caches"], length, policy)
-            return logits, hops
-        logits, state["caches"] = T.decode_step(params, cfg, tokens,
-                                                state["caches"], length)
-        return logits, None
+    dispatcher = None
+    if args.devices > 1:
+        from repro.launch.mesh import serve_devices
+        from repro.serve.dispatch import DeviceDispatcher
+
+        devices = serve_devices(args.devices)
+        # one replica per device: its own committed params copy and the KV
+        # caches for its span of slots — lanes never migrate, so a prefill
+        # touches exactly one device's cache
+        states: dict[int, dict] = {}
+
+        def factory(index, device, span):
+            params_d = jax.device_put(params, device)
+            caches_d = jax.device_put(
+                T.cache_init(cfg, span, args.max_seq, jnp.float32), device)
+            states[index] = {"caches": caches_d, "device": device}
+
+            def decode(tokens, lengths, policy):
+                length = jnp.int32(int(np.asarray(lengths).max()))
+                tk = jax.device_put(jnp.asarray(tokens), device)
+                if args.fog:
+                    logits, states[index]["caches"], hops = decode_step_fog(
+                        params_d, cfg, tk, states[index]["caches"], length,
+                        policy)
+                    return logits, hops
+                logits, states[index]["caches"] = T.decode_step(
+                    params_d, cfg, tk, states[index]["caches"], length)
+                return logits, None
+
+            return decode
+
+        dispatcher = DeviceDispatcher(factory, devices)
+        span = args.slots // args.devices
+
+        def prefill_fn(slot: int, prompt: np.ndarray) -> int:
+            _, c = T.prefill(params, cfg,
+                             tokens=jnp.asarray(prompt)[None, :],
+                             max_seq=args.max_seq)
+            st = states[slot // span]
+            st["caches"] = jax.tree.map(
+                lambda b, r: _splice_row(b, r, slot % span, span),
+                st["caches"], jax.device_put(c, st["device"]))
+            return len(prompt)
+
+        decode_fn = None
+    else:
+        caches = T.cache_init(cfg, args.slots, args.max_seq, jnp.float32)
+        state = {"caches": caches}
+
+        def prefill_fn(slot: int, prompt: np.ndarray) -> int:
+            _, c = T.prefill(params, cfg,
+                             tokens=jnp.asarray(prompt)[None, :],
+                             max_seq=args.max_seq)
+            state["caches"] = jax.tree.map(
+                lambda b, r: _splice_row(b, r, slot, args.slots),
+                state["caches"], c)
+            return len(prompt)
+
+        def decode_fn(tokens, lengths, policy):
+            # policy: the batcher's per-lane assembly of the slots' QoS
+            # contracts
+            length = jnp.int32(int(np.asarray(lengths).max()))
+            if args.fog:
+                logits, state["caches"], hops = decode_step_fog(
+                    params, cfg, tokens, state["caches"], length, policy)
+                return logits, hops
+            logits, state["caches"] = T.decode_step(params, cfg, tokens,
+                                                    state["caches"], length)
+            return logits, None
 
     governor = None
     if args.energy_budget_nj is not None:
@@ -125,18 +209,26 @@ def main() -> None:
                                   model=model, window=max(args.slots * 4, 16))
     batcher = ContinuousBatcher(args.slots, decode_fn, prefill_fn, eos_id=-1,
                                 default_policy=default_policy,
-                                governor=governor)
+                                governor=governor, dispatcher=dispatcher,
+                                max_queue=args.max_queue,
+                                shed_policy=args.shed_policy)
     dcfg = DataConfig(cfg.vocab_size, 32, 8, seed=args.seed + 7)
+    admitted = 0
     for rid in range(args.requests):
         prompt = batch_at_step(dcfg, rid)["tokens"][0, :24] % cfg.vocab_size
-        batcher.submit(Request(rid=rid, prompt=prompt,
-                               max_new_tokens=args.max_new))
+        admitted += batcher.submit(Request(rid=rid, prompt=prompt,
+                                           max_new_tokens=args.max_new))
     t0 = time.time()
     done = batcher.run()
     dt = time.time() - t0
     total_tokens = sum(len(r.generated) for r in done)
-    print(f"[serve] {len(done)} requests, {total_tokens} tokens "
-          f"in {dt:.1f}s ({total_tokens / dt:.1f} tok/s)")
+    print(f"[serve] {len(done)}/{admitted} requests, {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens / dt:.1f} tok/s)"
+          + (f" on {args.devices} devices" if args.devices > 1 else ""))
+    if batcher.stats.n_shed:
+        print(f"[serve] admission shed {batcher.stats.n_shed}/"
+              f"{batcher.stats.n_offered} "
+              f"({100 * batcher.stats.shed_rate:.1f}%)")
     if args.fog:
         g = len(grove_boundaries(cfg))
         for r in sorted(done, key=lambda r: r.rid):

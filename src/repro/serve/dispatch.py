@@ -1,0 +1,324 @@
+"""Data-parallel serving plane: replicate the model, shard the batch.
+
+The ring backend shards *groves* across a mesh; this module shards the
+*batch*.  A :class:`DeviceDispatcher` owns N replicas of one decode
+program, each bound to its own device and to a fixed contiguous span of
+the batcher's slots (slot ``i`` lives on device ``i // span`` forever, so
+per-device state — packed tables, KV caches, feature buffers — never
+migrates and every replica compiles exactly one program shape).
+
+Dispatch is asynchronous: each step the
+:class:`~repro.serve.scheduler.ContinuousBatcher` calls
+:meth:`DeviceDispatcher.dispatch` once per precision group; the dispatcher
+slices the group's span inputs, enqueues one decode call per (device,
+precision) on that device's dispatch queue, and returns WITHOUT blocking —
+JAX's async dispatch lets every replica compute concurrently.
+:meth:`harvest` drains the queues with a single deferred
+``jax.block_until_ready`` over everything in flight, then scatters the
+per-span outputs back into full ``[n_slots]`` arrays.  A precision group
+that touches a span dispatches the FULL span (fixed shape, no recompile
+churn — the per-lane threshold/budget vectors are traced inputs) and only
+the group's lanes are harvested from it, mirroring the single-device
+bucketed dispatch in ``scheduler.step``.
+
+Replication is plain device placement: :func:`replicate` ``device_put``\\ s
+a pytree (e.g. a :class:`~repro.forest.pack.ForestPack`) onto each serve
+device; committed inputs then pin each replica's computation to its own
+device.  On CPU-only hosts (CI), force a mesh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — see
+:func:`repro.launch.mesh.serve_devices`.
+
+:class:`ForestReplicaServer` is the canonical factory for the paper's
+workload: forest classification serving, one pending feature row per slot,
+a ForestPack replica (per precision) per device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.policy import NO_BUDGET, FogPolicy
+
+
+def replicate(tree, devices: Sequence) -> list:
+    """One committed copy of ``tree`` per device (model replication for the
+    data-parallel plane)."""
+    return [jax.device_put(tree, d) for d in devices]
+
+
+@dataclasses.dataclass
+class Pending:
+    """One in-flight decode call on one device's dispatch queue."""
+
+    device: int                  # dispatcher device index
+    precision: str | None        # the precision group this call serves
+    lanes: np.ndarray            # global lane indices to harvest from it
+    local: np.ndarray            # those lanes' offsets inside the span
+    logits: object               # [span, C] device array (not yet ready)
+    hops: object                 # [span] device array | None
+    dispatched_at: float = 0.0
+
+
+class DeviceDispatcher:
+    """Fan one continuous batch out over per-device decode replicas.
+
+    decode_factory(index, device, span) -> decode_fn(tokens [span],
+        lengths [span], policy with [span] lane vectors) -> (logits, hops)
+        The factory builds ONE replica: it places that replica's state on
+        ``device`` and must return without blocking on results (outputs are
+        harvested later).  ``tokens``/``lengths`` arrive as numpy slices;
+        the replica is responsible for ``jax.device_put`` onto its device.
+    devices: the serve devices (default: every local device — force >1 on
+        CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    The dispatcher is bound to a slot count by the batcher
+    (:meth:`bind`); ``n_slots`` must divide evenly over the devices.
+    """
+
+    def __init__(self, decode_factory: Callable, devices: Sequence | None = None):
+        if devices is None:
+            devices = jax.devices()
+        if not devices:
+            raise ValueError("DeviceDispatcher needs at least one device")
+        self.devices = list(devices)
+        self.decode_factory = decode_factory
+        self.span: int | None = None
+        self._fns: list[Callable] | None = None
+        # per-device dispatch queues, drained at harvest time
+        self._queues: list[list[Pending]] = [[] for _ in self.devices]
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def bind(self, n_slots: int) -> None:
+        """Partition ``n_slots`` into per-device spans and build the
+        replicas (idempotent for the same slot count)."""
+        if self.span is not None:
+            if self.span * self.n_devices != n_slots:
+                raise ValueError(
+                    f"dispatcher already bound to "
+                    f"{self.span * self.n_devices} slots, cannot rebind "
+                    f"to {n_slots}")
+            return
+        if n_slots % self.n_devices:
+            raise ValueError(
+                f"n_slots={n_slots} must divide evenly over "
+                f"{self.n_devices} devices (fixed per-device spans)")
+        self.span = n_slots // self.n_devices
+        self._fns = [self.decode_factory(i, d, self.span)
+                     for i, d in enumerate(self.devices)]
+
+    def device_of(self, lane: int) -> int:
+        """Which device serves a global lane index."""
+        if self.span is None:
+            raise ValueError("dispatcher not bound; construct the batcher "
+                             "(or call bind) first")
+        return lane // self.span
+
+    def lane_devices(self, lanes) -> np.ndarray:
+        """Vectorized :meth:`device_of` (telemetry labeling)."""
+        return np.asarray(lanes, np.int64) // self.span
+
+    # -- the dispatch/harvest cycle ---------------------------------------
+    def dispatch(self, tokens: np.ndarray, lengths: np.ndarray,
+                 policy: FogPolicy, lanes) -> list[Pending]:
+        """Enqueue one precision group's lanes, without blocking.
+
+        ``policy`` carries the group's static knobs and the FULL-batch
+        per-lane vectors; ``lanes`` are the global lane indices belonging
+        to this group.  Every device whose span intersects ``lanes`` gets
+        one decode call over its whole span.
+        """
+        if self._fns is None:
+            self.bind(len(tokens))
+        lanes = np.asarray(lanes, np.int64)
+        thr = np.asarray(policy.threshold)
+        bud = (np.asarray(policy.hop_budget)
+               if policy.hop_budget is not None else None)
+        out = []
+        for d in np.unique(lanes // self.span):
+            d = int(d)
+            lo, hi = d * self.span, (d + 1) * self.span
+            sl = slice(lo, hi)
+            span_pol = policy.replace(
+                threshold=thr[sl] if thr.ndim else policy.threshold,
+                hop_budget=(bud[sl] if bud is not None and bud.ndim
+                            else policy.hop_budget))
+            mine = lanes[(lanes >= lo) & (lanes < hi)]
+            logits, hops = self._fns[d](tokens[sl], lengths[sl], span_pol)
+            p = Pending(device=d, precision=policy.precision, lanes=mine,
+                        local=mine - lo, logits=logits, hops=hops,
+                        dispatched_at=time.perf_counter())
+            self._queues[d].append(p)
+            out.append(p)
+        return out
+
+    def harvest(self, n_slots: int):
+        """Drain every device queue: ONE deferred ``block_until_ready``
+        over all in-flight outputs, then scatter the group lanes back into
+        full-batch arrays.
+
+        Returns ``(logits [n_slots, C], hops [n_slots] | None,
+        dispatches)`` — logits/hops as HOST numpy arrays — where
+        ``dispatches`` is the drained :class:`Pending` list (device /
+        precision / lane bookkeeping for telemetry and the load harness's
+        per-device accounting).
+        """
+        pending = [p for q in self._queues for p in q]
+        for q in self._queues:
+            q.clear()
+        if not pending:
+            raise ValueError("harvest() with nothing dispatched")
+        # the single deferred synchronization point of the whole step
+        jax.block_until_ready([(p.logits, p.hops) for p in pending])
+        hops_present = [p.hops is not None for p in pending]
+        if any(hops_present) != all(hops_present):
+            raise ValueError(
+                "inconsistent decode replicas: some returned hop telemetry "
+                "and some returned hops=None")
+        logits = None
+        hops = None
+        for p in pending:
+            lg = np.asarray(p.logits)
+            if logits is None:
+                logits = np.zeros((n_slots,) + lg.shape[1:], lg.dtype)
+                if p.hops is not None:
+                    hops = np.zeros((n_slots,), np.int64)
+            logits[p.lanes] = lg[p.local]
+            if p.hops is not None:
+                hops[p.lanes] = np.asarray(p.hops)[p.local]
+        # numpy on purpose: the scheduler's post-step bookkeeping (argmax,
+        # per-lane harvesting) is host-side serial work — handing back
+        # device arrays would buy nothing but re-dispatch latency
+        return logits, hops, pending
+
+
+@partial(jax.jit,
+         static_argnames=("max_hops", "backend", "block_b"))
+def _serve_eval(pack, x, key, step, thresh, budget, max_hops: int,
+                backend: str, block_b: int):
+    """One span's decode as ONE jitted program: start-grove draw +
+    Algorithm-2 evaluation fused into a single dispatch.  The serving loop
+    is latency-bound on per-dispatch Python/runtime overhead, so the
+    un-jitted conveniences of ``FogEngine.eval`` (policy resolution, report
+    pricing, a separate ``sample_starts`` dispatch) are deliberately
+    bypassed — ``_eval_core`` is the same conformance-tested state machine
+    every backend shares."""
+    from repro.core.engine import _eval_core
+    start = jax.random.randint(jax.random.fold_in(key, step),
+                               (x.shape[0],), 0, pack.n_groves)
+    res = _eval_core(pack, x, start, thresh, budget, max_hops, backend,
+                     block_b, False)
+    return res.proba, res.hops
+
+
+class ForestReplicaServer:
+    """Forest classification serving behind a :class:`DeviceDispatcher`.
+
+    Each slot holds one pending feature row; each device hosts committed
+    :class:`~repro.forest.pack.ForestPack` replicas (one per precision in
+    ``precisions``, so per-request ``FogPolicy(precision=...)`` contracts
+    dispatch against resident tables instead of re-packing mid-step).
+
+        server = ForestReplicaServer(gc, n_features=16)
+        disp = DeviceDispatcher(server.factory, devices=serve_devices(4))
+        batcher = ContinuousBatcher(128, None, server.prefill,
+                                    dispatcher=disp)
+        batcher.submit(Request(rid=0, prompt=x_row, max_new_tokens=1))
+
+    ``Request.prompt`` is the feature row (float, ``[n_features]``); the
+    decode "logits" are the forest's class probabilities and ``hops`` is
+    the paper's per-example energy quantity, so the whole mixed-QoS /
+    governor / admission-control machinery applies unchanged.
+    """
+
+    def __init__(self, gc, n_features: int, *, backend: str = "fused",
+                 precisions: Sequence[str] = ("fp32",), seed: int = 0):
+        from repro.forest.pack import ForestPack
+        if isinstance(gc, ForestPack):
+            self._packs = {gc.precision: gc}
+            make = gc.astype
+        else:
+            self._packs = {}
+            make = lambda p: ForestPack.from_groves(gc, p)  # noqa: E731
+        for p in precisions:
+            if p not in self._packs:
+                self._packs[p] = make(p)
+        self.default_precision = tuple(precisions)[0]
+        self.n_features = int(n_features)
+        self.backend = backend
+        self.seed = seed
+        self._buffers: dict[int, np.ndarray] = {}
+        self._span: int | None = None
+        self._steps: dict[int, int] = {}
+        self._energy_models: dict[str, object] = {}
+
+    @property
+    def n_groves(self) -> int:
+        return self._packs[self.default_precision].n_groves
+
+    def energy_model(self, precision: str | None = None):
+        """The pricing :class:`~repro.core.energy.EnergyModel` for one
+        precision's packed tables (cached)."""
+        from repro.core.energy import EnergyModel
+        precision = precision or self.default_precision
+        m = self._energy_models.get(precision)
+        if m is None:
+            m = EnergyModel.from_pack(self._packs[precision],
+                                      self.n_features)
+            self._energy_models[precision] = m
+        return m
+
+    def factory(self, index: int, device, span: int):
+        """The :class:`DeviceDispatcher` ``decode_factory`` contract."""
+        self._span = span
+        buf = np.zeros((span, self.n_features), np.float32)
+        self._buffers[index] = buf
+        packs = {p: jax.device_put(pack, device)
+                 for p, pack in self._packs.items()}
+        key = jax.device_put(jax.random.key(self.seed + index), device)
+        self._steps[index] = 0
+        n_groves = self.n_groves
+        backend = self.backend
+        block_b = min(256, span)
+
+        def decode(tokens, lengths, policy):
+            # tokens/lengths are the slot-model plumbing; the forest serves
+            # the span's feature rows.  A fresh start-grove draw per step
+            # keeps the rotation-start randomization honest under
+            # continuous refill.  Per-lane knobs are shaped as numpy — the
+            # jit call places them beside the committed pack/x, so the
+            # whole evaluation runs on THIS replica's device.
+            step = self._steps[index] = self._steps[index] + 1
+            thr = np.broadcast_to(
+                np.asarray(policy.threshold, np.float32), (span,))
+            bud = (np.broadcast_to(
+                       np.asarray(policy.hop_budget, np.int32), (span,))
+                   if policy.hop_budget is not None
+                   else np.full((span,), NO_BUDGET, np.int32))
+            prec = policy.precision or self.default_precision
+            x = jax.device_put(buf, device)
+            return _serve_eval(packs[prec], x, key, np.int32(step),
+                               thr, bud, max_hops=n_groves,
+                               backend=backend, block_b=block_b)
+
+        return decode
+
+    def prefill(self, slot: int, prompt: np.ndarray) -> int:
+        """Store the request's feature row in its slot's device buffer."""
+        if self._span is None:
+            raise ValueError("server not bound; construct the batcher "
+                             "with its DeviceDispatcher first")
+        row = np.asarray(prompt, np.float32).reshape(-1)
+        if row.shape[0] != self.n_features:
+            raise ValueError(
+                f"request feature row has {row.shape[0]} features, "
+                f"server expects {self.n_features}")
+        self._buffers[slot // self._span][slot % self._span] = row
+        return 1

@@ -96,6 +96,13 @@ class EnergyGovernor:
         self._seen = 0
         self._rung_obs = 0
         self._ok_streak = 0
+        # per-device rolling estimates (data-parallel serving): the FLEET
+        # estimate drives the ladder — one SLO, one control loop — but the
+        # per-device view survives rung transitions and exposes skew (a
+        # device drawing hard traffic, a straggling replica) that the fleet
+        # mean would average away
+        self.device_nj: dict[int, float] = {}
+        self._device_obs: dict[int, int] = {}
         self._models: dict[str, object] = {}
         # measured cost of rungs that breached the budget, with the
         # observation count at the breach: an uncalibrated ladder learns
@@ -153,12 +160,16 @@ class EnergyGovernor:
             self.model_for(self.current.precision).lane_pj(
                 np.asarray(hops)))
 
-    def observe(self, hops=None, energy_pj=None) -> float:
+    def observe(self, hops=None, energy_pj=None, devices=None) -> float:
         """Fold one batch of telemetry into the rolling estimate.
 
         Pass ``energy_pj`` (per-example pJ, e.g. ``EvalReport.energy_pj``)
         when available, else ``hops`` to be priced at the active rung's
-        precision.  Returns the updated rolling nJ/classification.
+        precision.  ``devices`` optionally labels each example with the
+        serving device index (data-parallel plane) to additionally feed the
+        per-device rolling estimates (``device_nj``) — the fleet-wide
+        estimate, and the ladder it drives, are unaffected.  Returns the
+        updated rolling nJ/classification.
         """
         if energy_pj is None:
             if hops is None:
@@ -178,7 +189,42 @@ class EnergyGovernor:
             self.rolling_nj += alpha * (batch_nj - self.rolling_nj)
         self._seen += n
         self._rung_obs = total
+        if devices is not None:
+            d = np.asarray(devices).reshape(-1)
+            if d.shape != e.reshape(-1).shape:
+                raise ValueError(
+                    f"devices labels {d.shape} must match the energy "
+                    f"samples {e.reshape(-1).shape}")
+            flat = e.reshape(-1)
+            for dev in np.unique(d):
+                vals = flat[d == dev]
+                self._observe_device(int(dev), float(vals.mean()) * 1e-3,
+                                     int(vals.size))
         return self.rolling_nj
+
+    def _observe_device(self, dev: int, batch_nj: float, n: int) -> None:
+        """Per-device EWMA, same warm-start weighting as the fleet
+        estimate.  Survives rung transitions: it tracks the device, not
+        the rung."""
+        prev = self.device_nj.get(dev)
+        obs = self._device_obs.get(dev, 0) + n
+        if prev is None:
+            self.device_nj[dev] = batch_nj
+        else:
+            alpha = min(1.0, n / max(1, min(obs, self.window)))
+            self.device_nj[dev] = prev + alpha * (batch_nj - prev)
+        self._device_obs[dev] = obs
+
+    def device_summary(self) -> dict:
+        """Per-device view: ``{device: {"nj": rolling, "n": observations}}``
+        plus the fleet spread (max - min rolling nJ across devices) under
+        the ``"spread_nj"`` key of the returned dict's ``None`` entry."""
+        out: dict = {dev: {"nj": nj, "n": self._device_obs[dev]}
+                     for dev, nj in sorted(self.device_nj.items())}
+        if self.device_nj:
+            vals = list(self.device_nj.values())
+            out[None] = {"spread_nj": max(vals) - min(vals)}
+        return out
 
     # -- the control loop -------------------------------------------------
     def step(self) -> FogPolicy:
@@ -284,10 +330,15 @@ class EnergyGovernor:
               else f"{self.rolling_nj:.3f}")
         budget = ("none" if self.budget_nj is None
                   else f"{self.budget_nj:.3f}")
-        return (f"rolling {nj} nJ / budget {budget} nJ, rung "
-                f"{self.rung + 1}/{len(self._rungs)}, "
-                f"{len(self.transitions)} transitions, "
-                f"{self._seen} classifications")
+        s = (f"rolling {nj} nJ / budget {budget} nJ, rung "
+             f"{self.rung + 1}/{len(self._rungs)}, "
+             f"{len(self.transitions)} transitions, "
+             f"{self._seen} classifications")
+        if self.device_nj:
+            vals = list(self.device_nj.values())
+            s += (f", {len(vals)} devices "
+                  f"(spread {max(vals) - min(vals):.3f} nJ)")
+        return s
 
 
 def default_ladder(base: FogPolicy, model=None,

@@ -24,6 +24,21 @@ per-lane threshold/budget vectors; each slot's outputs are harvested from
 its own precision's call).  A homogeneous batch — the common case — still
 costs exactly one dispatch.
 
+Data-parallel serving: hand the batcher a
+:class:`~repro.serve.dispatch.DeviceDispatcher` instead of a ``decode_fn``
+and each precision group's dispatch fans out across the dispatcher's device
+replicas (fixed per-device slot spans, per-device dispatch queues, one
+deferred ``jax.block_until_ready`` at harvest) — the slot model, policy
+assembly and telemetry are unchanged; only the execution plane widens.
+
+Admission control: ``max_queue`` bounds the request queue.  When it is
+full, ``shed_policy`` decides who pays: ``"reject"`` sheds the incoming
+request (``submit`` returns False), ``"oldest"`` evicts the oldest queued
+request to admit the new one.  Shed requests are marked ``req.shed``,
+collected in ``batcher.shed_requests``, and counted in
+``ServeStats.n_shed`` / ``shed_rate`` — overload becomes a measured,
+bounded signal instead of an unbounded latency tail.
+
 Energy governance: install an :class:`~repro.serve.governor.EnergyGovernor`
 and the batcher serves under an nJ/classification SLO — each step's default
 policy is the governor's active ladder rung, every step's hop telemetry
@@ -39,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import time
 import warnings
 from collections import deque
 from typing import Callable
@@ -66,6 +82,13 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     hops: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # set by admission control when the request is dropped under overload
+    shed: bool = False
+    # wall-clock stamps for latency accounting (filled by the load harness
+    # or any caller that wants per-request latency; the batcher itself
+    # never reads them)
+    t_submit: float | None = None
+    t_done: float | None = None
 
 
 @dataclasses.dataclass
@@ -78,6 +101,13 @@ class ServeStats:
     n_events: int = 0
     total_pj: float = 0.0
     has_energy: bool = False
+    # events that actually carried a pJ price — the mean_energy_nj
+    # denominator.  Mixing priced and unpriced updates (governor installed
+    # mid-run, hops-only telemetry) must not deflate the mean.
+    n_priced: int = 0
+    # admission-control counters (bounded queue)
+    n_offered: int = 0
+    n_shed: int = 0
 
     def update(self, hops, energy_pj=None) -> None:
         h = np.asarray(hops)
@@ -85,6 +115,7 @@ class ServeStats:
         self.n_events += int(h.size)
         if energy_pj is not None:
             self.total_pj += float(np.asarray(energy_pj, np.float64).sum())
+            self.n_priced += int(h.size)
             self.has_energy = True
 
     def reset(self) -> None:
@@ -92,6 +123,9 @@ class ServeStats:
         self.n_events = 0
         self.total_pj = 0.0
         self.has_energy = False
+        self.n_priced = 0
+        self.n_offered = 0
+        self.n_shed = 0
 
     @property
     def mean_hops(self) -> float:
@@ -99,9 +133,15 @@ class ServeStats:
 
     @property
     def mean_energy_nj(self) -> float:
-        """Mean modeled nJ per decoded event (0.0 until priced telemetry
-        arrives)."""
-        return self.total_pj * 1e-3 / max(1, self.n_events)
+        """Mean modeled nJ per PRICED decoded event (0.0 until priced
+        telemetry arrives).  Unpriced events (no governor / hops-only
+        updates) are excluded from the denominator."""
+        return self.total_pj * 1e-3 / max(1, self.n_priced)
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of offered requests shed by admission control."""
+        return self.n_shed / max(1, self.n_offered)
 
     def summary(self, n_groves: int) -> str:
         s = (f"hops/event {self.mean_hops:.2f} "
@@ -109,6 +149,9 @@ class ServeStats:
              f"{self.n_events} events)")
         if self.has_energy:
             s += f", {self.mean_energy_nj:.3f} nJ/event"
+        if self.n_shed:
+            s += (f", shed {self.n_shed}/{self.n_offered} "
+                  f"({100 * self.shed_rate:.1f}%)")
         return s
 
 
@@ -118,16 +161,34 @@ class SlotState:
     length: int = 0               # tokens already in this slot's cache
 
 
-def _takes_policy(decode_fn: Callable) -> bool:
-    """Does decode_fn accept a third (policy) argument?"""
+def _policy_mode(decode_fn: Callable) -> str:
+    """How decode_fn accepts the batch policy.
+
+    ``"positional"``  three-plus positional params (or ``*args``): called
+                      ``decode_fn(tokens, lengths, policy)``
+    ``"keyword"``     a KEYWORD_ONLY ``policy`` param (also reachable
+                      through ``functools.partial`` / ``jax.jit`` wrappers,
+                      whose signatures follow ``__wrapped__``): called
+                      ``decode_fn(tokens, lengths, policy=policy)``
+    ``"legacy"``      two-arg decode; never sees a policy
+    """
     try:
         params = inspect.signature(decode_fn).parameters.values()
     except (TypeError, ValueError):   # builtins / C callables: assume legacy
-        return False
+        return "legacy"
     positional = [p for p in params
                   if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
-    return (len(positional) >= 3
-            or any(p.kind == p.VAR_POSITIONAL for p in params))
+    if (len(positional) >= 3
+            or any(p.kind == p.VAR_POSITIONAL for p in params)):
+        return "positional"
+    if any(p.kind == p.KEYWORD_ONLY and p.name == "policy" for p in params):
+        return "keyword"
+    return "legacy"
+
+
+def _takes_policy(decode_fn: Callable) -> bool:
+    """Does decode_fn accept a policy argument (positional or kw-only)?"""
+    return _policy_mode(decode_fn) != "legacy"
 
 
 class ContinuousBatcher:
@@ -136,6 +197,7 @@ class ContinuousBatcher:
     decode_fn(tokens [n_slots] int32, lengths [n_slots] int32
               [, policy: FogPolicy with per-lane [n_slots] knobs])
         -> (logits [n_slots, V], hops [n_slots] | None)
+        (the policy param may be positional or KEYWORD_ONLY ``*, policy``)
     prefill_fn(slot, prompt) -> int  (returns prompt length in cache)
     default_policy: applied to slots whose request carries no policy (and
         to empty lanes); its static knobs select the compiled program.
@@ -143,13 +205,22 @@ class ContinuousBatcher:
         rung* replaces default_policy each step, per-step hop telemetry
         feeds its rolling estimate, and requests may carry
         ``energy_budget_nj`` contracts.
+    dispatcher: optional :class:`~repro.serve.dispatch.DeviceDispatcher` —
+        the data-parallel execution plane.  Mutually exclusive with
+        ``decode_fn`` (pass ``decode_fn=None``); always policy-aware.
+    max_queue: admission-control bound on the request queue (None =
+        unbounded, the pre-existing behavior).
+    shed_policy: who is shed when the queue is full — ``"reject"`` the
+        incoming request (submit returns False) or evict the ``"oldest"``
+        queued request.
     meter: DEPRECATED — pass nothing and read ``batcher.stats`` instead.
     """
 
-    def __init__(self, n_slots: int, decode_fn: Callable,
+    def __init__(self, n_slots: int, decode_fn: Callable | None,
                  prefill_fn: Callable, eos_id: int = 1,
                  meter=None, default_policy: FogPolicy | None = None,
-                 governor=None):
+                 governor=None, dispatcher=None,
+                 max_queue: int | None = None, shed_policy: str = "reject"):
         self.slots = [SlotState() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
         self.decode_fn = decode_fn
@@ -163,7 +234,36 @@ class ContinuousBatcher:
                 "default_policy must carry scalar knobs; the batcher "
                 "assembles the per-lane vectors itself each step")
         self.governor = governor
-        self._policy_aware = _takes_policy(decode_fn)
+        self.dispatcher = dispatcher
+        if dispatcher is not None:
+            if decode_fn is not None:
+                raise ValueError(
+                    "pass either decode_fn or dispatcher, not both (the "
+                    "dispatcher owns the per-device decode replicas)")
+            dispatcher.bind(n_slots)
+            self._policy_mode = "dispatch"
+        else:
+            if decode_fn is None:
+                raise ValueError(
+                    "decode_fn is required when no dispatcher is given")
+            self._policy_mode = _policy_mode(decode_fn)
+        self._policy_aware = self._policy_mode != "legacy"
+        if shed_policy not in ("reject", "oldest"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r}; "
+                             "pick 'reject' or 'oldest'")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None = unbounded)")
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.shed_requests: list[Request] = []
+        # the dispatcher's drained Pending list from the last step (device /
+        # precision / lane bookkeeping for the load harness)
+        self.last_dispatches: list = []
+        # maintained per-lane decode inputs (empty lanes stay 0): rebuilding
+        # these with a per-slot Python loop every step is measurable serial
+        # time at serving-scale slot counts
+        self._tokens = np.zeros((n_slots,), np.int32)
+        self._lengths = np.zeros((n_slots,), np.int32)
         if governor is not None:
             # a governor that can never act must be rejected loudly — a
             # silently unenforced SLO is worse than no governor at all
@@ -202,7 +302,14 @@ class ContinuousBatcher:
             self._meter = m
         return self._meter
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Validate, resolve energy contracts, then admit or shed.
+
+        Returns True if the request was admitted to the queue, False if it
+        was shed by admission control (``shed_policy="reject"`` with a full
+        queue).  Invalid requests still raise — shedding is a load signal,
+        not an error-swallowing path.
+        """
         if req.energy_budget_nj is not None:
             if req.policy is not None:
                 raise ValueError(
@@ -240,7 +347,20 @@ class ContinuousBatcher:
                     "compiled program and cannot vary per request; set "
                     "them on the batcher's default_policy (per-request "
                     "knobs are threshold, hop_budget and precision)")
+        self.stats.n_offered += 1
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            if self.shed_policy == "reject":
+                self._shed(req)
+                return False
+            # "oldest": evict the head of the queue to admit the newcomer
+            self._shed(self.queue.popleft())
         self.queue.append(req)
+        return True
+
+    def _shed(self, req: Request) -> None:
+        req.shed = True
+        self.shed_requests.append(req)
+        self.stats.n_shed += 1
 
     def _refill(self) -> None:
         for i, slot in enumerate(self.slots):
@@ -248,6 +368,8 @@ class ContinuousBatcher:
                 req = self.queue.popleft()
                 slot.request = req
                 slot.length = self.prefill_fn(i, req.prompt)
+                self._tokens[i] = req.prompt[-1]
+                self._lengths[i] = slot.length
 
     @property
     def active(self) -> int:
@@ -285,25 +407,29 @@ class ContinuousBatcher:
     def step(self) -> int:
         """One decode step across all active slots.  Returns #active."""
         self._refill()
-        if self.active == 0:
+        occ = [i for i, s in enumerate(self.slots) if s.request is not None]
+        if not occ:
             return 0
-        tokens = np.zeros((len(self.slots),), np.int32)
-        lengths = np.zeros((len(self.slots),), np.int32)
-        for i, s in enumerate(self.slots):
-            if s.request is not None:
-                last = (s.request.generated[-1] if s.request.generated
-                        else s.request.prompt[-1])
-                tokens[i] = last
-                lengths[i] = s.length
-        if self._policy_aware:
+        tokens = self._tokens
+        lengths = self._lengths
+        if self._policy_mode == "dispatch":
+            # data-parallel plane: enqueue every precision group without
+            # blocking (per-device async dispatch), then harvest everything
+            # behind ONE deferred block_until_ready
+            base = self.lane_policy()
+            for prec, idxs in self._precision_groups().items():
+                pol = base if prec is None else base.replace(precision=prec)
+                self.dispatcher.dispatch(tokens, lengths, pol, idxs)
+            logits, hops, self.last_dispatches = self.dispatcher.harvest(
+                len(self.slots))
+        elif self._policy_aware:
             base = self.lane_policy()
             groups = self._precision_groups()
             n = len(self.slots)
             logits, hops = None, None
             for prec, idxs in groups.items():
                 pol = base if prec is None else base.replace(precision=prec)
-                lg, hp = self.decode_fn(jnp.asarray(tokens),
-                                        jnp.asarray(lengths), pol)
+                lg, hp = self._call_decode(tokens, lengths, pol)
                 if len(groups) == 1:
                     logits, hops = lg, hp
                     break
@@ -317,50 +443,75 @@ class ContinuousBatcher:
         else:
             logits, hops = self.decode_fn(jnp.asarray(tokens),
                                           jnp.asarray(lengths))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if isinstance(logits, np.ndarray):
+            # dispatcher harvests host-side; keep the argmax off-device too
+            nxt = np.argmax(logits, axis=-1)
+        else:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
         hops = np.asarray(hops) if hops is not None else None
         if hops is None and self.governor is not None:
             raise ValueError(
                 "the governor needs hop telemetry but decode_fn returned "
                 "hops=None; the energy SLO cannot be enforced")
+        occa = np.asarray(occ, np.int64)
+        self._tokens[occa] = nxt[occa]
+        self._lengths[occa] += 1
+        # bulk host conversion: per-item ``int(arr[i])`` reads are ~10x the
+        # cost of one tolist() at serving-scale slot counts
+        nxt_l = nxt.tolist()
+        hops_l = hops.tolist() if hops is not None else None
         step_hops = []
-        for i, s in enumerate(self.slots):
+        now = time.perf_counter()
+        for i in occ:
+            s = self.slots[i]
             req = s.request
-            if req is None:
-                continue
-            tok = int(nxt[i])
+            tok = nxt_l[i]
             req.generated.append(tok)
-            if hops is not None:
-                h = int(hops[i])
+            if hops_l is not None:
+                h = hops_l[i]
                 req.hops.append(h)
                 step_hops.append(
                     (h, req.policy.precision if req.policy is not None
-                     else None))
+                     else None, i))
             s.length += 1
             if tok == self.eos_id or len(req.generated) >= req.max_new_tokens:
                 req.done = True
+                if req.t_submit is not None:
+                    req.t_done = now
                 self.completed.append(req)
                 self.slots[i] = SlotState()
+                self._tokens[i] = 0
+                self._lengths[i] = 0
         if step_hops:
             self._account(step_hops)
         return self.active
 
+    def _call_decode(self, tokens, lengths, pol):
+        """One decode dispatch, honoring the fn's policy calling convention
+        (positional third arg vs KEYWORD_ONLY ``policy``)."""
+        if self._policy_mode == "keyword":
+            return self.decode_fn(jnp.asarray(tokens), jnp.asarray(lengths),
+                                  policy=pol)
+        return self.decode_fn(jnp.asarray(tokens), jnp.asarray(lengths), pol)
+
     def _account(self, step_hops: list) -> None:
-        """Fold one step's active-lane (hops, request precision) pairs into
-        the fleet telemetry and let the governor react (its rolling
-        estimate + ladder walk).  Each lane is priced at ITS OWN effective
-        precision — the request policy's, falling back to the governor's
-        active rung — so mixed-precision batches are billed at the byte
-        widths they actually dispatched and an int8 step-down shows up as
-        a measured saving."""
-        hops = np.asarray([h for h, _ in step_hops])
+        """Fold one step's active-lane (hops, request precision, lane)
+        tuples into the fleet telemetry and let the governor react (its
+        rolling estimate + ladder walk).  Each lane is priced at ITS OWN
+        effective precision — the request policy's, falling back to the
+        governor's active rung — so mixed-precision batches are billed at
+        the byte widths they actually dispatched and an int8 step-down
+        shows up as a measured saving.  On the data-parallel plane each
+        sample is additionally labeled with its serving device so the
+        governor can keep per-device rolling estimates."""
+        hops = np.asarray([h for h, _, _ in step_hops])
         energy_pj = None
         if self.governor is not None:
             # one lane_pj call per distinct precision in the step (usually
             # one), not per lane — this runs per decoded token
             rung_prec = self.governor.current.precision
             groups: dict[str | None, list[int]] = {}
-            for i, (_, prec) in enumerate(step_hops):
+            for i, (_, prec, _) in enumerate(step_hops):
                 groups.setdefault(
                     prec if prec is not None else rung_prec, []).append(i)
             energy_pj = np.empty(len(step_hops), np.float64)
@@ -371,7 +522,11 @@ class ContinuousBatcher:
         if self._meter is not None:      # deprecated shim path
             self._meter.update(hops)
         if self.governor is not None:
-            self.governor.observe(energy_pj=energy_pj)
+            devices = None
+            if self.dispatcher is not None:
+                devices = self.dispatcher.lane_devices(
+                    [lane for _, _, lane in step_hops])
+            self.governor.observe(energy_pj=energy_pj, devices=devices)
             self.governor.step()
 
     def run(self, max_steps: int = 10000) -> list[Request]:

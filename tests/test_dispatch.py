@@ -1,0 +1,272 @@
+"""Data-parallel serving plane (serve/dispatch.py).
+
+In-process tests drive a DeviceDispatcher over N logical replicas (which
+may share the host's single physical CPU device — the routing/scatter
+contract is device-count-agnostic); the subprocess test forces 4 real XLA
+host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count`` and
+asserts each replica's outputs were actually computed on its own device.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FogPolicy, split
+from repro.serve.dispatch import (DeviceDispatcher, ForestReplicaServer,
+                                  replicate)
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+def _stamp_factory(calls=None):
+    """Mock replica: logits one-hot on the replica index (argmax == which
+    device served the lane), hops = index + 1, and an optional record of
+    (index, thresholds, precision) per decode call."""
+    def factory(index, device, span):
+        def decode(tokens, lengths, policy):
+            if calls is not None:
+                calls.append((index,
+                              np.array(policy.threshold, np.float32,
+                                       copy=True),
+                              policy.precision))
+            logits = np.zeros((span, 8), np.float32)
+            logits[:, index] = 1.0
+            hops = np.full((span,), index + 1)
+            return jnp.asarray(logits), jnp.asarray(hops)
+        return decode
+    return factory
+
+
+def _four_replicas():
+    dev = jax.devices()[0]
+    return [dev] * 4
+
+
+def test_replicate_puts_one_copy_per_device():
+    devs = _four_replicas()
+    copies = replicate({"w": jnp.arange(3)}, devs)
+    assert len(copies) == 4
+    for c in copies:
+        assert next(iter(c["w"].devices())) == devs[0]
+
+
+def test_bind_span_and_rebind_rules():
+    disp = DeviceDispatcher(_stamp_factory(), _four_replicas())
+    with pytest.raises(ValueError, match="divide evenly"):
+        disp.bind(10)
+    disp.bind(8)
+    assert disp.span == 2
+    disp.bind(8)                       # idempotent
+    with pytest.raises(ValueError, match="cannot rebind"):
+        disp.bind(16)
+    assert disp.device_of(0) == 0 and disp.device_of(7) == 3
+    np.testing.assert_array_equal(disp.lane_devices([0, 3, 6]), [0, 1, 3])
+
+
+def test_dispatch_routes_only_intersecting_devices():
+    calls = []
+    disp = DeviceDispatcher(_stamp_factory(calls), _four_replicas())
+    disp.bind(8)
+    tokens = np.zeros(8, np.int32)
+    lengths = np.ones(8, np.int32)
+    pend = disp.dispatch(tokens, lengths, FogPolicy(threshold=0.5), [0, 1, 5])
+    # lanes 0,1 -> device 0; lane 5 -> device 2; devices 1,3 untouched
+    assert sorted(p.device for p in pend) == [0, 2]
+    assert sorted(i for i, _, _ in calls) == [0, 2]
+    logits, hops, drained = disp.harvest(8)
+    assert isinstance(logits, np.ndarray) and isinstance(hops, np.ndarray)
+    assert len(drained) == 2
+    # only the group's lanes are scattered; untouched lanes stay zero
+    np.testing.assert_allclose(logits[0], logits[1])
+    assert logits[0].argmax() == 0 and logits[5].argmax() == 2
+    assert hops[0] == 1 and hops[5] == 3 and hops[2] == 0
+
+
+def test_per_lane_policy_vectors_sliced_per_span():
+    calls = []
+    disp = DeviceDispatcher(_stamp_factory(calls), _four_replicas())
+    disp.bind(8)
+    thr = np.linspace(0.1, 0.8, 8, dtype=np.float32)
+    pol = FogPolicy(threshold=thr,
+                    hop_budget=np.arange(1, 9, dtype=np.int32))
+    disp.dispatch(np.zeros(8, np.int32), np.ones(8, np.int32), pol,
+                  list(range(8)))
+    disp.harvest(8)
+    assert len(calls) == 4
+    for index, seen_thr, _ in calls:
+        np.testing.assert_allclose(seen_thr, thr[2 * index:2 * index + 2])
+
+
+def test_harvest_without_dispatch_raises():
+    disp = DeviceDispatcher(_stamp_factory(), _four_replicas())
+    disp.bind(8)
+    with pytest.raises(ValueError, match="nothing dispatched"):
+        disp.harvest(8)
+
+
+def test_inconsistent_hop_telemetry_raises():
+    def factory(index, device, span):
+        def decode(tokens, lengths, policy):
+            logits = jnp.zeros((span, 4))
+            return logits, (None if index == 1 else jnp.ones((span,)))
+        return decode
+    disp = DeviceDispatcher(factory, _four_replicas())
+    disp.bind(8)
+    disp.dispatch(np.zeros(8, np.int32), np.ones(8, np.int32),
+                  FogPolicy(), list(range(8)))
+    with pytest.raises(ValueError, match="inconsistent"):
+        disp.harvest(8)
+
+
+def test_batcher_dispatch_mode_groups_precisions_across_devices():
+    """Three precision groups in one step: each group dispatches once per
+    intersecting device, and every lane harvests logits/hops from its OWN
+    group's replica call."""
+    calls = []
+    disp = DeviceDispatcher(_stamp_factory(calls), _four_replicas())
+    b = ContinuousBatcher(8, None, lambda slot, prompt: len(prompt),
+                          eos_id=-1, default_policy=FogPolicy(threshold=0.5),
+                          dispatcher=disp)
+    precs = [None, "int8", "bf16", None, "int8", "bf16", None, None]
+    for rid, p in enumerate(precs):
+        pol = None if p is None else FogPolicy(threshold=0.5, precision=p)
+        b.submit(Request(rid=rid, prompt=np.asarray([3]), max_new_tokens=1,
+                         policy=pol))
+    b.step()
+    assert len(b.completed) == 8
+    # span=2: None lanes {0,3,6,7} -> devices {0,1,3}; int8 {1,4} ->
+    # {0,2}; bf16 {2,5} -> {1,2} — one call per (group, touched device)
+    by_prec = {}
+    for _, _, prec in calls:
+        by_prec[prec] = by_prec.get(prec, 0) + 1
+    assert by_prec == {None: 3, "int8": 2, "bf16": 2}
+    # harvest attribution: lane i is served by device i // span
+    for r in b.completed:
+        assert r.generated == [r.rid // 2]
+        assert r.hops == [r.rid // 2 + 1]
+    devs = {p.device for p in b.last_dispatches}
+    assert devs == {0, 1, 2, 3}
+
+
+def test_empty_lane_none_group_folds_into_real_group():
+    """When every default-precision lane is EMPTY, the batcher must not
+    spend decode dispatches on the None group — the empty lanes fold into
+    a real precision group and their outputs are discarded."""
+    calls = []
+    disp = DeviceDispatcher(_stamp_factory(calls), [jax.devices()[0]] * 2)
+    b = ContinuousBatcher(4, None, lambda slot, prompt: len(prompt),
+                          eos_id=-1, dispatcher=disp)
+    for rid in range(2):
+        b.submit(Request(rid=rid, prompt=np.asarray([1]), max_new_tokens=1,
+                         policy=FogPolicy(precision="int8")))
+    b.step()
+    # slots 0,1 int8; slots 2,3 empty+None -> folded: one group, and only
+    # the devices the folded lane set touches are dispatched
+    assert {prec for _, _, prec in calls} == {"int8"}
+    assert len(b.completed) == 2
+
+
+def test_forest_replica_server_end_to_end(trained):
+    """The paper's serving workload against logical replicas: every request
+    classified, hop telemetry positive, predictions match the plain
+    single-program forest evaluation's quality."""
+    ds, rf = trained
+    gc = split(rf, 2)
+    server = ForestReplicaServer(gc, ds.x_test.shape[1], backend="fused",
+                                 precisions=("fp32", "int8"))
+    devs = [jax.devices()[0]] * 2
+    disp = DeviceDispatcher(server.factory, devs)
+    n = 32
+    b = ContinuousBatcher(n, None, server.prefill, eos_id=-1,
+                          default_policy=FogPolicy(threshold=0.7),
+                          dispatcher=disp)
+    rows = ds.x_test[:n]
+    labels = ds.y_test[:n]
+    for rid in range(n):
+        pol = (FogPolicy(threshold=0.7, precision="int8") if rid % 4 == 0
+               else None)
+        b.submit(Request(rid=rid, prompt=rows[rid], max_new_tokens=1,
+                         policy=pol))
+    done = b.run()
+    assert len(done) == n
+    preds = np.array([r.generated[0] for r in sorted(done,
+                                                     key=lambda r: r.rid)])
+    acc = float((preds == labels).mean())
+    assert acc > 0.7                    # forest-quality, not token noise
+    assert all(r.hops[0] >= 1 for r in done)
+    # both replicas served their own spans
+    assert {p.device for p in b.last_dispatches} <= {0, 1}
+
+
+def test_forest_replica_server_validates_rows(trained):
+    ds, rf = trained
+    server = ForestReplicaServer(split(rf, 2), ds.x_test.shape[1])
+    with pytest.raises(ValueError, match="not bound"):
+        server.prefill(0, ds.x_test[0])
+    disp = DeviceDispatcher(server.factory, [jax.devices()[0]])
+    disp.bind(4)
+    with pytest.raises(ValueError, match="features"):
+        server.prefill(0, ds.x_test[0][:3])
+
+
+def test_forest_replica_server_energy_models(trained):
+    ds, rf = trained
+    server = ForestReplicaServer(split(rf, 2), ds.x_test.shape[1],
+                                 precisions=("fp32", "int8"))
+    m32 = server.energy_model("fp32")
+    m8 = server.energy_model("int8")
+    assert server.energy_model() is m32            # default + cached
+    hops = np.full(8, 3)
+    assert float(np.asarray(m8.lane_pj(hops)).sum()) < float(
+        np.asarray(m32.lane_pj(hops)).sum())
+
+
+_SUBPROC = r"""
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.core import FogPolicy
+from repro.launch.mesh import serve_devices
+from repro.serve.dispatch import DeviceDispatcher
+
+devs = serve_devices(4)
+assert len({d.id for d in devs}) == 4
+
+def factory(index, device, span):
+    def decode(tokens, lengths, policy):
+        base = jax.device_put(jnp.asarray(tokens, jnp.float32), device)
+        logits = jnp.stack([base, jnp.full((span,), float(index))], axis=1)
+        hops = jax.device_put(jnp.full((span,), index + 1), device)
+        return logits, hops
+    return decode
+
+disp = DeviceDispatcher(factory, devs)
+disp.bind(16)
+tokens = np.arange(16, dtype=np.int32)
+disp.dispatch(tokens, np.ones(16, np.int32), FogPolicy(threshold=0.5),
+              list(range(16)))
+logits, hops, pend = disp.harvest(16)
+assert sorted({p.device for p in pend}) == [0, 1, 2, 3]
+for p in pend:
+    assert next(iter(p.hops.devices())) == devs[p.device]
+np.testing.assert_allclose(logits[:, 0], np.arange(16))
+np.testing.assert_array_equal(hops, np.repeat([1, 2, 3, 4], 4))
+print("MULTIDEV-OK")
+"""
+
+
+def test_real_four_device_dispatch_subprocess():
+    """The real thing: 4 forced XLA host devices, each replica's outputs
+    computed (and verified resident) on its own device."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    repo = Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = str(repo / "src")
+    proc = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    assert "MULTIDEV-OK" in proc.stdout

@@ -192,3 +192,25 @@ def test_policy_for_budget_list_ladder_keeps_best_rung():
     pol = gov.policy_for_budget(0.4)
     assert pol.threshold == 0.7              # best rung's quality
     assert pol.hop_budget == model.hops_within(400.0)   # budget still hard
+
+
+def test_per_device_rolling_estimates():
+    """Data-parallel telemetry: device-labeled observations feed per-device
+    rolling estimates alongside the fleet estimate, and the summary exposes
+    the cross-device spread (a skewed replica shows up as a number, not a
+    mystery)."""
+    model = EnergyModel(2, 8, 10, 16)
+    gov = EnergyGovernor([FogPolicy(threshold=0.6)], budget_nj=None,
+                         model=model, window=64)
+    pj = np.asarray(model.lane_pj(np.asarray([2, 2, 6, 6])))
+    gov.observe(energy_pj=pj, devices=np.asarray([0, 0, 1, 1]))
+    summary = gov.device_summary()
+    assert set(summary) == {0, 1, None}
+    assert summary[0]["n"] == 2 and summary[1]["n"] == 2
+    assert summary[1]["nj"] > summary[0]["nj"]       # 6 hops > 2 hops
+    spread = summary[None]["spread_nj"]
+    assert spread == pytest.approx(summary[1]["nj"] - summary[0]["nj"])
+    # fleet estimate unchanged by the device labeling
+    assert gov.rolling_nj == pytest.approx(float(pj.mean()) * 1e-3)
+    with pytest.raises(ValueError, match="devices"):
+        gov.observe(energy_pj=pj, devices=np.asarray([0, 1]))

@@ -383,3 +383,107 @@ def test_per_request_energy_budget_resolved_via_governor():
         batcher.submit(Request(rid=2, prompt=np.asarray([0]),
                                policy=FogPolicy(threshold=0.1),
                                energy_budget_nj=1.0))
+
+
+# -- serving-layer bug sweep: calling conventions, admission, stats --------
+
+def test_policy_mode_detects_kwonly_partial_and_jit():
+    """The positional-count heuristic must not misclassify the common
+    wrapper shapes: KEYWORD_ONLY ``*, policy``, functools.partial-bound
+    leading args, and jax.jit wrappers (signature follows __wrapped__)."""
+    import functools
+
+    import jax as _jax
+
+    from repro.serve.scheduler import _policy_mode, _takes_policy
+
+    def kwonly(tokens, lengths, *, policy):
+        return None, None
+
+    def positional(state, tokens, lengths, policy):
+        return None, None
+
+    def legacy(tokens, lengths):
+        return None, None
+
+    assert _policy_mode(kwonly) == "keyword"
+    assert _policy_mode(functools.partial(positional, {})) == "positional"
+    assert _policy_mode(_jax.jit(positional, static_argnums=0)) \
+        == "positional"
+    assert _policy_mode(_jax.jit(legacy)) == "legacy"
+    assert _takes_policy(kwonly) and not _takes_policy(legacy)
+
+
+def test_kwonly_policy_decode_fn_served_policy():
+    """A ``decode_fn(tokens, lengths, *, policy)`` must receive the
+    assembled per-lane policy (it used to be silently demoted to the
+    legacy no-policy path by the 3-positional-params check)."""
+    n = 2
+    seen = []
+
+    def decode_fn(tokens, lengths, *, policy):
+        assert policy is not None
+        seen.append(np.asarray(policy.lane_thresholds(n)))
+        logits = np.zeros((n, 8), np.float32)
+        logits[:, 2] = 1.0
+        return jnp.asarray(logits), jnp.ones((n,), jnp.int32)
+
+    b = ContinuousBatcher(n, decode_fn, lambda slot, prompt: len(prompt),
+                          eos_id=-1, default_policy=FogPolicy(threshold=0.3))
+    b.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=1,
+                     policy=FogPolicy(threshold=0.9)))
+    b.step()
+    assert len(b.completed) == 1
+    np.testing.assert_allclose(seen[0], [0.9, 0.3])
+
+
+def test_admission_reject_sheds_incoming():
+    n = 1
+    b = ContinuousBatcher(n, _mock_decode(n),
+                          lambda slot, prompt: len(prompt), eos_id=-1,
+                          max_queue=2, shed_policy="reject")
+    admitted = [b.submit(Request(rid=rid, prompt=np.asarray([0]),
+                                 max_new_tokens=1)) for rid in range(5)]
+    assert admitted == [True, True, False, False, False]
+    assert b.stats.n_offered == 5 and b.stats.n_shed == 3
+    assert b.stats.shed_rate == pytest.approx(0.6)
+    assert [r.rid for r in b.shed_requests] == [2, 3, 4]
+    assert all(r.shed for r in b.shed_requests)
+    done = b.run()
+    assert sorted(r.rid for r in done) == [0, 1]
+
+
+def test_admission_oldest_evicts_queue_head():
+    n = 1
+    b = ContinuousBatcher(n, _mock_decode(n),
+                          lambda slot, prompt: len(prompt), eos_id=-1,
+                          max_queue=2, shed_policy="oldest")
+    admitted = [b.submit(Request(rid=rid, prompt=np.asarray([0]),
+                                 max_new_tokens=1)) for rid in range(4)]
+    assert admitted == [True, True, True, True]    # newcomers always admitted
+    assert [r.rid for r in b.shed_requests] == [0, 1]
+    done = b.run()
+    assert sorted(r.rid for r in done) == [2, 3]
+
+
+def test_admission_validation():
+    n = 1
+    with pytest.raises(ValueError, match="max_queue"):
+        ContinuousBatcher(n, _mock_decode(n), lambda s, p: len(p),
+                          max_queue=0)
+    with pytest.raises(ValueError, match="shed_policy"):
+        ContinuousBatcher(n, _mock_decode(n), lambda s, p: len(p),
+                          shed_policy="drop-newest")
+
+
+def test_mean_energy_nj_divides_by_priced_events_only():
+    """Mixing priced and unpriced updates must not deflate the mean: 4
+    events at 2000 pJ plus 4 hops-only events is 2 nJ/event, not 1."""
+    from repro.serve.scheduler import ServeStats
+    stats = ServeStats()
+    stats.update(np.full(4, 3), energy_pj=np.full(4, 2000.0))
+    stats.update(np.full(4, 3))                    # unpriced telemetry
+    assert stats.n_events == 8 and stats.n_priced == 4
+    assert stats.mean_energy_nj == pytest.approx(2.0)
+    stats.reset()
+    assert stats.n_priced == 0 and stats.mean_energy_nj == 0.0

@@ -1,0 +1,39 @@
+"""Serve CLI regressions (launch/serve.py).
+
+The --fog-backend bug: the CLI hardcoded its backend choices and silently
+fell out of sync with the engine registry (``ring`` was unreachable).  The
+parser now derives choices from ``core.policy.BACKENDS`` / ``PRECISIONS``;
+these tests pin that contract so a new backend or precision can never be
+un-servable again.
+"""
+from repro.core.policy import BACKENDS, PRECISIONS
+from repro.launch.serve import build_parser
+
+
+def _actions():
+    return {a.dest: a for a in build_parser()._actions}
+
+
+def test_fog_backend_choices_track_engine_registry():
+    acts = _actions()
+    assert list(acts["fog_backend"].choices) == list(BACKENDS)
+    assert "ring" in acts["fog_backend"].choices
+
+
+def test_fog_precision_choices_track_pack_registry():
+    acts = _actions()
+    assert list(acts["fog_precision"].choices) == list(PRECISIONS)
+
+
+def test_data_parallel_knobs_exposed():
+    acts = _actions()
+    assert acts["devices"].default == 1
+    assert acts["max_queue"].default is None
+    assert list(acts["shed_policy"].choices) == ["reject", "oldest"]
+
+
+def test_every_backend_parses():
+    ap = build_parser()
+    for b in BACKENDS:
+        args = ap.parse_args(["--arch", "x", "--fog", "--fog-backend", b])
+        assert args.fog_backend == b
