@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all bench quickstart
+.PHONY: test test-all bench bench-registry quickstart
 
 # tier-1 gate: fast default suite (slow marks + hypothesis sweeps excluded)
 test:
@@ -17,6 +17,10 @@ bench:
 
 bench-full:
 	$(PY) -m benchmarks.run
+
+# multi-tenant registry serving bench; writes BENCH_registry.json
+bench-registry:
+	$(PY) -m benchmarks.registry_bench --smoke
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -22,8 +22,8 @@ def main() -> None:
 
     from benchmarks import (
         ablation_adaptive, engine_bench, fig4_topology, fig5_threshold,
-        fog_ring_bench, lm_fog_exit, serve_bench, table1_accuracy,
-        table1_energy,
+        fog_ring_bench, lm_fog_exit, registry_bench, serve_bench,
+        table1_accuracy, table1_energy,
     )
     import benchmarks.common as common
 
@@ -42,6 +42,8 @@ def main() -> None:
         # subprocess: forces 4 virtual host devices, which must land
         # before jax initializes (this parent already initialized it)
         "serve": lambda: serve_bench.run(smoke=args.quick),
+        # subprocess for the same reason; multi-tenant registry serving
+        "registry": lambda: registry_bench.run(smoke=args.quick),
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -77,7 +77,8 @@ class _Plane:
     """One (n_devices,)-keyed serving plane, shared across the grid rows so
     each (span, precision) program compiles exactly once."""
 
-    def __init__(self, gc, ds, n_devices, n_slots, precisions, backend):
+    def __init__(self, gc, ds, n_devices, n_slots, precisions, backend,
+                 seed=0):
         import numpy as np
         from repro.launch.mesh import serve_devices
         from repro.serve.dispatch import DeviceDispatcher, ForestReplicaServer
@@ -85,7 +86,8 @@ class _Plane:
         self.ds = ds
         self.n_slots = n_slots
         self.server = ForestReplicaServer(
-            gc, ds.x_test.shape[1], backend=backend, precisions=precisions)
+            gc, ds.x_test.shape[1], backend=backend, precisions=precisions,
+            seed=seed)
         self.dispatcher = DeviceDispatcher(self.server.factory,
                                            serve_devices(n_devices))
         self.dispatcher.bind(n_slots)
@@ -354,7 +356,7 @@ def bench(smoke: bool, seed: int = 0) -> dict:
         d = cfg["n_devices"]
         if d not in planes:
             planes[d] = _Plane(gc, ds, d, n_slots, precisions,
-                               backend="fused")
+                               backend="fused", seed=seed)
         t0 = time.time()
         row = _run_row(planes[d], cfg, n_requests, warmup_frac=0.2,
                        seed=seed, arrival_factor=1.3)

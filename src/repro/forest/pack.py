@@ -293,6 +293,11 @@ class ForestPack:
     def load(cls, path) -> "ForestPack":
         return cls.load_with_meta(path)[0]
 
+    # every field a v1 artifact must carry; validated at load so a
+    # truncated/foreign .npz fails with a schema error, not a raw KeyError
+    _REQUIRED_FIELDS = ("precision", "feature", "threshold", "leaf",
+                        "thr_scale", "leaf_scale", "extra_json")
+
     @classmethod
     def load_with_meta(cls, path) -> tuple["ForestPack", dict]:
         """(pack, extra-metadata dict) from a ``save`` artifact."""
@@ -300,14 +305,26 @@ class ForestPack:
             if "format_version" not in z:
                 raise ValueError(
                     f"{path} is not a ForestPack artifact (missing "
-                    "format_version)")
+                    "format_version; this build writes/reads format "
+                    f"v{PACK_FORMAT_VERSION})")
             version = int(z["format_version"])
             if version > PACK_FORMAT_VERSION:
                 raise ValueError(
                     f"{path} is ForestPack format v{version}; this build "
                     f"reads up to v{PACK_FORMAT_VERSION} — upgrade the code "
                     "or re-export the model")
+            missing = [k for k in cls._REQUIRED_FIELDS if k not in z]
+            if missing:
+                raise ValueError(
+                    f"{path} is a corrupt/truncated ForestPack v{version} "
+                    f"artifact: missing fields {missing} (format "
+                    f"v{PACK_FORMAT_VERSION} requires "
+                    f"{list(cls._REQUIRED_FIELDS)})")
             precision = str(z["precision"])
+            if precision not in PRECISIONS:
+                raise ValueError(
+                    f"{path}: artifact precision {precision!r} is not a "
+                    f"supported table dtype (pick from {PRECISIONS})")
             thr, leaf = z["threshold"], z["leaf"]
             if precision == "bf16":
                 thr = thr.view(jnp.bfloat16.dtype)

@@ -36,7 +36,20 @@ def build_parser() -> argparse.ArgumentParser:
     """The serve CLI (a function so tests can assert the choices stay in
     sync with the engine's registries — see the --fog-backend regression)."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="LM architecture to serve (required unless "
+                         "--registry selects forest serving)")
+    ap.add_argument("--registry", default=None, metavar="DIR",
+                    help="serve forest models from a ModelRegistry "
+                         "directory instead of an LM: multi-tenant "
+                         "(model, version, precision)-bucketed dispatch "
+                         "through a VMEM-budgeted PackCache")
+    ap.add_argument("--tenant", action="append", default=None,
+                    help="registry tenant(s) to drive demo traffic at "
+                         "(repeatable; default: every published tenant)")
+    ap.add_argument("--cache-budget-mb", type=float, default=64.0,
+                    help="PackCache VMEM byte budget for resident packed "
+                         "tables (registry mode)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -95,9 +108,89 @@ def _splice_row(batch_leaf, row_leaf, slot: int, n_slots: int):
     return batch_leaf
 
 
+def _serve_registry(args) -> None:
+    """Registry demo: N tenants' live forests behind one batcher, mixed
+    per-request precisions, per-tenant energy governors when an SLO is
+    given.  Feature rows are synthetic (the demo exercises the serving
+    plane, not the datasets)."""
+    from repro.registry import ModelRegistry, PackCache
+    from repro.serve.dispatch import DeviceDispatcher, ForestReplicaServer
+    from repro.serve.governor import TenantLedger, default_ladder
+
+    registry = ModelRegistry(args.registry)
+    tenants = args.tenant or registry.tenants()
+    if not tenants:
+        raise SystemExit(f"registry {args.registry} has no tenants; "
+                         "publish one with ModelRegistry.publish first")
+    cache = PackCache(registry,
+                      budget_bytes=int(args.cache_budget_mb * 2**20))
+    pack0, extra0 = registry.load(tenants[0])
+    n_features = int(extra0.get("n_features_in",
+                                int(np.asarray(pack0.feature).max()) + 1))
+    server = ForestReplicaServer(None, n_features,
+                                 backend=args.fog_backend
+                                 if args.fog_backend != "reference"
+                                 else "fused",
+                                 registry=registry, cache=cache)
+    if args.devices > 1:
+        from repro.launch.mesh import serve_devices
+        devices = serve_devices(args.devices)
+    else:
+        devices = jax.devices()[:1]
+    dispatcher = DeviceDispatcher(server.factory, devices)
+
+    default_policy = FogPolicy(threshold=args.thresh,
+                               hop_budget=args.hop_budget,
+                               precision=args.fog_precision)
+    ledger = None
+    if args.energy_budget_nj is not None:
+        ledger = TenantLedger()
+        for t in tenants:
+            model = server.energy_model(tenant=t)
+            ledger.add(t, EnergyGovernor(
+                default_ladder(default_policy, model,
+                               args.energy_budget_nj),
+                args.energy_budget_nj, model=model,
+                window=max(args.slots * 4, 16)))
+    batcher = ContinuousBatcher(args.slots, None, server.prefill, eos_id=-1,
+                                default_policy=default_policy,
+                                governor=ledger, dispatcher=dispatcher,
+                                registry=registry,
+                                max_queue=args.max_queue,
+                                shed_policy=args.shed_policy)
+    rng = np.random.default_rng(args.seed)
+    admitted = 0
+    for rid in range(args.requests):
+        t = tenants[rid % len(tenants)]
+        admitted += batcher.submit(Request(
+            rid=rid, prompt=rng.standard_normal(n_features), model=t,
+            max_new_tokens=1))
+    t0 = time.time()
+    done = batcher.run()
+    dt = time.time() - t0
+    print(f"[serve] registry {args.registry}: {len(done)}/{admitted} "
+          f"requests over {len(tenants)} tenants in {dt:.2f}s")
+    for t in tenants:
+        v = registry.live_version(t)
+        st = registry.stats_for(t, v)
+        print(f"  {t} v{v}: {st.n_events} events, "
+              f"mean hops {st.mean_hops:.2f}"
+              + (f", {st.mean_energy_nj:.3f} nJ/event"
+                 if st.has_energy else ""))
+    print(f"[serve] cache {cache.summary()}")
+    if ledger is not None:
+        print(f"[serve] ledger\n{ledger.summary()}")
+
+
 def main() -> None:
     ap = build_parser()
     args = ap.parse_args()
+    if args.registry is not None:
+        _serve_registry(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required (or pass --registry DIR for "
+                 "forest-registry serving)")
     if args.energy_budget_nj is not None and not args.fog:
         # without --fog the decode step reports no hop telemetry: the
         # governor would be a silent no-op, which is worse than an error

@@ -1,0 +1,7 @@
+"""Multi-tenant model registry: versioned artifacts, hot-swap, canary
+routing (:mod:`.registry`) and the VMEM-budgeted resident pack set
+(:mod:`.cache`)."""
+from repro.registry.cache import CacheStats, PackCache
+from repro.registry.registry import ModelRegistry, TenantState
+
+__all__ = ["CacheStats", "ModelRegistry", "PackCache", "TenantState"]

@@ -1,0 +1,181 @@
+"""PackCache — VMEM-aware resident set of packed tables, by traffic weight.
+
+The fused kernel pins a whole :class:`~repro.forest.pack.ForestPack` in
+VMEM, so a multi-tenant process cannot keep every (tenant, version,
+precision) combination resident — the cache holds the byte budget the
+accelerator actually has (``ForestPack.table_bytes`` accounting; int8
+tables pack ~4x the fields of fp32, which is the densification lever) and
+evicts the *least-trafficked* pack when a load would overflow it.
+
+Eviction is safe by construction: dropping a cache entry only releases the
+cache's reference — any replica holding the pack for an in-flight dispatch
+keeps its own reference until harvest, and an evicted pack reloads lazily
+from its registry artifact on the next request that needs it (a miss, not
+an error).
+
+Traffic weighting is an exponentially-decayed hit counter: every hit adds
+1 to the entry's weight, every *miss* (a load event — the only moment
+eviction can happen) decays all weights by ``decay``, so a tenant that
+went quiet an hour ago cannot pin tables a currently-hot tenant needs.
+Two refinements keep the pure-LFU failure modes out:
+
+* a fresh entry is seeded at the *mean* resident weight, not 1.0 — else a
+  newly-published version's bucket is always the eviction minimum and a
+  stale heavyweight can thrash it in and out of residency forever;
+* eviction prefers **stale versions** — buckets whose version is neither
+  live nor canary for their tenant (a hot-swap or promote demoted them) —
+  over live buckets, whatever their historical weight.  The old version's
+  tables are exactly what a swap should release first.
+
+Per-device placement rides the same entries: :meth:`device_pack` lazily
+``jax.device_put``\\ s one committed copy per replica device and drops the
+copies with the entry at eviction.  Replicas are symmetric (every device
+holds the same resident set), so the budget models ONE device's VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.hits + self.misses)
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+
+
+@dataclasses.dataclass
+class _Entry:
+    pack: object
+    nbytes: int
+    weight: float = 1.0
+    # device-index -> committed replica copy (dropped with the entry)
+    device_copies: dict = dataclasses.field(default_factory=dict)
+
+
+class PackCache:
+    """Budgeted (tenant, version, precision) -> ForestPack resident set.
+
+    registry:      the :class:`~repro.registry.registry.ModelRegistry`
+                   artifacts reload from on a miss
+    budget_bytes:  the VMEM byte budget packed tables may occupy (per
+                   device — replicas hold symmetric resident sets)
+    decay:         per-miss multiplicative decay of every entry's traffic
+                   weight (1.0 = pure hit counts, no recency)
+    """
+
+    def __init__(self, registry, budget_bytes: int, *, decay: float = 0.97):
+        if budget_bytes < 1:
+            raise ValueError("budget_bytes must be positive")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.registry = registry
+        self.budget_bytes = int(budget_bytes)
+        self.decay = float(decay)
+        self._entries: dict[tuple, _Entry] = {}
+        self.stats = CacheStats()
+        self.peak_bytes = 0
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def bytes_used(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def keys(self) -> list[tuple]:
+        return list(self._entries)
+
+    def weight_of(self, tenant: str, version: int, precision: str) -> float:
+        return self._entries[(tenant, int(version), precision)].weight
+
+    # -- the lookup path ---------------------------------------------------
+    def get(self, tenant: str, version: int, precision: str = "fp32"):
+        """The resident pack for one bucket, loading (and evicting) on a
+        miss.  The returned pack is host/default-device; replicas use
+        :meth:`device_pack` for committed per-device copies."""
+        key = (tenant, int(version), precision)
+        entry = self._entries.get(key)
+        if entry is not None:
+            entry.weight += 1.0
+            self.stats.hits += 1
+            return entry.pack
+        self.stats.misses += 1
+        pack, _ = self.registry.load(tenant, version)
+        if pack.precision != precision:
+            # the artifact's dtype is the publisher's choice; the serving
+            # bucket's dtype is the request's — repack on the way in
+            pack = pack.astype(precision)
+        nbytes = pack.table_bytes
+        if nbytes > self.budget_bytes:
+            raise ValueError(
+                f"pack ({tenant!r}, v{version}, {precision}) needs "
+                f"{nbytes} bytes but the whole cache budget is "
+                f"{self.budget_bytes} — raise the budget or publish at a "
+                "denser precision (int8 tables are ~4x smaller than fp32)")
+        for e in self._entries.values():
+            e.weight *= self.decay
+        self._evict_down_to(self.budget_bytes - nbytes)
+        # seed at the mean resident weight: the newcomer competes fairly
+        # instead of being the guaranteed eviction minimum (weight 1.0 vs
+        # incumbents' accumulated hit counts would thrash every
+        # newly-published version straight back out)
+        seed = 1.0
+        if self._entries:
+            seed = (sum(e.weight for e in self._entries.values())
+                    / len(self._entries))
+        self._entries[key] = _Entry(pack, nbytes, weight=seed)
+        self.peak_bytes = max(self.peak_bytes, self.bytes_used)
+        return pack
+
+    def device_pack(self, tenant: str, version: int, precision: str,
+                    index: int, device):
+        """One replica's committed copy of the bucket's pack (placed on
+        first use, cached on the entry, dropped at eviction)."""
+        import jax
+        pack = self.get(tenant, version, precision)
+        entry = self._entries[(tenant, int(version), precision)]
+        copy = entry.device_copies.get(index)
+        if copy is None:
+            copy = entry.device_copies[index] = jax.device_put(pack, device)
+        return copy
+
+    def _stale(self, key: tuple) -> bool:
+        """Is this bucket's version demoted — neither live nor canary for
+        its tenant?  Stale versions are the first eviction candidates: a
+        hot-swap's whole point is releasing the old version's tables, and
+        their historical traffic weight must not pin them."""
+        tenant, version, _ = key
+        try:
+            st = self.registry._state(tenant)
+        except ValueError:
+            return True                      # tenant gone entirely
+        return version != st.live and version != st.canary_version
+
+    def _evict_down_to(self, limit: int) -> None:
+        """Drop entries until ``bytes_used <= limit``: stale versions
+        first, then lowest traffic weight (ties broken by insertion
+        order: oldest goes first)."""
+        while self._entries and self.bytes_used > limit:
+            key = min(self._entries,
+                      key=lambda k: (not self._stale(k),
+                                     self._entries[k].weight))
+            del self._entries[key]
+            self.stats.evictions += 1
+
+    def evict(self, tenant: str, version: int, precision: str) -> bool:
+        """Explicitly drop one bucket (e.g. a rolled-back version)."""
+        return self._entries.pop((tenant, int(version), precision),
+                                 None) is not None
+
+    def summary(self) -> str:
+        return (f"{len(self._entries)} packs, {self.bytes_used}/"
+                f"{self.budget_bytes} B (peak {self.peak_bytes}), "
+                f"hit rate {self.stats.hit_rate:.3f} "
+                f"({self.stats.hits}h/{self.stats.misses}m/"
+                f"{self.stats.evictions}e)")

@@ -62,6 +62,9 @@ class Pending:
     logits: object               # [span, C] device array (not yet ready)
     hops: object                 # [span] device array | None
     dispatched_at: float = 0.0
+    # the (model, version) registry bucket this call serves (None = the
+    # single built-in model)
+    bucket: tuple | None = None
 
 
 class DeviceDispatcher:
@@ -113,6 +116,17 @@ class DeviceDispatcher:
         self.span = n_slots // self.n_devices
         self._fns = [self.decode_factory(i, d, self.span)
                      for i, d in enumerate(self.devices)]
+        from repro.serve.scheduler import _takes_bucket
+        self._fn_buckets = [_takes_bucket(fn) for fn in self._fns]
+
+    @property
+    def bucket_aware(self) -> bool:
+        """Can the replicas route (model, version) buckets?  True only
+        when EVERY replica decode fn takes a ``bucket`` keyword."""
+        if self._fns is None:
+            raise ValueError("dispatcher not bound; construct the batcher "
+                             "(or call bind) first")
+        return all(self._fn_buckets)
 
     def device_of(self, lane: int) -> int:
         """Which device serves a global lane index."""
@@ -127,13 +141,15 @@ class DeviceDispatcher:
 
     # -- the dispatch/harvest cycle ---------------------------------------
     def dispatch(self, tokens: np.ndarray, lengths: np.ndarray,
-                 policy: FogPolicy, lanes) -> list[Pending]:
-        """Enqueue one precision group's lanes, without blocking.
+                 policy: FogPolicy, lanes,
+                 bucket: tuple | None = None) -> list[Pending]:
+        """Enqueue one bucket's lanes, without blocking.
 
         ``policy`` carries the group's static knobs and the FULL-batch
         per-lane vectors; ``lanes`` are the global lane indices belonging
-        to this group.  Every device whose span intersects ``lanes`` gets
-        one decode call over its whole span.
+        to this group; ``bucket`` is the (model, version) registry bucket
+        (None = the single built-in model).  Every device whose span
+        intersects ``lanes`` gets one decode call over its whole span.
         """
         if self._fns is None:
             self.bind(len(tokens))
@@ -151,10 +167,20 @@ class DeviceDispatcher:
                 hop_budget=(bud[sl] if bud is not None and bud.ndim
                             else policy.hop_budget))
             mine = lanes[(lanes >= lo) & (lanes < hi)]
-            logits, hops = self._fns[d](tokens[sl], lengths[sl], span_pol)
+            if self._fn_buckets[d]:
+                logits, hops = self._fns[d](tokens[sl], lengths[sl],
+                                            span_pol, bucket=bucket)
+            elif bucket is not None:
+                raise ValueError(
+                    f"device {d}'s decode replica is not bucket-aware "
+                    "(no bucket= parameter) but the batch carries "
+                    f"registry bucket {bucket!r}")
+            else:
+                logits, hops = self._fns[d](tokens[sl], lengths[sl],
+                                            span_pol)
             p = Pending(device=d, precision=policy.precision, lanes=mine,
                         local=mine - lo, logits=logits, hops=hops,
-                        dispatched_at=time.perf_counter())
+                        dispatched_at=time.perf_counter(), bucket=bucket)
             self._queues[d].append(p)
             out.append(p)
         return out
@@ -236,20 +262,41 @@ class ForestReplicaServer:
     decode "logits" are the forest's class probabilities and ``hops`` is
     the paper's per-example energy quantity, so the whole mixed-QoS /
     governor / admission-control machinery applies unchanged.
+
+    Multi-tenant mode: pass ``registry=`` (a
+    :class:`~repro.registry.ModelRegistry`) and ``cache=`` (a
+    :class:`~repro.registry.PackCache`) and the replicas become
+    bucket-aware — a dispatch carrying ``bucket=(tenant, version)``
+    evaluates that tenant version's pack, fetched through the VMEM-
+    budgeted cache (per-device committed copies, traffic-weighted
+    eviction, lazy reload from artifact).  ``gc`` may then be ``None``:
+    bucketless dispatches require a built-in model and raise without one.
     """
 
     def __init__(self, gc, n_features: int, *, backend: str = "fused",
-                 precisions: Sequence[str] = ("fp32",), seed: int = 0):
+                 precisions: Sequence[str] = ("fp32",), seed: int = 0,
+                 registry=None, cache=None):
         from repro.forest.pack import ForestPack
-        if isinstance(gc, ForestPack):
-            self._packs = {gc.precision: gc}
-            make = gc.astype
-        else:
+        if (registry is None) != (cache is None):
+            raise ValueError(
+                "registry mode needs BOTH registry= and cache= (the cache "
+                "enforces the VMEM byte budget the replicas load through)")
+        self.registry = registry
+        self.cache = cache
+        if gc is None:
+            if registry is None:
+                raise ValueError(
+                    "ForestReplicaServer needs a grove collection/pack, "
+                    "or registry= + cache= for multi-tenant serving")
             self._packs = {}
-            make = lambda p: ForestPack.from_groves(gc, p)  # noqa: E731
-        for p in precisions:
-            if p not in self._packs:
-                self._packs[p] = make(p)
+        elif isinstance(gc, ForestPack):
+            self._packs = {gc.precision: gc}
+            for p in precisions:
+                if p not in self._packs:
+                    self._packs[p] = gc.astype(p)
+        else:
+            self._packs = {p: ForestPack.from_groves(gc, p)
+                           for p in precisions}
         self.default_precision = tuple(precisions)[0]
         self.n_features = int(n_features)
         self.backend = backend
@@ -257,22 +304,44 @@ class ForestReplicaServer:
         self._buffers: dict[int, np.ndarray] = {}
         self._span: int | None = None
         self._steps: dict[int, int] = {}
-        self._energy_models: dict[str, object] = {}
+        self._energy_models: dict[tuple, object] = {}
+        self._devices: dict[int, object] = {}
 
     @property
     def n_groves(self) -> int:
+        if not self._packs:
+            raise ValueError("registry-mode server has no built-in model; "
+                             "ask a bucket's pack for its grove count")
         return self._packs[self.default_precision].n_groves
 
-    def energy_model(self, precision: str | None = None):
+    def energy_model(self, precision: str | None = None,
+                     tenant: str | None = None,
+                     version: int | None = None):
         """The pricing :class:`~repro.core.energy.EnergyModel` for one
-        precision's packed tables (cached)."""
+        precision's packed tables (cached).  In registry mode pass
+        ``tenant`` (and optionally ``version``, default live) to price
+        that tenant's topology — tenants' forests need not match."""
         from repro.core.energy import EnergyModel
         precision = precision or self.default_precision
-        m = self._energy_models.get(precision)
+        if tenant is not None:
+            if self.registry is None:
+                raise ValueError("tenant-keyed energy models need a "
+                                 "registry-mode server")
+            if version is None:
+                version = self.registry.live_version(tenant)
+            key = (precision, tenant, int(version))
+            m = self._energy_models.get(key)
+            if m is None:
+                pack = self.cache.get(tenant, version, precision)
+                m = EnergyModel.from_pack(pack, self.n_features)
+                self._energy_models[key] = m
+            return m
+        key = (precision, None, None)
+        m = self._energy_models.get(key)
         if m is None:
             m = EnergyModel.from_pack(self._packs[precision],
                                       self.n_features)
-            self._energy_models[precision] = m
+            self._energy_models[key] = m
         return m
 
     def factory(self, index: int, device, span: int):
@@ -280,15 +349,15 @@ class ForestReplicaServer:
         self._span = span
         buf = np.zeros((span, self.n_features), np.float32)
         self._buffers[index] = buf
+        self._devices[index] = device
         packs = {p: jax.device_put(pack, device)
                  for p, pack in self._packs.items()}
         key = jax.device_put(jax.random.key(self.seed + index), device)
         self._steps[index] = 0
-        n_groves = self.n_groves
         backend = self.backend
         block_b = min(256, span)
 
-        def decode(tokens, lengths, policy):
+        def decode(tokens, lengths, policy, bucket=None):
             # tokens/lengths are the slot-model plumbing; the forest serves
             # the span's feature rows.  A fresh start-grove draw per step
             # keeps the rotation-start randomization honest under
@@ -303,9 +372,27 @@ class ForestReplicaServer:
                    if policy.hop_budget is not None
                    else np.full((span,), NO_BUDGET, np.int32))
             prec = policy.precision or self.default_precision
+            if bucket is not None:
+                # registry bucket: this replica's committed copy of the
+                # (tenant, version) pack at the group's precision, through
+                # the VMEM-budgeted cache (lazy reload after eviction)
+                if self.cache is None:
+                    raise ValueError(
+                        f"replica {index} got bucket {bucket!r} but the "
+                        "server has no registry/cache (single-model mode)")
+                tenant, version = bucket
+                pack = self.cache.device_pack(tenant, version, prec,
+                                              index, device)
+            elif packs:
+                pack = packs[prec]
+            else:
+                raise ValueError(
+                    "registry-mode server got a bucketless dispatch; "
+                    "requests must carry Request.model (no built-in "
+                    "default model was constructed)")
             x = jax.device_put(buf, device)
-            return _serve_eval(packs[prec], x, key, np.int32(step),
-                               thr, bud, max_hops=n_groves,
+            return _serve_eval(pack, x, key, np.int32(step),
+                               thr, bud, max_hops=pack.n_groves,
                                backend=backend, block_b=block_b)
 
         return decode

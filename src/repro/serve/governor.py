@@ -341,6 +341,58 @@ class EnergyGovernor:
         return s
 
 
+class TenantLedger:
+    """Per-tenant energy budget ledger: one independent
+    :class:`EnergyGovernor` per tenant behind a single serving process.
+
+    Each tenant's governor walks its own ladder under its own nJ budget —
+    one tenant's expensive traffic steps *that tenant's* rung down and
+    leaves every other tenant's estimate untouched (the batcher groups hop
+    telemetry by tenant before feeding it here).  The optional ``default``
+    governor serves requests whose tenant has no ledger entry; without
+    one, unledgered tenants serve the batcher's default policy unpriced.
+
+        ledger = TenantLedger()
+        ledger.add("alpha", EnergyGovernor(ladder_a, 2.0, model=model_a))
+        ledger.add("beta",  EnergyGovernor(ladder_b, 0.8, model=model_b))
+        batcher = ContinuousBatcher(..., governor=ledger, registry=reg)
+    """
+
+    def __init__(self, default: EnergyGovernor | None = None):
+        if default is not None and default.model is None:
+            raise ValueError(
+                "the ledger's default governor needs an energy model to "
+                "price hop telemetry")
+        self._governors: dict[str, EnergyGovernor] = {}
+        self.default = default
+
+    def add(self, tenant: str, governor: EnergyGovernor) -> EnergyGovernor:
+        """Install one tenant's governor (replacing any previous one)."""
+        if governor.model is None:
+            raise ValueError(
+                f"tenant {tenant!r}: a ledgered governor needs an energy "
+                "model to price hop telemetry; construct "
+                "EnergyGovernor(..., model=...)")
+        self._governors[tenant] = governor
+        return governor
+
+    def governor_for(self, tenant: str | None) -> EnergyGovernor | None:
+        """The governor billing ``tenant`` (the default when unledgered)."""
+        if tenant is not None and tenant in self._governors:
+            return self._governors[tenant]
+        return self.default
+
+    def tenants(self) -> list[str]:
+        return sorted(self._governors)
+
+    def items(self):
+        return sorted(self._governors.items())
+
+    def summary(self) -> str:
+        lines = [f"{t}: {g.summary()}" for t, g in self.items()]
+        return "\n".join(lines) if lines else "no ledgered tenants"
+
+
 def default_ladder(base: FogPolicy, model=None,
                    budget_nj: float | None = None) -> list[FogPolicy]:
     """An uncalibrated quality-descending ladder when no frontier exists:

@@ -78,17 +78,33 @@ class Request:
     # per-request energy contract: resolved at submit() into a policy via
     # the batcher's governor (mutually exclusive with an explicit policy)
     energy_budget_nj: float | None = None
+    # registry tenant this request evaluates against (None = the batcher's
+    # single built-in model, the pre-registry behavior)
+    model: str | None = None
+    # QoS tier label for per-tier shed/done/energy telemetry (ServeStats
+    # breaks out counters per distinct label)
+    tier: str = "default"
+    # the registry version serving this request: resolved ONCE at slot
+    # assignment (registry.route) and pinned, so a hot-swap mid-decode
+    # never migrates an in-flight request between versions.  Pre-set it to
+    # bypass routing.
+    version: int | None = None
     # filled by the scheduler:
     generated: list = dataclasses.field(default_factory=list)
     hops: list = dataclasses.field(default_factory=list)
     done: bool = False
     # set by admission control when the request is dropped under overload
     shed: bool = False
-    # wall-clock stamps for latency accounting (filled by the load harness
-    # or any caller that wants per-request latency; the batcher itself
-    # never reads them)
+    # wall-clock stamps for latency accounting: submit() stamps t_submit
+    # (shed requests included — the shed tail is part of the latency
+    # story), completion stamps t_done.  Callers may pre-stamp t_submit.
     t_submit: float | None = None
     t_done: float | None = None
+
+    @property
+    def tenant(self) -> str | None:
+        """Alias of ``model`` (the registry/ledger vocabulary)."""
+        return self.model
 
 
 @dataclasses.dataclass
@@ -108,15 +124,60 @@ class ServeStats:
     # admission-control counters (bounded queue)
     n_offered: int = 0
     n_shed: int = 0
+    # per-QoS-tier breakdown: tier label -> {n_done, n_shed, n_events,
+    # total_pj, n_priced}.  Canary judging and gold-tier SLOs need the
+    # split the fleet totals average away.
+    tiers: dict = dataclasses.field(default_factory=dict)
 
-    def update(self, hops, energy_pj=None) -> None:
+    def _tier(self, tier: str) -> dict:
+        t = self.tiers.get(tier)
+        if t is None:
+            t = self.tiers[tier] = {"n_done": 0, "n_shed": 0, "n_events": 0,
+                                    "total_pj": 0.0, "n_priced": 0}
+        return t
+
+    def note_shed(self, tier: str = "default") -> None:
+        self.n_shed += 1
+        self._tier(tier)["n_shed"] += 1
+
+    def note_done(self, tier: str = "default") -> None:
+        self._tier(tier)["n_done"] += 1
+
+    def update(self, hops, energy_pj=None, tiers=None) -> None:
+        """Fold one batch of decoded events in.  ``energy_pj`` may carry
+        NaN for events nothing could price (a ledgered batch with an
+        unledgered tenant) — only finite entries feed the energy totals.
+        ``tiers`` optionally labels each event with its request's QoS tier
+        for the per-tier breakdown."""
         h = np.asarray(hops)
         self.total_hops += int(h.sum())
         self.n_events += int(h.size)
+        priced = None
         if energy_pj is not None:
-            self.total_pj += float(np.asarray(energy_pj, np.float64).sum())
-            self.n_priced += int(h.size)
-            self.has_energy = True
+            e = np.asarray(energy_pj, np.float64)
+            priced = np.isfinite(e)
+            self.total_pj += float(e[priced].sum())
+            self.n_priced += int(priced.sum())
+            if priced.any():
+                self.has_energy = True
+        if tiers is not None:
+            e = (np.asarray(energy_pj, np.float64)
+                 if energy_pj is not None else None)
+            for i, tier in enumerate(tiers):
+                t = self._tier(tier)
+                t["n_events"] += 1
+                if priced is not None and priced[i]:
+                    t["total_pj"] += float(e[i])
+                    t["n_priced"] += 1
+
+    def tier_summary(self) -> dict:
+        """{tier: {n_done, n_shed, n_events, mean_energy_nj}} — the
+        per-tier view the fleet means hide."""
+        return {tier: {"n_done": t["n_done"], "n_shed": t["n_shed"],
+                       "n_events": t["n_events"],
+                       "mean_energy_nj": t["total_pj"] * 1e-3
+                       / max(1, t["n_priced"])}
+                for tier, t in sorted(self.tiers.items())}
 
     def reset(self) -> None:
         self.total_hops = 0
@@ -126,6 +187,7 @@ class ServeStats:
         self.n_priced = 0
         self.n_offered = 0
         self.n_shed = 0
+        self.tiers = {}
 
     @property
     def mean_hops(self) -> float:
@@ -191,6 +253,18 @@ def _takes_policy(decode_fn: Callable) -> bool:
     return _policy_mode(decode_fn) != "legacy"
 
 
+def _takes_bucket(decode_fn: Callable) -> bool:
+    """Does decode_fn accept a ``bucket`` keyword ((model, version)
+    routing for registry-backed multi-tenant serving)?"""
+    try:
+        params = inspect.signature(decode_fn).parameters
+    except (TypeError, ValueError):
+        return False
+    p = params.get("bucket")
+    return p is not None and p.kind in (p.KEYWORD_ONLY,
+                                        p.POSITIONAL_OR_KEYWORD)
+
+
 class ContinuousBatcher:
     """Drives decode_fn over a fixed slot batch, refilling as lanes finish.
 
@@ -220,7 +294,8 @@ class ContinuousBatcher:
                  prefill_fn: Callable, eos_id: int = 1,
                  meter=None, default_policy: FogPolicy | None = None,
                  governor=None, dispatcher=None,
-                 max_queue: int | None = None, shed_policy: str = "reject"):
+                 max_queue: int | None = None, shed_policy: str = "reject",
+                 registry=None):
         self.slots = [SlotState() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
         self.decode_fn = decode_fn
@@ -233,8 +308,15 @@ class ContinuousBatcher:
             raise ValueError(
                 "default_policy must carry scalar knobs; the batcher "
                 "assembles the per-lane vectors itself each step")
+        # ``governor`` accepts either one EnergyGovernor (fleet-wide SLO)
+        # or a TenantLedger (per-tenant SLOs, one governor per tenant)
+        self.ledger = None
+        if governor is not None and hasattr(governor, "governor_for"):
+            self.ledger = governor
+            governor = None
         self.governor = governor
         self.dispatcher = dispatcher
+        self.registry = registry
         if dispatcher is not None:
             if decode_fn is not None:
                 raise ValueError(
@@ -277,6 +359,18 @@ class ContinuousBatcher:
                     "a governor needs a policy-aware decode_fn(tokens, "
                     "lengths, policy) — a legacy two-arg decode_fn would "
                     "never serve the governor's rung policy")
+        if self.ledger is not None and not self._policy_aware:
+            raise ValueError(
+                "a tenant ledger needs a policy-aware decode path — a "
+                "legacy two-arg decode_fn would never serve any tenant's "
+                "rung policy")
+        # can this execution plane route (model, version) buckets?  The
+        # dispatcher introspects its replicas at bind; a plain decode_fn
+        # must take a ``bucket`` keyword itself.
+        if dispatcher is not None:
+            self._bucket_aware = dispatcher.bucket_aware
+        else:
+            self._bucket_aware = _takes_bucket(decode_fn)
         # fleet-level FoG accounting: hop counts (and, with a governor's
         # energy model, modeled pJ) of every decoded token
         self.stats = ServeStats()
@@ -310,18 +404,39 @@ class ContinuousBatcher:
         queue).  Invalid requests still raise — shedding is a load signal,
         not an error-swallowing path.
         """
+        # stamp at the door: shed requests carry a submit time too (the
+        # shed tail is part of the latency story), admitted requests keep
+        # any pre-stamp the harness set
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        if req.model is not None:
+            if self.registry is None and req.version is None:
+                raise ValueError(
+                    f"request {req.rid}: Request.model={req.model!r} needs "
+                    "a registry to resolve the serving version (construct "
+                    "ContinuousBatcher(..., registry=ModelRegistry(dir)), "
+                    "or pre-set Request.version)")
+            if not self._bucket_aware:
+                raise ValueError(
+                    f"request {req.rid}: Request.model={req.model!r} needs "
+                    "a bucket-aware decode path (a decode_fn/replica "
+                    "taking bucket=) to route (model, version) buckets")
         if req.energy_budget_nj is not None:
             if req.policy is not None:
                 raise ValueError(
                     f"request {req.rid}: pass either policy or "
                     "energy_budget_nj, not both (the budget is resolved "
                     "into a policy)")
-            if self.governor is None:
+            gov = self.governor
+            if gov is None and self.ledger is not None:
+                gov = self.ledger.governor_for(req.tenant)
+            if gov is None:
                 raise ValueError(
                     f"request {req.rid}: energy_budget_nj needs a "
                     "governor (construct ContinuousBatcher(..., "
-                    "governor=EnergyGovernor(frontier, ...)))")
-            pol = self.governor.policy_for_budget(req.energy_budget_nj)
+                    "governor=EnergyGovernor(frontier, ...)) or ledger "
+                    "an EnergyGovernor for this request's tenant)")
+            pol = gov.policy_for_budget(req.energy_budget_nj)
             # the per-request contract is the per-lane/bucketed knobs only
             # (threshold, hop budget, precision); any static knobs the
             # ladder rung inherited from the fleet default (backend,
@@ -360,12 +475,18 @@ class ContinuousBatcher:
     def _shed(self, req: Request) -> None:
         req.shed = True
         self.shed_requests.append(req)
-        self.stats.n_shed += 1
+        self.stats.note_shed(req.tier)
 
     def _refill(self) -> None:
         for i, slot in enumerate(self.slots):
             if slot.request is None and self.queue:
                 req = self.queue.popleft()
+                if (req.model is not None and req.version is None
+                        and self.registry is not None):
+                    # resolve the serving version HERE, once: the request
+                    # rides this version to completion even if a publish
+                    # hot-swaps the tenant's live version mid-decode
+                    req.version = self.registry.route(req.model, req.rid)
                 slot.request = req
                 slot.length = self.prefill_fn(i, req.prompt)
                 self._tokens[i] = req.prompt[-1]
@@ -375,32 +496,57 @@ class ContinuousBatcher:
     def active(self) -> int:
         return sum(1 for s in self.slots if s.request is not None)
 
+    def _tenant_rung(self, req: Request) -> FogPolicy | None:
+        """The ledgered rung policy billing this request's tenant (None
+        when no ledger, or the ledger knows neither tenant nor default)."""
+        if self.ledger is None:
+            return None
+        gov = self.ledger.governor_for(req.tenant)
+        return None if gov is None else gov.current
+
     def lane_policy(self) -> FogPolicy:
         """The current batch policy: slot policies stacked into per-lane
-        threshold / hop-budget vectors (empty lanes get the default — the
-        governor's active ladder rung when one is installed)."""
+        threshold / hop-budget vectors.  A slot without its own policy gets
+        its tenant's ledgered rung (ledger mode), else the default — the
+        fleet governor's active ladder rung when one is installed."""
         default = (self.governor.current if self.governor is not None
                    else self.default_policy)
-        return assemble(
-            [s.request.policy if s.request is not None else None
-             for s in self.slots],
-            default=default)
+        pols: list[FogPolicy | None] = []
+        for s in self.slots:
+            if s.request is None or s.request.policy is not None:
+                pols.append(s.request.policy if s.request else None)
+            else:
+                pols.append(self._tenant_rung(s.request))
+        return assemble(pols, default=default)
 
-    def _precision_groups(self) -> dict:
-        """Slot indices keyed by requested precision (None = the default
-        program).  One decode dispatch per key — see the module docstring."""
-        groups: dict[str | None, list[int]] = {}
+    def _bucket_groups(self) -> dict:
+        """Slot indices keyed by ``(model, version, precision)`` — the
+        serving bucket.  One decode dispatch per key; the legacy
+        single-model batch degenerates to ``(None, None, precision)`` keys
+        (precision None = the default program), so a homogeneous batch
+        still costs exactly one dispatch."""
+        groups: dict[tuple, list[int]] = {}
         for i, s in enumerate(self.slots):
-            p = (s.request.policy.precision
-                 if s.request is not None and s.request.policy is not None
-                 else None)
-            groups.setdefault(p, []).append(i)
-        none_idxs = groups.get(None)
+            if s.request is None:
+                key = (None, None, None)
+            else:
+                req = s.request
+                prec = (req.policy.precision if req.policy is not None
+                        else None)
+                if prec is None:
+                    rung = self._tenant_rung(req)
+                    if rung is not None:
+                        prec = rung.precision
+                key = (req.model, req.version, prec)
+            groups.setdefault(key, []).append(i)
+        none_key = (None, None, None)
+        none_idxs = groups.get(none_key)
         if none_idxs is not None and len(groups) > 1 and all(
                 self.slots[i].request is None for i in none_idxs):
-            # lanes in the None group are all empty: don't spend a dispatch
-            # on them, fold into an arbitrary real group (outputs discarded)
-            groups.pop(None)
+            # lanes in the default group are all empty: don't spend a
+            # dispatch on them, fold into an arbitrary real group (outputs
+            # discarded)
+            groups.pop(none_key)
             next(iter(groups.values())).extend(none_idxs)
         return groups
 
@@ -413,23 +559,28 @@ class ContinuousBatcher:
         tokens = self._tokens
         lengths = self._lengths
         if self._policy_mode == "dispatch":
-            # data-parallel plane: enqueue every precision group without
-            # blocking (per-device async dispatch), then harvest everything
-            # behind ONE deferred block_until_ready
+            # data-parallel plane: enqueue every (model, version,
+            # precision) bucket without blocking (per-device async
+            # dispatch), then harvest everything behind ONE deferred
+            # block_until_ready
             base = self.lane_policy()
-            for prec, idxs in self._precision_groups().items():
+            for (model, version, prec), idxs in self._bucket_groups().items():
                 pol = base if prec is None else base.replace(precision=prec)
-                self.dispatcher.dispatch(tokens, lengths, pol, idxs)
+                bucket = None if model is None else (model, version)
+                self.dispatcher.dispatch(tokens, lengths, pol, idxs,
+                                         bucket=bucket)
             logits, hops, self.last_dispatches = self.dispatcher.harvest(
                 len(self.slots))
         elif self._policy_aware:
             base = self.lane_policy()
-            groups = self._precision_groups()
+            groups = self._bucket_groups()
             n = len(self.slots)
             logits, hops = None, None
-            for prec, idxs in groups.items():
+            for (model, version, prec), idxs in groups.items():
                 pol = base if prec is None else base.replace(precision=prec)
-                lg, hp = self._call_decode(tokens, lengths, pol)
+                bucket = None if model is None else (model, version)
+                lg, hp = self._call_decode(tokens, lengths, pol,
+                                           bucket=bucket)
                 if len(groups) == 1:
                     logits, hops = lg, hp
                     break
@@ -470,14 +621,13 @@ class ContinuousBatcher:
             if hops_l is not None:
                 h = hops_l[i]
                 req.hops.append(h)
-                step_hops.append(
-                    (h, req.policy.precision if req.policy is not None
-                     else None, i))
+                step_hops.append((h, req, i))
             s.length += 1
             if tok == self.eos_id or len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 if req.t_submit is not None:
                     req.t_done = now
+                self.stats.note_done(req.tier)
                 self.completed.append(req)
                 self.slots[i] = SlotState()
                 self._tokens[i] = 0
@@ -486,48 +636,93 @@ class ContinuousBatcher:
             self._account(step_hops)
         return self.active
 
-    def _call_decode(self, tokens, lengths, pol):
+    def _call_decode(self, tokens, lengths, pol, bucket=None):
         """One decode dispatch, honoring the fn's policy calling convention
-        (positional third arg vs KEYWORD_ONLY ``policy``)."""
+        (positional third arg vs KEYWORD_ONLY ``policy``) and passing the
+        (model, version) bucket only to bucket-aware fns."""
+        kw = {}
+        if bucket is not None:
+            kw["bucket"] = bucket
         if self._policy_mode == "keyword":
             return self.decode_fn(jnp.asarray(tokens), jnp.asarray(lengths),
-                                  policy=pol)
-        return self.decode_fn(jnp.asarray(tokens), jnp.asarray(lengths), pol)
+                                  policy=pol, **kw)
+        return self.decode_fn(jnp.asarray(tokens), jnp.asarray(lengths),
+                              pol, **kw)
 
     def _account(self, step_hops: list) -> None:
-        """Fold one step's active-lane (hops, request precision, lane)
-        tuples into the fleet telemetry and let the governor react (its
-        rolling estimate + ladder walk).  Each lane is priced at ITS OWN
-        effective precision — the request policy's, falling back to the
-        governor's active rung — so mixed-precision batches are billed at
-        the byte widths they actually dispatched and an int8 step-down
-        shows up as a measured saving.  On the data-parallel plane each
-        sample is additionally labeled with its serving device so the
-        governor can keep per-device rolling estimates."""
+        """Fold one step's active-lane (hops, request, lane) tuples into
+        the fleet telemetry and let the governance plane react.  Each lane
+        is priced at ITS OWN effective precision — the request policy's,
+        falling back to its billing governor's active rung — so
+        mixed-precision batches are billed at the byte widths they
+        actually dispatched and an int8 step-down shows up as a measured
+        saving.  With a TenantLedger the telemetry is grouped by tenant
+        first: each tenant's governor sees only its own traffic, so one
+        tenant's expensive burst can never walk another tenant's ladder.
+        On the data-parallel plane each sample is additionally labeled
+        with its serving device for per-device rolling estimates; with a
+        registry, each (tenant, version) group also feeds its per-version
+        ServeStats (the canary-judging evidence)."""
         hops = np.asarray([h for h, _, _ in step_hops])
+        tiers = [req.tier for _, req, _ in step_hops]
+        lanes = [lane for _, _, lane in step_hops]
+        devices = (self.dispatcher.lane_devices(lanes)
+                   if self.dispatcher is not None else None)
         energy_pj = None
-        if self.governor is not None:
-            # one lane_pj call per distinct precision in the step (usually
-            # one), not per lane — this runs per decoded token
-            rung_prec = self.governor.current.precision
+
+        def price_into(out, gov, entries):
+            """Price ``entries`` (index, req) with one governor, grouping
+            by effective precision (one lane_pj call per precision)."""
+            rung_prec = gov.current.precision
             groups: dict[str | None, list[int]] = {}
-            for i, (_, prec, _) in enumerate(step_hops):
+            for i, req in entries:
+                prec = (req.policy.precision if req is not None
+                        and req.policy is not None else None)
                 groups.setdefault(
                     prec if prec is not None else rung_prec, []).append(i)
-            energy_pj = np.empty(len(step_hops), np.float64)
             for prec, idxs in groups.items():
-                energy_pj[idxs] = np.asarray(
-                    self.governor.model_for(prec).lane_pj(hops[idxs]))
-        self.stats.update(hops, energy_pj)
-        if self._meter is not None:      # deprecated shim path
-            self._meter.update(hops)
+                out[idxs] = np.asarray(
+                    gov.model_for(prec).lane_pj(hops[idxs]))
+
         if self.governor is not None:
-            devices = None
-            if self.dispatcher is not None:
-                devices = self.dispatcher.lane_devices(
-                    [lane for _, _, lane in step_hops])
+            energy_pj = np.empty(len(step_hops), np.float64)
+            price_into(energy_pj, self.governor,
+                       [(i, req) for i, (_, req, _) in enumerate(step_hops)])
             self.governor.observe(energy_pj=energy_pj, devices=devices)
             self.governor.step()
+        elif self.ledger is not None:
+            # per-tenant governance: group by tenant, price each group at
+            # its own governor's models, observe/step each independently.
+            # NaN marks lanes no governor bills (unledgered tenant, no
+            # default) — counted as events, excluded from energy means.
+            energy_pj = np.full(len(step_hops), np.nan)
+            by_tenant: dict[str | None, list[int]] = {}
+            for i, (_, req, _) in enumerate(step_hops):
+                by_tenant.setdefault(req.tenant, []).append(i)
+            for tenant, idxs in by_tenant.items():
+                gov = self.ledger.governor_for(tenant)
+                if gov is None:
+                    continue
+                price_into(energy_pj, gov,
+                           [(i, step_hops[i][1]) for i in idxs])
+                gov.observe(energy_pj=energy_pj[idxs],
+                            devices=None if devices is None
+                            else devices[idxs])
+                gov.step()
+        self.stats.update(hops, energy_pj, tiers=tiers)
+        if self._meter is not None:      # deprecated shim path
+            self._meter.update(hops)
+        if self.registry is not None:
+            by_version: dict[tuple, list[int]] = {}
+            for i, (_, req, _) in enumerate(step_hops):
+                if req.model is not None and req.version is not None:
+                    by_version.setdefault(
+                        (req.model, req.version), []).append(i)
+            for (tenant, version), idxs in by_version.items():
+                self.registry.stats_for(tenant, version).update(
+                    hops[idxs],
+                    None if energy_pj is None else energy_pj[idxs],
+                    tiers=[tiers[i] for i in idxs])
 
     def run(self, max_steps: int = 10000) -> list[Request]:
         steps = 0

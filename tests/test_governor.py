@@ -214,3 +214,19 @@ def test_per_device_rolling_estimates():
     assert gov.rolling_nj == pytest.approx(float(pj.mean()) * 1e-3)
     with pytest.raises(ValueError, match="devices"):
         gov.observe(energy_pj=pj, devices=np.asarray([0, 1]))
+
+
+def test_device_estimates_survive_rung_transitions():
+    """The per-device view tracks the DEVICE, not the rung: a step-down
+    resets the fleet EWMA (it estimated the old rung's cost) but must not
+    wipe the per-device skew telemetry."""
+    model = EnergyModel(2, 8, 10, 16)
+    gov = EnergyGovernor([FogPolicy(threshold=0.5), FogPolicy(threshold=0.1)],
+                         budget_nj=0.5, model=model, window=4, warmup=1)
+    pj = np.asarray(model.lane_pj(np.full(4, 8)))
+    gov.observe(energy_pj=pj, devices=np.asarray([0, 0, 1, 1]))
+    gov.step()
+    assert gov.rung == 1 and gov.rolling_nj is None     # fleet EWMA reset
+    summary = gov.device_summary()
+    assert summary[0]["n"] == 2 and summary[1]["n"] == 2  # devices kept
+    assert summary[None]["spread_nj"] == pytest.approx(0.0, abs=1e-12)

@@ -174,6 +174,30 @@ def test_load_rejects_future_and_foreign_artifacts(gc, tmp_path):
         ForestPack.load(foreign)
 
 
+def test_load_rejects_truncated_and_mislabeled_artifacts(gc, tmp_path):
+    """A corrupt artifact must fail with a schema error naming the missing
+    fields (and the required list), never a raw KeyError deep in unpacking;
+    an unknown precision label is equally loud."""
+    pack = ForestPack.from_groves(gc)
+    path = pack.save(tmp_path / "m.npz")
+    with np.load(path) as z:
+        fields = dict(z)
+    truncated = dict(fields)
+    del truncated["leaf"], truncated["thr_scale"]
+    trunc = tmp_path / "trunc.npz"
+    with open(trunc, "wb") as f:
+        np.savez(f, **truncated)
+    with pytest.raises(ValueError, match=r"missing fields.*leaf.*thr_scale"):
+        ForestPack.load(trunc)
+    mislabeled = dict(fields)
+    mislabeled["precision"] = np.str_("fp64")
+    bad = tmp_path / "badprec.npz"
+    with open(bad, "wb") as f:
+        np.savez(f, **mislabeled)
+    with pytest.raises(ValueError, match="supported table dtype"):
+        ForestPack.load(bad)
+
+
 def test_energy_model_reads_packed_bytes():
     """int8 node entries are 5 bytes vs fp32's 8: the energy report must
     fall accordingly (and fp32 must reproduce the original accounting)."""

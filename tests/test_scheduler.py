@@ -476,6 +476,52 @@ def test_admission_validation():
                           shed_policy="drop-newest")
 
 
+def test_shed_requests_stamp_t_submit_and_tier():
+    """Shedding is part of the latency story: a rejected request must still
+    carry its submit timestamp, and the shed must land in its own QoS
+    tier's counters, not just the fleet total."""
+    n = 1
+    b = ContinuousBatcher(n, _mock_decode(n),
+                          lambda slot, prompt: len(prompt), eos_id=-1,
+                          max_queue=2, shed_policy="reject")
+    b.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=1,
+                     tier="std"))
+    b.submit(Request(rid=1, prompt=np.asarray([0]), max_new_tokens=1,
+                     tier="std"))
+    shed = Request(rid=2, prompt=np.asarray([0]), max_new_tokens=1,
+                   tier="bulk")
+    assert not b.submit(shed)
+    assert shed.shed and shed.t_submit is not None
+    done = b.run()
+    assert all(r.t_done is not None and r.t_done >= r.t_submit for r in done)
+    ts = b.stats.tier_summary()
+    assert ts["std"]["n_done"] == 2 and ts["std"]["n_shed"] == 0
+    assert ts["bulk"]["n_shed"] == 1 and ts["bulk"]["n_done"] == 0
+
+
+def test_tier_breakdown_prices_per_tier():
+    """Per-tier energy means: the gold tier's expensive threshold must show
+    up in ITS tier row, not be averaged away into the fleet mean."""
+    n = 2
+    gov = _governor(budget_nj=None)
+    b = ContinuousBatcher(n, _threshold_driven_decode(n),
+                          lambda slot, prompt: len(prompt), eos_id=-1,
+                          governor=gov)
+    b.submit(Request(rid=0, prompt=np.asarray([0]), max_new_tokens=3,
+                     tier="gold", policy=FogPolicy(threshold=0.9)))
+    b.submit(Request(rid=1, prompt=np.asarray([0]), max_new_tokens=3,
+                     tier="bulk", policy=FogPolicy(threshold=0.1)))
+    b.run()
+    ts = b.stats.tier_summary()
+    assert set(ts) == {"gold", "bulk"}
+    for tier in ("gold", "bulk"):
+        assert ts[tier]["n_done"] == 1 and ts[tier]["n_events"] == 3
+    assert ts["gold"]["mean_energy_nj"] > ts["bulk"]["mean_energy_nj"] > 0
+    # the fleet mean sits between the tier means
+    fleet = b.stats.mean_energy_nj
+    assert ts["bulk"]["mean_energy_nj"] < fleet < ts["gold"]["mean_energy_nj"]
+
+
 def test_mean_energy_nj_divides_by_priced_events_only():
     """Mixing priced and unpriced updates must not deflate the mean: 4
     events at 2000 pJ plus 4 hops-only events is 2 nJ/event, not 1."""

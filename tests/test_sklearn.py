@@ -193,6 +193,22 @@ def test_load_rejects_bare_pack_artifacts(fitted, tmp_path):
         FogClassifier.load(path)
 
 
+def test_load_rejects_truncated_artifacts(fitted, tmp_path):
+    """FogClassifier.load rides the pack-level schema validation: a
+    truncated save artifact fails with the missing-field error, not a
+    KeyError while rebuilding the facade."""
+    ds, clf = fitted
+    path = clf.save(tmp_path / "m.npz")
+    with np.load(path) as z:
+        fields = dict(z)
+    del fields["extra_json"]
+    broken = tmp_path / "trunc.npz"
+    with open(broken, "wb") as f:
+        np.savez(f, **fields)
+    with pytest.raises(ValueError, match="missing fields"):
+        FogClassifier.load(broken)
+
+
 def test_param_protocol_and_errors(ds_penbased):
     clf = FogClassifier(n_trees=8, grove_size=4)
     params = clf.get_params()
