@@ -9,7 +9,13 @@ future PR has a perf trajectory for the unified hot path.  Backends:
   pallas           fused hop-update kernel (interpreted on CPU, Mosaic on TPU)
   pallas-chunked   same, batch evaluated in chunk_b slices (VMEM-bounded)
   fused            ENTIRE Algorithm-2 loop in ONE Pallas launch (all grove
-                   tables VMEM-pinned, early-exit while_loop in-kernel)
+                   tables VMEM-pinned, early-exit while_loop in-kernel) —
+                   pinned at the historical hand-picked block_b=256 with
+                   compaction off: the autotuner's baseline to beat
+  fused-tuned      fused at the MEASURED autotune winner (block_b x live-
+                   lane compaction swept per (precision, field size) —
+                   kernels/autotune.py); the roofline_gate asserts this is
+                   no slower than the hand-picked row
   fused-auto       same, chunk_b="auto": chunks ONLY when the packed tables
                    + batch footprint exceed the VMEM budget (this forest
                    fits, so it must match plain fused — the fix for the
@@ -17,6 +23,12 @@ future PR has a perf trajectory for the unified hot path.  Backends:
   fused-bf16 /     fused over bf16 / int8 ForestPacks (packed VMEM
   fused-int8       residency; int8 pins ~4x the field per byte)
   reference-int8   the int8 dequantize oracle
+
+Every row also gets a ``roofline`` entry — modeled bytes-moved / FLOPs /
+bound / achieved-vs-roofline % from the dtype-aware analytic
+:class:`repro.launch.roofline.RooflineModel` (drawn against the TPU v5e
+spec; interpret-mode achieved % is honestly tiny) — and the measured
+autotune winner is recorded under ``autotune``.
 
 The record's ``kernel_launches`` field is the analytic per-eval Pallas
 dispatch count; ``table_bytes`` is each precision's packed ForestPack
@@ -46,6 +58,11 @@ from pathlib import Path
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 
 QUANT_GATE_MAX_DROP = 0.01      # int8 may cost at most 1% accuracy vs fp32
+
+# measured-vs-hand-picked tolerance: the tuned config must not lose more
+# than this to the legacy block_b=256 default (timing noise headroom on
+# shared CI runners; the tuner picked the faster config when it measured)
+ROOFLINE_GATE_SLACK = 1.10
 
 
 def _time_engine(engine, x, key, policy, reps=3):
@@ -90,6 +107,41 @@ def quant_gate(record: dict | None = None,
           f"acc_int8={int8:.4f}")
 
 
+def roofline_gate(record: dict | None = None,
+                  path: Path | str = OUT_PATH) -> None:
+    """Fail (raise) unless (a) every timed backend row carries a roofline
+    entry with bytes-moved / bound / achieved %, and (b) the measured
+    autotune winner is no slower than the hand-picked block_b default
+    (within timing-noise slack)."""
+    if record is None:
+        record = json.loads(Path(path).read_text())
+    roof = record.get("roofline")
+    if not roof:
+        raise SystemExit("roofline gate FAILED: no roofline section")
+    for name in record["backend_us"]:
+        entry = roof.get(name)
+        if not entry:
+            raise SystemExit(f"roofline gate FAILED: no roofline entry "
+                             f"for backend row {name!r}")
+        for field in ("bytes_moved", "bound", "achieved_pct"):
+            if field not in entry:
+                raise SystemExit(f"roofline gate FAILED: roofline[{name!r}]"
+                                 f" lacks {field!r}")
+    tuned = record["backend_us"].get("fused-tuned")
+    hand = record["backend_us"].get("fused")
+    if tuned is None or hand is None:
+        raise SystemExit("roofline gate FAILED: need both fused and "
+                         "fused-tuned rows")
+    if tuned > hand * ROOFLINE_GATE_SLACK:
+        raise SystemExit(
+            f"roofline gate FAILED: autotuned fused ({tuned} us) is slower "
+            f"than the hand-picked default ({hand} us) beyond "
+            f"{ROOFLINE_GATE_SLACK:.2f}x slack")
+    cfg = record.get("autotune", {})
+    print(f"CSV,engine,roofline_gate=pass,tuned_us={tuned},hand_us={hand},"
+          f"block_b={cfg.get('block_b')},compact={cfg.get('compact')}")
+
+
 def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
     import jax
     import jax.numpy as jnp
@@ -107,26 +159,42 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
     thresh = 0.3
     policy = FogPolicy(threshold=thresh, max_hops=gc.n_groves)
 
+    # measured autotune pass first: sweep block_b x compaction on inputs
+    # representative of this benchmark, so the fused-tuned row (block_b
+    # unset -> best_config cache hit) serves the measured winner
+    from repro.core.policy import NO_BUDGET
+    from repro.kernels import autotune
+    B = int(x.shape[0])
+    pack_fp32 = ForestPack.from_groves(gc, "fp32")
+    tuned = autotune.tune(
+        pack_fp32, x,
+        jax.random.randint(jax.random.key(1), (B,), 0, gc.n_groves),
+        jnp.full((B,), thresh, jnp.float32),
+        jnp.full((B,), NO_BUDGET, jnp.int32),
+        max_hops=gc.n_groves,
+        blocks=[512, 256, 128, 64])
+
     engines = {
         "reference": FogEngine(gc),
         "reference-lazy": FogEngine(gc, lazy=True),
         "pallas": FogEngine(gc, backend="pallas"),
         "pallas-chunked": FogEngine(gc, backend="pallas", chunk_b=256),
-        "fused": FogEngine(gc, backend="fused"),
+        # the historical hand-picked config: the tuner's baseline to beat
+        "fused": FogEngine(gc, backend="fused", block_b=256, compact=False),
+        "fused-tuned": FogEngine(gc, backend="fused"),  # autotuned knobs
         "fused-auto": FogEngine(gc, backend="fused", chunk_b="auto"),
         "fused-bf16": FogEngine(gc, backend="fused", precision="bf16"),
         "fused-int8": FogEngine(gc, backend="fused", precision="int8"),
         "reference-int8": FogEngine(gc, precision="int8"),
     }
     precisions = {name: eng.precision for name, eng in engines.items()}
-    B = int(x.shape[0])
     n_chunks = -(-B // 256)
     # analytic Pallas dispatches per evaluation (worst case, lazy aside);
     # fused-auto must NOT chunk this VMEM-resident forest: 1 launch
     launches = {
         "reference": 0, "reference-lazy": 0,
         "pallas": gc.n_groves, "pallas-chunked": gc.n_groves * n_chunks,
-        "fused": 1, "fused-auto": 1,
+        "fused": 1, "fused-tuned": 1, "fused-auto": 1,
         "fused-bf16": 1, "fused-int8": 1, "reference-int8": 0,
     }
     table_bytes = {p: ForestPack.from_groves(gc, p).table_bytes
@@ -136,7 +204,15 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
                         "backend_us": {}, "mean_hops": {}, "acc": {},
                         "energy_pj": {},
                         "kernel_launches": launches,
-                        "table_bytes": table_bytes}
+                        "table_bytes": table_bytes,
+                        "autotune": tuned.to_dict(), "roofline": {}}
+    # which rows walk every lane every iteration (fixed-trip scan) vs exit
+    # early, and which run the fused compaction — the roofline model's
+    # iters / compute terms
+    scan_rows = {"reference", "pallas", "pallas-chunked", "reference-int8"}
+    compact_rows = {"fused-tuned": tuned.compact, "fused-auto": True,
+                    "fused-bf16": True, "fused-int8": True}
+    from repro.launch.roofline import RooflineModel
     base_hops = {}
     for name, eng in engines.items():
         dt, res = _time_engine(eng, x, key, policy)
@@ -151,15 +227,24 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
             assert (hops == base_hops[prec]).all(), \
                 f"{name} diverged on hops"
         energy_pj = res.energy_report().per_example_pj
+        roof = RooflineModel(eng.tables.pack(prec), x.shape[1]).estimate(
+            "fused" if name.startswith("fused") else "reference",
+            B,
+            iters=gc.n_groves if name in scan_rows else int(hops.max()),
+            hops_total=float(hops.sum()),
+            compact=compact_rows.get(name, False))
         record["backend_us"][name] = round(dt * 1e6)
         record["mean_hops"][name] = float(hops.mean())
         record["acc"][name] = acc
         record["energy_pj"][name] = energy_pj
+        record["roofline"][name] = roof.to_dict(measured_s=dt)
         rows.append(f"CSV,engine,backend={name},us={dt * 1e6:.0f},"
                     f"acc={acc:.4f},mean_hops={hops.mean():.2f},"
                     f"energy_pj={energy_pj:.1f},"
                     f"launches={launches[name]},"
-                    f"table_bytes={table_bytes[prec]}")
+                    f"table_bytes={table_bytes[prec]},"
+                    f"roof_bound={roof.bound},"
+                    f"roof_mb={roof.bytes_moved / 1e6:.2f}")
     # the auto-chunk regression fix: auto must not chunk a resident pack
     assert engines["fused-auto"]._resolve_chunk(
         "fused", engines["fused-auto"].tables.pack("fp32"), B, 256, "auto",
@@ -177,6 +262,7 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
         rows.append(f"CSV,engine,wrote={out_path}")
     quant_gate(record)
     energy_gate(record)
+    roofline_gate(record)
     return rows
 
 
@@ -186,5 +272,7 @@ if __name__ == "__main__":
         quant_gate()
     elif "--energy-gate-only" in sys.argv:
         energy_gate()
+    elif "--roofline-gate-only" in sys.argv:
+        roofline_gate()
     else:
         print("\n".join(run()))

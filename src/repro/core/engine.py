@@ -70,6 +70,12 @@ from repro.core.policy import BACKENDS, PRECISIONS, FogPolicy
 from repro.forest.pack import ForestPack
 from repro.kernels import ops, ref
 
+# batch tile when nothing chooses one: per-hop backends always use it;
+# the fused backend only falls back here when the autotuner has no
+# feasible block (tables alone over the VMEM budget — the kernel's
+# ValueError then explains the remedies)
+DEFAULT_BLOCK_B = 256
+
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("proba", "label", "hops"), meta_fields=())
@@ -222,12 +228,16 @@ def _step(pack, x, start, thresh, budget, j, prob, live, hops, backend,
     return prob, live, hops
 
 
-@partial(jax.jit, static_argnames=("max_hops", "backend", "block_b", "lazy"))
+@partial(jax.jit, static_argnames=("max_hops", "backend", "block_b", "lazy",
+                                   "compact", "interpret"))
 def _eval_core(pack: ForestPack, x, start, thresh, budget, max_hops: int,
-               backend: str, block_b: int, lazy: bool):
+               backend: str, block_b: int, lazy: bool,
+               compact: bool = True, interpret: bool | None = None):
     B = x.shape[0]
     O = pack.n_heads
     C = pack.n_classes
+    if block_b is None:  # external positional callers (serving plane)
+        block_b = DEFAULT_BLOCK_B
     thresh = jnp.broadcast_to(jnp.asarray(thresh, jnp.float32), (B,))
     budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (B,))
 
@@ -241,7 +251,8 @@ def _eval_core(pack: ForestPack, x, start, thresh, budget, max_hops: int,
         proba, hops = ops.fused_fog(
             feat, thr_tab, leaf,
             x, start, thresh, budget, ts, ls,
-            max_hops=max_hops, block_b=block_b)
+            max_hops=max_hops, block_b=block_b, compact=compact,
+            interpret=interpret)
         if O == 1:
             proba = proba[:, 0]
         return FogResult(proba=proba,
@@ -347,16 +358,24 @@ class FogEngine:
                must be 0 (each shard hosts a strided subset of groves).
     use_kernels: ring only — run the Pallas tree-traversal PE per shard.
 
-    ``backend`` / ``block_b`` / ``chunk_b`` / ``lazy`` kwargs remain as
-    engine-level defaults for any policy that leaves them None; packed
-    tables live in ``self.tables`` (a :class:`TableCache`).
+    ``backend`` / ``block_b`` / ``chunk_b`` / ``lazy`` / ``compact`` /
+    ``interpret`` kwargs remain as engine-level defaults for any policy
+    that leaves them None; packed tables live in ``self.tables`` (a
+    :class:`TableCache`).  ``block_b=None`` (the default) lets the fused
+    backend consult the :mod:`~repro.kernels.autotune` best-config table
+    per (precision, field size) — a measured winner when one is cached,
+    the analytic VMEM-model seed otherwise — while per-hop backends use
+    ``DEFAULT_BLOCK_B``.
     """
 
     def __init__(self, gc, *, backend: str = "reference",
-                 block_b: int = 256, chunk_b: int | str | None = None,
+                 block_b: int | None = None,
+                 chunk_b: int | str | None = None,
                  mesh=None, axis: str = "grove", use_kernels: bool = False,
                  lazy: bool = False, policy: FogPolicy | None = None,
-                 precision: str | None = None):
+                 precision: str | None = None,
+                 compact: bool | None = None,
+                 interpret: bool | None = None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
         self._seed_pack = gc if isinstance(gc, ForestPack) else None
@@ -385,6 +404,8 @@ class FogEngine:
         self.block_b = block_b
         self.chunk_b = chunk_b
         self.precision = precision
+        self.compact = compact
+        self.interpret = interpret
         self.mesh = mesh
         self.axis = axis
         self.use_kernels = use_kernels
@@ -450,7 +471,14 @@ class FogEngine:
 
     # -- policy resolution ----------------------------------------------
     def resolve(self, policy: FogPolicy | None = None) -> FogPolicy:
-        """Fill a policy's None knobs from the engine defaults."""
+        """Fill a policy's None knobs from the engine defaults.
+
+        ``block_b``/``compact`` may legitimately remain None after this:
+        the fused evaluation path then consults the autotuner's best-config
+        table for the resolved (pack, n_features) — see
+        :mod:`repro.kernels.autotune` — and the per-hop backends fall back
+        to ``DEFAULT_BLOCK_B``.
+        """
         p = policy if policy is not None else self.policy
         return p.replace(
             max_hops=p.max_hops if p.max_hops is not None else self.n_groves,
@@ -459,7 +487,10 @@ class FogEngine:
             chunk_b=p.chunk_b if p.chunk_b is not None else self.chunk_b,
             lazy=p.lazy if p.lazy is not None else self.lazy,
             precision=(p.precision if p.precision is not None
-                       else self.precision))
+                       else self.precision),
+            compact=p.compact if p.compact is not None else self.compact,
+            interpret=(p.interpret if p.interpret is not None
+                       else self.interpret))
 
     # -- evaluation ------------------------------------------------------
     def eval(self, x: jax.Array, key: jax.Array, thresh=None,
@@ -507,7 +538,7 @@ class FogEngine:
         else:
             res = self._eval_chunked(x, start, thresh_v, budget_v, max_hops,
                                      backend, p.block_b, p.chunk_b, p.lazy,
-                                     p.precision)
+                                     p.precision, p.compact, p.interpret)
         # every evaluation path carries its own energy telemetry: callers
         # read res.energy_pj instead of re-deriving HopMeter + fog_energy
         self._n_features = int(x.shape[1])
@@ -570,14 +601,30 @@ class FogEngine:
         return min(fit, B)
 
     def _eval_chunked(self, x, start, thresh, budget, max_hops, backend,
-                      block_b, chunk_b, lazy, precision) -> FogResult:
+                      block_b, chunk_b, lazy, precision, compact=None,
+                      interpret=None) -> FogResult:
         B = x.shape[0]
         pack = self.tables.pack(precision)
+        if block_b is None or (compact is None and backend == "fused"):
+            # unset knobs resolve from the autotuner: the cached measured
+            # winner for this (precision, field size), else the analytic
+            # VMEM-model seed; per-hop backends just take the default tile
+            if backend == "fused":
+                from repro.kernels import autotune
+                cfg = autotune.best_config(pack, int(x.shape[1]))
+                if block_b is None:
+                    block_b = cfg.block_b or DEFAULT_BLOCK_B
+                if compact is None:
+                    compact = cfg.compact
+            elif block_b is None:
+                block_b = DEFAULT_BLOCK_B
+        compact = True if compact is None else compact
         cb = self._resolve_chunk(backend, pack, B, block_b, chunk_b,
                                  x.shape[1])
         if cb is None:
             return _eval_core(pack, x, start, thresh, budget, max_hops,
-                              backend, min(block_b, B), lazy)
+                              backend, min(block_b, B), lazy, compact,
+                              interpret)
         pad = (-B) % cb
         if pad:  # dead-pad the tail chunk so every chunk hits one compile;
             # padded lanes are discarded, so they get thresh=-1 / budget=1 —
@@ -593,7 +640,7 @@ class FogEngine:
         chunks = [
             _eval_core(pack, x[i:i + cb], start[i:i + cb],
                        thresh[i:i + cb], budget[i:i + cb], max_hops,
-                       backend, min(block_b, cb), lazy)
+                       backend, min(block_b, cb), lazy, compact, interpret)
             for i in range(0, B + pad, cb)
         ]
         out = jax.tree.map(lambda *ls: jnp.concatenate(ls)[:B], *chunks)

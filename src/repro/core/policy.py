@@ -28,6 +28,14 @@ knob             meaning
 ``precision``    packed-table dtype: "fp32" | "bf16" | "int8" (int8 reads a
                  quarter of the table bytes per hop and fits ~4x the field
                  in VMEM); None = engine default
+``compact``      fused backend: permute live lanes to a contiguous prefix
+                 each hop and walk only the covering power-of-two prefix
+                 (bit-identical; pays when the threshold profile exits lanes
+                 early); None = engine default
+``interpret``    Pallas execution mode: None derives from the runtime
+                 (compiled Mosaic on a real TPU, interpreted jnp elsewhere);
+                 an explicit bool overrides — debugging a Mosaic miscompile
+                 with True on TPU, or asserting compiled execution
 ===============  ============================================================
 
 ``threshold`` and ``hop_budget`` are pytree *data* (they may be traced,
@@ -64,7 +72,7 @@ NO_BUDGET = 2**31 - 1
 @partial(jax.tree_util.register_dataclass,
          data_fields=("threshold", "hop_budget"),
          meta_fields=("max_hops", "backend", "block_b", "chunk_b", "lazy",
-                      "precision"))
+                      "precision", "compact", "interpret"))
 @dataclasses.dataclass(frozen=True)
 class FogPolicy:
     """Every runtime knob of one Algorithm-2 evaluation, in one object."""
@@ -77,6 +85,8 @@ class FogPolicy:
     chunk_b: int | str | None = None
     lazy: bool | None = None
     precision: str | None = None
+    compact: bool | None = None
+    interpret: bool | None = None
 
     def __post_init__(self):
         if self.backend is not None and self.backend not in BACKENDS:
@@ -122,7 +132,8 @@ class FogPolicy:
         per-request policies — except ``precision``, which the scheduler
         handles by dispatching one program per precision group."""
         return tuple(k for k in ("max_hops", "backend", "block_b",
-                                 "chunk_b", "lazy", "precision")
+                                 "chunk_b", "lazy", "precision", "compact",
+                                 "interpret")
                      if getattr(self, k) is not None)
 
     # -- persistence -----------------------------------------------------
@@ -143,7 +154,8 @@ class FogPolicy:
                 "hop_budget": scalar(self.hop_budget),
                 "backend": self.backend, "block_b": self.block_b,
                 "chunk_b": self.chunk_b, "lazy": self.lazy,
-                "precision": self.precision}
+                "precision": self.precision, "compact": self.compact,
+                "interpret": self.interpret}
 
     @classmethod
     def from_dict(cls, d: dict) -> "FogPolicy":

@@ -1,0 +1,202 @@
+"""Measured autotuner for the fused FoG kernel.
+
+``block_b`` (batch lanes per launch block) and ``compact`` (live-lane
+compaction) are the two knobs that set the fused kernel's VMEM traffic and
+its per-hop work, and their best values move with the pack: int8 tables
+leave ~3x more VMEM for lane state than fp32, a wide field (many groves x
+deep trees) squeezes the batch block down, and compaction only pays when
+the workload's early-exit profile actually empties lanes.  Hand-picking
+one constant (the historical ``block_b=128``/``256``) therefore leaves
+latency on the table somewhere in the (precision, field size) plane.
+
+This module keeps a best-config table keyed by the pack signature:
+
+    key = (precision, n_heads, n_groves, grove_size, depth, n_classes,
+           n_features)
+
+``best_config(key)`` is what the engine consults when a policy leaves
+``block_b`` unset: a measured entry wins; otherwise the ANALYTIC SEED —
+derived from the (fixed, 8-aligned) ``fit_block_b`` VMEM model — answers
+immediately, so an untuned engine never stalls to benchmark.  ``tune()``
+runs the measured sweep (halving ladder of aligned block sizes from the
+VMEM fit, x compaction on/off, best-of-k timing on representative inputs)
+and caches the winner; set ``FOG_AUTOTUNE_CACHE=/path/file.json`` to
+persist winners across processes (loaded lazily, written atomically), the
+re-tune story for new hardware.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_fog import LANE_ALIGN, fit_block_b
+
+CACHE_ENV = "FOG_AUTOTUNE_CACHE"
+
+# analytic fallback cap: past ~256 lanes the walk's gather width saturates
+# the VPU and bigger blocks only grow VMEM pressure
+SEED_CAP = 256
+
+# in-process best-config table: key tuple -> TuneResult
+_CACHE: dict[tuple, "TuneResult"] = {}
+_LOADED_FROM: str | None = None
+
+
+@dataclass(frozen=True)
+class TuneResult:
+    """One winning fused-kernel configuration."""
+    block_b: int
+    compact: bool
+    measured_s: float | None = None   # None: analytic seed, never measured
+    source: str = "analytic"          # "analytic" | "measured" | "cache-file"
+
+    def to_dict(self) -> dict:
+        return {"block_b": self.block_b, "compact": self.compact,
+                "measured_s": self.measured_s, "source": self.source}
+
+
+def pack_key(pack, n_features: int) -> tuple:
+    """The (precision, field size) signature a tuned config is valid for."""
+    return (pack.precision, pack.n_heads, pack.n_groves, pack.grove_size,
+            pack.depth, pack.n_classes, int(n_features))
+
+
+def _key_str(key: tuple) -> str:
+    return "/".join(str(k) for k in key)
+
+
+def analytic_block_b(pack, n_features: int) -> int:
+    """Seed config from the VMEM model alone: the largest aligned block
+    that fits beside the packed tables, capped at SEED_CAP (floor of
+    LANE_ALIGN so a viable pack always gets a runnable block)."""
+    tables = pack.layout("fused")
+    fit = fit_block_b(*tables, n_features=n_features)
+    return max(LANE_ALIGN, min(fit, SEED_CAP)) if fit > 0 else 0
+
+
+def candidate_blocks(pack, n_features: int, batch_b: int | None = None) -> list[int]:
+    """The measured sweep's block_b ladder: the VMEM fit (aligned), then
+    halvings down to LANE_ALIGN — every size that changes the grid."""
+    fit = fit_block_b(*pack.layout("fused"), n_features=n_features)
+    if fit <= 0:
+        return []
+    top = min(fit, 1024)
+    if batch_b is not None:
+        top = min(top, batch_b + (-batch_b) % LANE_ALIGN)
+    top -= top % LANE_ALIGN
+    out = []
+    b = max(top, LANE_ALIGN)
+    while b >= LANE_ALIGN:
+        out.append(b)
+        b //= 2
+        b -= b % LANE_ALIGN
+    return out or [LANE_ALIGN]
+
+
+def best_config(pack, n_features: int) -> TuneResult:
+    """The config the engine uses when ``block_b`` is unset: the cached
+    measured winner for this pack signature, else the analytic seed."""
+    _load_cache_file()
+    key = pack_key(pack, n_features)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    return TuneResult(block_b=analytic_block_b(pack, n_features),
+                      compact=True, source="analytic")
+
+
+def tune(pack, x, start, thresh, budget, *, max_hops: int,
+         repeats: int = 3, persist: bool = True,
+         blocks: list[int] | None = None) -> TuneResult:
+    """Measured sweep over block_b candidates x compaction on/off.
+
+    ``x/start/thresh/budget`` should be representative of serving traffic —
+    the winner is workload-dependent (compaction pays exactly when this
+    threshold profile exits lanes early).  Best-of-``repeats`` wall time
+    per candidate, winner cached under the pack signature (and persisted
+    to ``$FOG_AUTOTUNE_CACHE`` when set and ``persist``).  ``blocks``
+    narrows the sweep to an explicit block_b ladder (VMEM-infeasible
+    entries are dropped); default is the full halving ladder from the
+    VMEM fit."""
+    from repro.kernels import ops
+
+    key = pack_key(pack, int(x.shape[1]))
+    tables = pack.layout("fused")
+    feasible = candidate_blocks(pack, int(x.shape[1]), int(x.shape[0]))
+    if blocks is None:
+        blocks = feasible
+    else:
+        cap = max(feasible) if feasible else 0
+        blocks = [b for b in blocks if LANE_ALIGN <= b <= cap] or feasible
+    if not blocks:
+        raise ValueError(
+            f"pack {key} has no VMEM-feasible block_b; shrink the field or "
+            "use precision=\"int8\"")
+
+    best: TuneResult | None = None
+    for block_b in blocks:
+        for compact in (False, True):
+            def run():
+                p, h = ops.fused_fog(*tables[:3], x, start, thresh, budget,
+                                     *tables[3:], max_hops=max_hops,
+                                     block_b=block_b, compact=compact)
+                jax.block_until_ready((p, h))
+            run()                                  # compile / warm
+            t = min(_timed(run) for _ in range(repeats))
+            if best is None or t < best.measured_s:
+                best = TuneResult(block_b=block_b, compact=compact,
+                                  measured_s=t, source="measured")
+    _CACHE[key] = best
+    if persist:
+        _save_cache_file()
+    return best
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def clear_cache() -> None:
+    """Drop every in-process entry (tests; does not touch the cache file)."""
+    global _LOADED_FROM
+    _CACHE.clear()
+    _LOADED_FROM = None
+
+
+def _load_cache_file() -> None:
+    global _LOADED_FROM
+    path = os.environ.get(CACHE_ENV)
+    if not path or _LOADED_FROM == path:
+        return
+    _LOADED_FROM = path
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError):
+        return
+    for kstr, cfg in raw.items():
+        key = tuple(p if i == 0 else int(p)
+                    for i, p in enumerate(kstr.split("/")))
+        if key not in _CACHE:   # fresher in-process measurements win
+            _CACHE[key] = TuneResult(block_b=int(cfg["block_b"]),
+                                     compact=bool(cfg["compact"]),
+                                     measured_s=cfg.get("measured_s"),
+                                     source="cache-file")
+
+
+def _save_cache_file() -> None:
+    path = os.environ.get(CACHE_ENV)
+    if not path:
+        return
+    payload = {_key_str(k): v.to_dict() for k, v in _CACHE.items()}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)

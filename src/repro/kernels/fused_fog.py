@@ -20,6 +20,18 @@ from them stay at the packed width — int8 pins ~4x the field of groves in
 the same VMEM — and only the *gathered* [BB, t] values are dequantized to
 fp32 for the compare/accumulate, mirroring the ASIC's fixed-point SRAM.
 
+Live-lane compaction (``compact=True``): after each hop the block's live
+lanes are permuted to a contiguous prefix (a stable cumsum-ranked
+partition — per-lane state just relocates, so hops/labels are bit-identical
+to the uncompacted walk), and the next hop's gather-compare walk runs over
+the smallest power-of-two prefix that covers the survivors instead of the
+full block.  Exited lanes therefore stop occupying walk lanes: at a high
+threshold most lanes exit on hop 1 and every later hop touches a fraction
+of the block's VMEM lane state — the same sparsity win the reference-lazy
+path shows at batch granularity (22.3 -> 11.9 ms), recovered inside the
+kernel.  The engine's autotuner measures compaction on/off per (precision,
+field size) and serves the faster setting.
+
 Block sizing (mirrors tree_traverse.py): BB lanes x t trees x d levels of
 int32 index state is small; the resident tables dominate VMEM at their
 packed byte size — the whole field of groves, not one grove, must fit.
@@ -42,7 +54,15 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.tree_traverse import (VMEM_BUDGET, _dequant_gathered,
-                                         vmem_error)
+                                         resolve_interpret, vmem_error)
+
+# TPU lane tiling: batch blocks are sized in multiples of this so a block's
+# [BB, t] walk state maps onto whole sublanes (fit_block_b rounds down to it)
+LANE_ALIGN = 8
+
+# smallest compacted walk prefix: shrinking below one aligned sublane group
+# buys nothing (the VPU processes whole sublanes either way)
+MIN_COMPACT_WIDTH = 8
 
 
 def vmem_table_bytes(feature, threshold, leaf, thr_scale, leaf_scale) -> int:
@@ -53,10 +73,16 @@ def vmem_table_bytes(feature, threshold, leaf, thr_scale, leaf_scale) -> int:
 
 def vmem_lane_bytes(*, n_heads: int, n_classes: int, grove_size: int,
                     depth: int, n_features: int) -> int:
-    """Per-lane VMEM state: input row, [O, C] prob accumulators (x2 for the
-    normalized copy), walk indices, and the per-lane policy scalars."""
-    return (n_features + 2 * n_heads * n_classes
-            + grove_size * (depth + 2) + 4) * 4
+    """Per-lane VMEM state, byte-exact per dtype: the fp32 input row, the
+    [O, C] prob accumulators (x2 for the normalized copy), the [t] x
+    (depth + 2) int32 walk/gather state, five 4-byte per-lane scalars
+    (start, threshold, hop budget, hop count, compaction origin index) —
+    and the live mask at its actual int8 width, ONE byte, not four."""
+    words = (n_features                    # x row, fp32
+             + 2 * n_heads * n_classes    # prob + normalized copy, fp32
+             + grove_size * (depth + 2)   # walk idx + gathered f/thr, int32
+             + 5)                         # start/thresh/budget/hops/orig
+    return 4 * words + 1                  # + int8 live mask
 
 
 def vmem_working_set(feature, threshold, leaf, thr_scale, leaf_scale, *,
@@ -73,26 +99,51 @@ def vmem_working_set(feature, threshold, leaf, thr_scale, leaf_scale, *,
 
 def fit_block_b(feature, threshold, leaf, thr_scale, leaf_scale, *,
                 n_features: int) -> int:
-    """Largest batch block that fits VMEM beside the packed tables (0 when
-    the tables alone are over budget).  ``FogEngine``'s auto-chunking sizes
-    its slices from this."""
+    """Largest LANE_ALIGN-aligned batch block that fits VMEM beside the
+    packed tables (0 when the tables alone are over budget).  The raw
+    lane-count quotient is rounded DOWN to a multiple of 8 — an unaligned
+    block (say 731) defeats TPU sublane tiling and pads up inside Mosaic,
+    silently overshooting the modeled footprint.  A sliver of headroom
+    below one aligned group (0 < fit < 8) is returned unrounded so the
+    evaluation still runs rather than refusing.  ``FogEngine``'s
+    auto-chunking and the autotuner's analytic seed size from this."""
     O, _, t, _ = feature.shape
     C = leaf.shape[4]
     depth = int(np.log2(leaf.shape[3]) + 0.5)
     tables = vmem_table_bytes(feature, threshold, leaf, thr_scale, leaf_scale)
     lane = vmem_lane_bytes(n_heads=O, n_classes=C, grove_size=t, depth=depth,
                            n_features=n_features)
-    return max(0, (VMEM_BUDGET - 1 - tables) // lane)
+    fit = max(0, (VMEM_BUDGET - 1 - tables) // lane)
+    return fit - fit % LANE_ALIGN if fit >= LANE_ALIGN else fit
+
+
+def _compact_perm(live):
+    """Gather permutation moving live lanes to a contiguous prefix.
+
+    Stable on both sides (cumsum ranks preserve relative order), so the
+    permutation is a pure relocation of per-lane state: every lane keeps
+    its own values and the walk/gate math is bit-identical.  Returns
+    ``perm`` with ``new[i] = old[perm[i]]``.
+    """
+    BB = live.shape[0]
+    livei = live.astype(jnp.int32)
+    n_live = jnp.sum(livei)
+    rank_live = jnp.cumsum(livei) - 1
+    rank_dead = jnp.cumsum(1 - livei) - 1
+    pos = jnp.where(livei > 0, rank_live, n_live + rank_dead)   # old -> new
+    iota = jax.lax.iota(jnp.int32, BB)
+    return jnp.zeros((BB,), jnp.int32).at[pos].set(iota)
 
 
 def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, thr_scale_ref,
                       leaf_scale_ref, x_ref, start_ref, thresh_ref,
                       budget_ref, live_ref, proba_out, hops_out,
-                      *, depth: int, max_hops: int, n_groves: int):
-    x = x_ref[...]                       # [BB, F]
-    start = start_ref[...]               # [BB]
-    thresh = thresh_ref[...]             # [BB] per-lane gate
-    budget = budget_ref[...]             # [BB] per-lane hop cap
+                      *, depth: int, max_hops: int, n_groves: int,
+                      compact: bool):
+    x0 = x_ref[...]                      # [BB, F]
+    start0 = start_ref[...]              # [BB]
+    thresh0 = thresh_ref[...]            # [BB] per-lane gate
+    budget0 = budget_ref[...]            # [BB] per-lane hop cap
     live0 = live_ref[...]                # [BB] int8 (0 = dead-padded lane)
     feature = feature_ref[...]           # [O, G, t, nodes]
     threshold = threshold_ref[...]       # packed dtype
@@ -102,33 +153,75 @@ def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, thr_scale_ref,
     O = feature.shape[0]
     t = feature.shape[2]
     L, C = leaf.shape[3], leaf.shape[4]
-    BB = x.shape[0]
-    trange = jax.lax.broadcasted_iota(jnp.int32, (BB, t), 1)
+    BB = x0.shape[0]
 
-    def walk(o, g):
+    def walk(o, g, xs):
         # per-lane grove walk against head o's VMEM-resident tables: the
         # same d gather-compare levels as tree_traverse, but the grove is
-        # selected per lane (g [BB]) instead of fixed for the launch
+        # selected per lane (g) and the lane width follows the compacted
+        # prefix instead of being fixed at BB
+        w = xs.shape[0]
+        trange = jax.lax.broadcasted_iota(jnp.int32, (w, t), 1)
         gcol = g[:, None]
-        ts = thr_scale[o][gcol, trange, 0]                 # [BB, t]
-        idx = jnp.zeros((BB, t), jnp.int32)
+        ts = thr_scale[o][gcol, trange, 0]                 # [w, t]
+        idx = jnp.zeros((w, t), jnp.int32)
         for _ in range(depth):           # static unroll
-            f = feature[o][gcol, trange, idx]              # [BB, t]
+            f = feature[o][gcol, trange, idx]              # [w, t]
             thr = _dequant_gathered(threshold[o][gcol, trange, idx], ts,
                                     sentinel=True)
-            xv = jnp.take_along_axis(x, f, axis=1)         # [BB, t]
+            xv = jnp.take_along_axis(xs, f, axis=1)        # [w, t]
             idx = 2 * idx + 1 + (xv > thr).astype(jnp.int32)
         dists = _dequant_gathered(
-            leaf[o][gcol, trange, idx - (L - 1)],          # [BB, t, C]
+            leaf[o][gcol, trange, idx - (L - 1)],          # [w, t, C]
             leaf_scale[o][gcol, trange, 0, 0][..., None])
         return dists.mean(axis=1)
 
+    # compacted walk prefix widths: BB, BB/2, ... down to MIN_COMPACT_WIDTH.
+    # Only one branch executes per hop (lax.switch); survivors always sit in
+    # a prefix after compaction, so the smallest width covering them is exact.
+    widths = [BB]
+    if compact:
+        while widths[-1] % 2 == 0 and widths[-1] // 2 >= MIN_COMPACT_WIDTH:
+            widths.append(widths[-1] // 2)
+
+    def walk_all(g, xs, n_live):
+        if len(widths) == 1:
+            return jnp.stack([walk(o, g, xs) for o in range(O)])
+
+        def prefix_branch(w):
+            def run(_):
+                out = jnp.stack([walk(o, g[:w], xs[:w]) for o in range(O)])
+                # lanes beyond the prefix are dead (livef = 0 masks them);
+                # pad with zeros to keep the [O, BB, C] accumulate shape
+                return jnp.pad(out, ((0, 0), (0, BB - w), (0, 0)))
+            return run
+
+        # halving level: how many times the prefix can shrink and still
+        # cover every live lane
+        lvl = jnp.zeros((), jnp.int32)
+        for w in widths[1:]:
+            lvl = lvl + (n_live <= w).astype(jnp.int32)
+        return jax.lax.switch(lvl, [prefix_branch(w) for w in widths], None)
+
     def body(state):
-        j, prob, live, hops = state
+        j, prob, live, hops, x, start, thresh, budget, orig = state
+        n_live = jnp.sum(live.astype(jnp.int32))
+        if compact:
+            def do_compact(args):
+                prob, live, hops, x, start, thresh, budget, orig = args
+                perm = _compact_perm(live)
+                take = lambda a: jnp.take(a, perm, axis=0)
+                return (jnp.take(prob, perm, axis=1), take(live), take(hops),
+                        take(x), take(start), take(thresh), take(budget),
+                        take(orig))
+
+            # hop 1 (and any fully-live block) skips the permutation
+            prob, live, hops, x, start, thresh, budget, orig = jax.lax.cond(
+                n_live < BB, do_compact, lambda args: args,
+                (prob, live, hops, x, start, thresh, budget, orig))
         g = (start + j) % n_groves
         livef = live.astype(jnp.float32)
-        prob = jnp.stack([prob[o] + walk(o, g) * livef[:, None]
-                          for o in range(O)])              # [O, BB, C]
+        prob = prob + walk_all(g, x, n_live) * livef[None, :, None]
         hops = hops + live.astype(jnp.int32)
         denom = jnp.maximum(hops, 1).astype(jnp.float32)
         prob_norm = prob / denom[None, :, None]
@@ -141,19 +234,29 @@ def _fused_fog_kernel(feature_ref, threshold_ref, leaf_ref, thr_scale_ref,
         margin = jnp.abs(m1 - m2).min(axis=0)              # [BB]
         live = (live.astype(bool) & (margin < thresh)
                 & (hops < budget)).astype(jnp.int8)
-        return j + 1, prob, live, hops
+        return j + 1, prob, live, hops, x, start, thresh, budget, orig
 
     def cond(state):
-        j, _, live, _ = state
+        j, _, live = state[0], state[1], state[2]
         return (j < max_hops) & (jnp.sum(live.astype(jnp.int32)) > 0)
 
     state0 = (jnp.zeros((), jnp.int32),
               jnp.zeros((O, BB, C), jnp.float32),
               live0,
-              jnp.zeros((BB,), jnp.int32))
-    _, prob, _, hops = jax.lax.while_loop(cond, body, state0)
+              jnp.zeros((BB,), jnp.int32),
+              x0, start0, thresh0, budget0,
+              jax.lax.iota(jnp.int32, BB))
+    _, prob, _, hops, _, _, _, _, orig = jax.lax.while_loop(cond, body, state0)
     denom = jnp.maximum(hops, 1).astype(jnp.float32)
-    proba_out[...] = (prob / denom[None, :, None]).transpose(1, 0, 2)
+    proba = (prob / denom[None, :, None]).transpose(1, 0, 2)   # [BB, O, C]
+    if compact:
+        # undo the accumulated compaction permutation: lane orig[i] of the
+        # input lives at row i, so scatter row i back to slot orig[i]
+        inv = jnp.zeros((BB,), jnp.int32).at[orig].set(
+            jax.lax.iota(jnp.int32, BB))
+        proba = jnp.take(proba, inv, axis=0)
+        hops = jnp.take(hops, inv, axis=0)
+    proba_out[...] = proba
     hops_out[...] = hops
 
 
@@ -163,7 +266,8 @@ def fused_fog_pallas(feature: jax.Array, threshold: jax.Array,
                      thr_scale: jax.Array | None = None,
                      leaf_scale: jax.Array | None = None, *,
                      max_hops: int, block_b: int = 128,
-                     interpret: bool = True):
+                     compact: bool = True,
+                     interpret: bool | None = None):
     """One-launch Algorithm-2 evaluation over head-stacked packed tables.
 
     feature    int32           [O, G, t, 2**d - 1]   all heads, all groves
@@ -173,6 +277,10 @@ def fused_fog_pallas(feature: jax.Array, threshold: jax.Array,
     leaf_scale float32         [O, G, t, 1, 1]   (default ones)
     x          float32 [B, F];  start int32 [B];  thresh float32 [B];
     budget     int32   [B]
+    compact    permute live lanes to a prefix each hop and walk only the
+               covering power-of-two prefix (bit-identical results)
+    interpret  None derives from ``jax.default_backend()`` (compiled on a
+               real TPU, interpreted elsewhere); a bool overrides
     returns    (proba float32 [B, O, C] hop-normalized, hops int32 [B])
     """
     B, F = x.shape
@@ -180,6 +288,7 @@ def fused_fog_pallas(feature: jax.Array, threshold: jax.Array,
     L, C = leaf.shape[3], leaf.shape[4]
     depth = int(np.log2(L) + 0.5)
     block_b = min(block_b, B)
+    interpret = resolve_interpret(interpret)
     if thr_scale is None:
         thr_scale = jnp.ones((O, G, t, 1), jnp.float32)
     if leaf_scale is None:
@@ -215,7 +324,7 @@ def fused_fog_pallas(feature: jax.Array, threshold: jax.Array,
     vec = lambda i: (i,)
     proba, hops = pl.pallas_call(
         functools.partial(_fused_fog_kernel, depth=depth, max_hops=max_hops,
-                          n_groves=G),
+                          n_groves=G, compact=compact),
         grid=(B // block_b,),
         in_specs=[
             pl.BlockSpec(feature.shape, whole4),    # tables: whole, VMEM-pinned

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tree_traverse import resolve_interpret
+
 
 def _aggregate_kernel(prob_ref, contrib_ref, live_ref, hops_ref, thresh_ref,
                       prob_out, hops_out, live_out, margin_out):
@@ -53,7 +55,7 @@ def _aggregate_kernel(prob_ref, contrib_ref, live_ref, hops_ref, thresh_ref,
 def grove_aggregate_pallas(prob_acc: jax.Array, contrib: jax.Array,
                            live: jax.Array, hops: jax.Array,
                            thresh: jax.Array, *, block_b: int = 256,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """Fused hop update.  live is bool [B]; thresh is a scalar or per-lane
     [B] vector; returns (prob, hops, live, margin).
 
@@ -103,7 +105,7 @@ def grove_aggregate_pallas(prob_acc: jax.Array, contrib: jax.Array,
             jax.ShapeDtypeStruct((B,), jnp.int8),
             jax.ShapeDtypeStruct((B,), prob_acc.dtype),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(prob_acc, contrib, live8, hops, thresh)
     if pad:
         prob, hops, live8, margin = (prob[:-pad], hops[:-pad], live8[:-pad],

@@ -11,7 +11,7 @@ from functools import partial
 
 import jax
 
-from repro.kernels.tree_traverse import tree_traverse_pallas
+from repro.kernels.tree_traverse import resolve_interpret, tree_traverse_pallas
 from repro.kernels.top2_confidence import top2_confidence_pallas
 from repro.kernels.grove_aggregate import grove_aggregate_pallas
 from repro.kernels.fused_fog import fused_fog_pallas
@@ -19,7 +19,7 @@ from repro.kernels import ref
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return resolve_interpret(None)
 
 
 @partial(jax.jit, static_argnames=("block_b",))
@@ -47,20 +47,25 @@ def grove_aggregate(prob_acc, contrib, live, hops, thresh, *, block_b: int = 256
                                   block_b=block_b, interpret=_interpret())
 
 
-@partial(jax.jit, static_argnames=("max_hops", "block_b"))
+@partial(jax.jit, static_argnames=("max_hops", "block_b", "compact",
+                                   "interpret"))
 def fused_fog(feature, threshold, leaf, x, start, thresh, budget,
               thr_scale=None, leaf_scale=None, *,
-              max_hops: int, block_b: int = 128):
+              max_hops: int, block_b: int = 128, compact: bool = True,
+              interpret: bool | None = None):
     """Whole Algorithm-2 loop in ONE kernel launch: head-stacked packed
     grove tables [O,G,t,...] pinned in VMEM at their packed width (fp32/
     bf16/int8 — int8 fits ~4x the field), per-lane thresh/budget, early-
     exit while_loop inside the kernel, gathered values dequantized in-
-    register.  Returns (proba [B,O,C], hops [B]); oracle: the FogEngine
-    reference backend over the same pack."""
+    register.  ``compact`` permutes live lanes to a prefix each hop and
+    walks only the covering power-of-two prefix (bit-identical results);
+    ``interpret=None`` derives from the runtime backend.  Returns
+    (proba [B,O,C], hops [B]); oracle: the FogEngine reference backend
+    over the same pack."""
     return fused_fog_pallas(feature, threshold, leaf, x, start, thresh,
                             budget, thr_scale, leaf_scale,
                             max_hops=max_hops, block_b=block_b,
-                            interpret=_interpret())
+                            compact=compact, interpret=interpret)
 
 
 __all__ = ["tree_traverse", "top2_confidence", "grove_aggregate",

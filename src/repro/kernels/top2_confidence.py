@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tree_traverse import resolve_interpret
+
 
 def _top2_kernel(prob_ref, out_ref):
     prob = prob_ref[...]                                  # [BB, C]
@@ -21,7 +23,7 @@ def _top2_kernel(prob_ref, out_ref):
 
 
 def top2_confidence_pallas(prob: jax.Array, *, block_b: int = 256,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """[B, C] -> [B] top-2 margin.
 
     ``B`` need not divide ``block_b``: the batch is zero-padded to the next
@@ -38,6 +40,6 @@ def top2_confidence_pallas(prob: jax.Array, *, block_b: int = 256,
         in_specs=[pl.BlockSpec((block_b, C), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((B + pad,), prob.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(prob)
     return out[:B] if pad else out

@@ -35,6 +35,21 @@ from jax.experimental import pallas as pl
 VMEM_BUDGET = 14 * 2**20
 
 
+def resolve_interpret(override: bool | None = None) -> bool:
+    """The one place the Pallas ``interpret`` flag is decided.
+
+    ``None`` (the default everywhere) derives it from the runtime: anything
+    but a real TPU backend runs the kernel body interpreted as jnp (Mosaic
+    cannot target CPU/GPU here), while a TPU compiles to Mosaic — so a
+    real-TPU deployment never silently serves the interpreted kernel.  An
+    explicit bool wins unconditionally (debugging a Mosaic miscompile with
+    ``interpret=True`` on TPU, or asserting compiled execution in tests).
+    """
+    if override is not None:
+        return bool(override)
+    return jax.default_backend() != "tpu"
+
+
 def vmem_error(kind: str, required: int, detail: str,
                chunkable: bool = False) -> ValueError:
     """The shared over-budget rejection: required vs available bytes, plus
@@ -97,7 +112,7 @@ def tree_traverse_pallas(feature: jax.Array, threshold: jax.Array,
                          thr_scale: jax.Array | None = None,
                          leaf_scale: jax.Array | None = None,
                          *, block_b: int = 128,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool | None = None) -> jax.Array:
     """[t,N] x [t,N] x [t,L,C] x [B,F] -> [B,C] grove probabilities.
 
     ``threshold``/``leaf`` may be fp32, bf16 or int8 (then ``thr_scale``
@@ -110,6 +125,7 @@ def tree_traverse_pallas(feature: jax.Array, threshold: jax.Array,
     t, L, C = leaf.shape
     depth = int(np.log2(L) + 0.5)
     block_b = min(block_b, B)
+    interpret = resolve_interpret(interpret)
     if thr_scale is None:
         thr_scale = jnp.ones((t, 1), jnp.float32)
     if leaf_scale is None:

@@ -25,7 +25,7 @@ import jax
 
 from repro.configs import ARCHS, get_arch
 from repro.launch.mesh import make_production_mesh
-from repro.launch import roofline as R
+from repro.launch import hlo_cost as R
 from repro.train.loop import SHAPES, input_specs, make_train_step_lowerable, shape_supported
 from repro import compat
 

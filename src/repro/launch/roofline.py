@@ -1,498 +1,218 @@
-"""Roofline-term extraction from a compiled dry-run artifact.
+"""FoG roofline model: dtype-aware bytes-moved per backend vs machine peaks.
 
-  compute    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU peak, v5e]
-  memory     = HLO_bytes / (chips * 819e9)           [HBM bw]
-  collective = collective_bytes / (chips * 4 * 50e9) [4 ICI links/chip]
+The paper's energy claim is a traffic claim — FoG wins because the grove
+walk stays on-chip — so every latency we publish should come with "how far
+from the bandwidth bound is that?".  This module answers it analytically,
+per backend, from quantities the engine already knows (pack shape, packed
+table bytes, hop statistics), instead of parsing compiled HLO: the FoG
+kernels' traffic is *designed*, not emergent, so the model is a short
+closed form per backend.
 
-``cost_analysis`` under-counts bodies of ``while`` loops (counted once), so
-we also parse the HLO text: every while loop whose trip count is recoverable
-from its induction-variable compare gets its body FLOPs multiplied out.
-Analytic 6ND is reported alongside as the useful-FLOPs yardstick.
+Traffic model (per evaluation of a ``[B, F]`` batch):
+
+* **per-hop backends** ("reference", "pallas"): every loop iteration
+  re-materializes each lane's grove slice from the packed tables
+  (``table_bytes / n_groves`` per lane — dtype-aware: an int8 pack moves a
+  quarter of fp32) plus the lane's fp32 row, probability state update and
+  loop bookkeeping.  Iterations = ``max_hops`` for the fixed-trip scan,
+  the observed max hop count for the lazy while_loop.
+
+* **fused**: the tables are pinned ONCE per launch (× chunks when the
+  engine auto-chunks) and per-lane state crosses HBM once — in: row +
+  start/thresh/budget/live; out: proba + hops.  Hop count doesn't multiply
+  HBM traffic at all; that is the whole point of the kernel.
+
+* **ring**: fused-style per-shard pinning plus the rotation's collective
+  bytes (probability state crossing ICI ``iters`` times).
+
+FLOPs: a lane-hop walks one grove per head — ``O·t`` trees × (2 ops per
+level × depth + C leaf accumulates) — plus the MaxDiff gate (~``8·O·C``).
+Compute lane-hops are ``Σ hops`` when the backend skips exited lanes
+(fused-compacted) and ``B × iters`` when it computes dead lanes anyway.
+
+``bound`` is whichever of ``bytes/peak_bw`` and ``flops/peak_flops`` is
+slower; ``achieved`` = ideal over measured.  Machine peaks come from a
+:class:`MachineSpec` — pass your own to re-rate for new hardware; the
+bundled specs cover the TPU v5e target and an order-of-magnitude host-CPU
+stand-in for the interpret-mode container (whose achieved % is honestly
+tiny: the interpreted kernel is a correctness vehicle, not a fast path).
+
+The LM dry-run HLO cost model that used to live here is first-class in
+:mod:`repro.launch.hlo_cost`; importing its names from here still works
+behind a ``DeprecationWarning`` (see ``__getattr__`` at the bottom).
 """
 from __future__ import annotations
 
 import dataclasses
-import re
-
-# ---- TPU v5e hardware constants (per chip) ----
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-ICI_BW = 50e9                # bytes/s per link
-ICI_LINKS = 4                # links per chip on a 2D torus
+import warnings
 
 
-_COLLECTIVE_RE = re.compile(
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
-_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64)\[([\d,]*)\]")
-
-_DTYPE_BYTES = {"f64": 8, "s64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
-                "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
-
-
-def _shape_bytes(type_str: str) -> int:
-    """Sum byte sizes of all array literals in an HLO type string."""
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """Peak rates the roofline is drawn against."""
+    name: str
+    peak_flops: float    # FLOP/s
+    peak_bw: float       # HBM (main-memory) bytes/s
+    ici_bw: float = 0.0  # interconnect bytes/s (ring backend); 0 = ignore
 
 
-def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
-    """Sum output-operand bytes of every collective op, by kind.
+# TPU v5e per chip: bf16 MXU peak and HBM bandwidth (the deploy target the
+# kernels are written for)
+TPU_V5E = MachineSpec("tpu-v5e", peak_flops=197e12, peak_bw=819e9,
+                      ici_bw=4 * 50e9)
 
-    Uses the op's *result* shape (the payload that crosses the wire at least
-    once; exact wire bytes depend on algorithm — ring AR moves 2x payload —
-    so this is the standard lower bound).
-    While-loop bodies appear once in the text; trip-count scaling is applied
-    by the caller via ``scale_loops``.
-    """
-    out: dict[str, int] = {}
-    for line in hlo_text.splitlines():
-        m = _COLLECTIVE_RE.search(line)
-        if not m or "=" not in line:
-            continue
-        kind = m.group(1)
-        # result type is between '=' and the op name
-        lhs, rhs = line.split("=", 1)
-        rtype = rhs.strip().split(" ")[0]
-        out[kind] = out.get(kind, 0) + _shape_bytes(rtype)
-    return out
+# order-of-magnitude stand-in for the CPU container the interpret-mode
+# kernels run in; override with a measured spec for real host numbers
+HOST_CPU = MachineSpec("host-cpu", peak_flops=1e11, peak_bw=5e10)
+
+SPECS = {s.name: s for s in (TPU_V5E, HOST_CPU)}
+
+# fixed per-lane bookkeeping bytes a per-hop iteration touches: live mask,
+# hop counter read+write, threshold and budget reads
+_LANE_LOOP_BYTES = 20
+# per-lane one-time fused traffic besides the fp32 row and outputs:
+# start + thresh + budget (4 B each) + int8 live mask
+_LANE_FUSED_IN_BYTES = 13
 
 
-class HloCostModel:
-    """Static call-graph cost model over post-optimization HLO text.
+@dataclasses.dataclass(frozen=True)
+class RooflineEstimate:
+    """One backend's modeled traffic/compute and the resulting bound."""
+    backend: str
+    spec: MachineSpec
+    bytes_moved: float
+    flops: float
 
-    ``compiled.cost_analysis()`` counts every computation once, so a
-    22-layer ``lax.scan`` under-reports FLOPs ~22x.  This model walks the
-    call graph — while bodies scaled by the ``known_trip_count`` in their
-    backend_config, fusions/calls inlined — and counts:
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_moved / self.spec.peak_bw
 
-      * flops: 2 * numel(out) * contracted-size for every dot/convolution
-      * bytes: operand + result buffer bytes at top-level-op granularity
-        (fusion boundaries = the HBM traffic model: intra-fusion traffic
-        stays in registers/VMEM)
-      * collective_bytes: result bytes per collective kind
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.spec.peak_flops
 
-    all multiplied along the call chain.
-    """
+    @property
+    def bound(self) -> str:
+        return "memory" if self.memory_s >= self.compute_s else "compute"
 
-    _DEF_RE = re.compile(
-        r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
-        r"(\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
-        r"([\w\-]+)\(")
-    _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
-    _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-    _CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
-    _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
-    _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-    _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-    _OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+    @property
+    def ideal_s(self) -> float:
+        """No-overlap roofline time: the slower of the two terms."""
+        return max(self.memory_s, self.compute_s)
 
-    _FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
-                 "bitcast", "after-all", "iota"}
-
-    def __init__(self, hlo_text: str):
-        self.computations: dict[str, list[str]] = {}
-        self.entry: str | None = None
-        cur: list[str] | None = None
-        for line in hlo_text.splitlines():
-            m = self._COMP_RE.match(line)
-            if m and line.rstrip().endswith("{"):
-                cur = []
-                self.computations[m.group(1)] = cur
-                if line.startswith("ENTRY"):
-                    self.entry = m.group(1)
-                continue
-            if line.startswith("}"):
-                cur = None
-                continue
-            if cur is not None and "=" in line:
-                cur.append(line)
-        self._memo: dict[str, tuple[float, float, dict]] = {}
-        self._slice_memo: dict[str, dict[int, float]] = {}
-
-    def _shape_of(self, type_str: str) -> int:
-        return _shape_bytes(type_str)
-
-    def _line_types(self, line: str) -> str:
-        return line
-
-    def _comp_cost(self, name: str) -> tuple[float, float, dict]:
-        """(flops, bytes, collective_by_kind) for one execution of `name`."""
-        if name in self._memo:
-            return self._memo[name]
-        flops = 0.0
-        byts = 0.0
-        coll: dict[str, float] = {}
-        symtab: dict[str, str] = {}
-        lines = self.computations.get(name, [])
-        for line in lines:
-            dm = self._DEF_RE.match(line)
-            if not dm:
-                continue
-            out_name, out_type, op = dm.groups()
-            symtab[out_name] = out_type
-            if op in self._FREE_OPS:
-                continue
-            out_bytes = self._shape_of(out_type)
-
-            if op == "dynamic-slice":
-                # traffic = the slice read + written, NOT the sliced buffer
-                byts += 2 * out_bytes
-                continue
-            if op == "dynamic-update-slice":
-                # traffic = update region read + written (in-place update);
-                # out type is the FULL buffer, so use the update operand
-                ops_m = self._OPERANDS_RE.search(line[dm.end() - 1:])
-                upd_bytes = out_bytes
-                if ops_m:
-                    names = [n.strip().lstrip("%") for n in ops_m.group(1).split(",")]
-                    if len(names) >= 2 and names[1] in symtab:
-                        upd_bytes = self._shape_of(symtab[names[1]])
-                byts += 2 * upd_bytes
-                continue
-            if op in ("gather", "scatter"):
-                byts += 2 * out_bytes
-                continue
-            if op == "dot":
-                # contracted size from lhs operand type x contracting dims
-                ops_m = self._OPERANDS_RE.search(line[dm.end() - 1:])
-                contracted = 1
-                if ops_m:
-                    first = ops_m.group(1).split(",")[0].strip().lstrip("%")
-                    lhs_type = symtab.get(first, "")
-                    cm = self._CONTRACT_RE.search(line)
-                    if cm and lhs_type:
-                        dims_m = _SHAPE_RE.search(lhs_type)
-                        if dims_m and dims_m.group(2):
-                            dims = [int(d) for d in dims_m.group(2).split(",")]
-                            for i in (cm.group(1).split(",") if cm.group(1) else []):
-                                contracted *= dims[int(i)]
-                out_elems = out_bytes / max(
-                    _DTYPE_BYTES.get(_SHAPE_RE.search(out_type).group(1), 4), 1) \
-                    if _SHAPE_RE.search(out_type) else 0
-                flops += 2.0 * out_elems * contracted
-                byts += out_bytes + self._operand_bytes(line, dm, symtab)
-            elif op == "convolution":
-                # rare here; approximate as out_elems * 2 * kernel_elems
-                byts += out_bytes + self._operand_bytes(line, dm, symtab)
-            elif op == "while":
-                body = self._CALL_RE.search(line)
-                trip = 1
-                tm = self._TRIP_RE.search(line)
-                if tm:
-                    trip = int(tm.group(1))
-                if body:
-                    bf, bb, bc = self._comp_cost(body.group(1))
-                    flops += trip * bf
-                    byts += trip * bb
-                    for k, v in bc.items():
-                        coll[k] = coll.get(k, 0.0) + trip * v
-                cond = self._COND_RE.search(line)
-                if cond:
-                    cf, cb, cc = self._comp_cost(cond.group(1))
-                    flops += trip * cf
-                    byts += trip * cb
-            elif op in ("fusion", "call", "custom-call", "async-start"):
-                cm = self._CALL_RE.search(line)
-                if cm:
-                    bf, bb, bc = self._comp_cost(cm.group(1))
-                    flops += bf
-                    # fusion boundary: traffic is the fusion's operands+result,
-                    # NOT the inner ops' buffers.  Operands that the fused
-                    # computation only dynamic-slices (scan reading one layer
-                    # of a stacked param/residual buffer) count as the slice,
-                    # not the whole stack.
-                    byts += out_bytes + self._fusion_operand_bytes(
-                        line, dm, symtab, cm.group(1))
-                    for k, v in bc.items():
-                        coll[k] = coll.get(k, 0.0) + v
-                else:
-                    byts += out_bytes + self._operand_bytes(line, dm, symtab)
-            elif op == "conditional":
-                bm = self._BRANCH_RE.search(line)
-                if bm:
-                    branch_costs = [self._comp_cost(b.strip().lstrip("%"))
-                                    for b in bm.group(1).split(",")]
-                    if branch_costs:
-                        # static bound: the most expensive branch
-                        best = max(branch_costs, key=lambda t: t[0])
-                        flops += best[0]
-                        byts += best[1]
-                        for k, v in best[2].items():
-                            coll[k] = coll.get(k, 0.0) + v
-            else:
-                cmm = _COLLECTIVE_RE.search(op)
-                if cmm:
-                    kind = cmm.group(1)
-                    coll[kind] = coll.get(kind, 0.0) + out_bytes
-                byts += out_bytes + self._operand_bytes(line, dm, symtab)
-        self._memo[name] = (flops, byts, coll)
-        return self._memo[name]
-
-    def _param_slice_bytes(self, comp_name: str) -> dict[int, float]:
-        """For a fused computation: param index -> effective read bytes, for
-        params whose ONLY consumers are dynamic-slice ops."""
-        if comp_name in self._slice_memo:
-            return self._slice_memo[comp_name]
-        lines = self.computations.get(comp_name, [])
-        params: dict[str, int] = {}
-        ptype: dict[str, str] = {}
-        for line in lines:
-            pm = re.match(r"^\s+%?([\w.\-]+)\s*=\s*(\S+\[[^\]]*\](?:\{[^}]*\})?)"
-                          r"\s+parameter\((\d+)\)", line)
-            if pm:
-                params[pm.group(1)] = int(pm.group(3))
-                ptype[pm.group(1)] = pm.group(2)
-        out: dict[int, float] = {}
-        for pname, pidx in params.items():
-            slice_bytes = 0.0
-            ok = True
-            for line in lines:
-                if pname not in line:
-                    continue
-                if f"%{pname} = " in line or line.strip().startswith(f"{pname} ="):
-                    continue
-                dm2 = self._DEF_RE.match(line)
-                if not dm2:
-                    continue
-                # is pname actually an operand here?
-                if not re.search(rf"[(,]\s*%?{re.escape(pname)}\s*[,)]", line):
-                    continue
-                if dm2.group(3) == "dynamic-slice":
-                    slice_bytes += self._shape_of(dm2.group(2))
-                else:
-                    ok = False
-                    break
-            if ok and slice_bytes:
-                out[pidx] = slice_bytes
-        self._slice_memo[comp_name] = out
-        return out
-
-    def _fusion_operand_bytes(self, line: str, dm, symtab: dict,
-                              called: str) -> float:
-        ops_m = self._OPERANDS_RE.search(line[dm.end() - 1:])
-        if not ops_m:
+    def achieved(self, measured_s: float) -> float:
+        """Fraction of the roofline the measurement reaches (0 when the
+        measurement is missing/zero — never a division error)."""
+        if not measured_s or measured_s <= 0 or self.ideal_s <= 0:
             return 0.0
-        slice_map = self._param_slice_bytes(called)
-        total = 0.0
-        for i, nm in enumerate(ops_m.group(1).split(",")):
-            nm = nm.strip().lstrip("%")
-            if i in slice_map:
-                total += slice_map[i]
-            elif nm in symtab:
-                total += self._shape_of(symtab[nm])
-        return total
+        return self.ideal_s / measured_s
 
-    def _operand_bytes(self, line: str, dm, symtab: dict) -> float:
-        ops_m = self._OPERANDS_RE.search(line[dm.end() - 1:])
-        if not ops_m:
-            return 0.0
-        total = 0.0
-        for nm in ops_m.group(1).split(","):
-            nm = nm.strip().lstrip("%")
-            if nm in symtab:
-                total += self._shape_of(symtab[nm])
-        return total
-
-    def totals(self) -> dict:
-        # fusion computations are reached via their callers; entry is root
-        if not self.entry:
-            return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
-                    "collective_by_kind": {}}
-        f, b, c = self._comp_cost(self.entry)
-        return {"flops": f, "bytes": b,
-                "collective_bytes": float(sum(c.values())),
-                "collective_by_kind": c}
-
-    # ---- fused-attention projection -------------------------------------
-    def _multiplicities(self) -> dict[str, float]:
-        """Execution count per computation along the call graph."""
-        mult: dict[str, float] = {}
-
-        def walk(name: str, k: float) -> None:
-            mult[name] = mult.get(name, 0.0) + k
-            for line in self.computations.get(name, []):
-                dm = self._DEF_RE.match(line)
-                if not dm:
-                    continue
-                op = dm.group(3)
-                if op == "while":
-                    tm = self._TRIP_RE.search(line)
-                    trip = int(tm.group(1)) if tm else 1
-                    bm = self._CALL_RE.search(line)
-                    cm = self._COND_RE.search(line)
-                    if bm:
-                        walk(bm.group(1), k * trip)
-                    if cm:
-                        walk(cm.group(1), k * trip)
-                elif op in ("fusion", "call", "custom-call"):
-                    cm2 = self._CALL_RE.search(line)
-                    if cm2:
-                        # boundary op: called computation contributes flops
-                        # but its buffers are internal — no byte walk needed
-                        pass
-
-        walk(self.entry, 1.0) if self.entry else None
-        return mult
-
-    def tile_bytes(self, tile_dims: tuple[int, int]) -> float:
-        """HBM traffic of ops whose result is a [.., blk_q, blk_k]
-        attention tile — the traffic a fused Pallas flash-attention kernel
-        keeps in VMEM (see kernels/flash_attention.py)."""
-        want = {tile_dims, (tile_dims[1], tile_dims[0])}
-        mult = self._multiplicities()
-        total = 0.0
-        for name, lines in self.computations.items():
-            k = mult.get(name)
-            if not k:
-                continue
-            symtab: dict[str, str] = {}
-            for line in lines:
-                dm = self._DEF_RE.match(line)
-                if not dm:
-                    continue
-                out_name, out_type, op = dm.groups()
-                symtab[out_name] = out_type
-                if op in self._FREE_OPS or op == "while":
-                    continue
-
-                def trailing(ts: str) -> tuple | None:
-                    m2 = _SHAPE_RE.search(ts)
-                    if not m2 or not m2.group(2):
-                        return None
-                    dims = [int(d) for d in m2.group(2).split(",")]
-                    return tuple(dims[-2:]) if len(dims) >= 2 else None
-
-                contrib = 0.0
-                if trailing(out_type) in want:
-                    contrib += self._shape_of(out_type)
-                ops_m = self._OPERANDS_RE.search(line[dm.end() - 1:])
-                if ops_m:
-                    for nm in ops_m.group(1).split(","):
-                        nm = nm.strip().lstrip("%")
-                        t = symtab.get(nm)
-                        if t and trailing(t) in want:
-                            contrib += self._shape_of(t)
-                total += k * contrib
-        return total
+    def to_dict(self, measured_s: float | None = None) -> dict:
+        d = {"backend": self.backend, "spec": self.spec.name,
+             "bytes_moved": self.bytes_moved, "flops": self.flops,
+             "memory_s": self.memory_s, "compute_s": self.compute_s,
+             "bound": self.bound, "ideal_s": self.ideal_s}
+        if measured_s is not None:
+            d["achieved_pct"] = round(100.0 * self.achieved(measured_s), 4)
+        return d
 
 
-@dataclasses.dataclass
-class RooflineTerms:
-    arch: str
-    shape: str
-    mesh: str
-    chips: int
-    hlo_flops: float
-    hlo_bytes: float
-    collective_bytes: float
-    collective_by_kind: dict
-    model_flops: float            # analytic 6ND (or serve equivalent)
-    bytes_per_device: float       # peak from memory_analysis
-    compute_s: float = 0.0
-    memory_s: float = 0.0
-    collective_s: float = 0.0
-    tile_bytes: float = 0.0   # attention-tile traffic (fused-kernel removable)
+class RooflineModel:
+    """Analytic FoG roofline for one packed field of groves.
+
+    pack:       a :class:`~repro.forest.pack.ForestPack` — supplies the
+                head/grove/tree/class shape and the dtype-aware table bytes
+    n_features: width of the input rows
+    spec:       :class:`MachineSpec` (default: the TPU v5e target)
+    """
+
+    def __init__(self, pack, n_features: int,
+                 spec: MachineSpec | str = TPU_V5E):
+        self.pack = pack
+        self.n_features = int(n_features)
+        self.spec = SPECS[spec] if isinstance(spec, str) else spec
+
+    # -- per-unit terms ---------------------------------------------------
+    @property
+    def lane_hop_flops(self) -> float:
+        """Walk one grove per head for one lane: O·t trees × (compare +
+        index update per level + C leaf accumulates), plus the MaxDiff
+        gate over the [O, C] state."""
+        p = self.pack
+        walk = p.n_heads * p.grove_size * (2 * p.depth + p.n_classes)
+        gate = 8 * p.n_heads * p.n_classes
+        return float(walk + gate)
 
     @property
-    def memory_s_fused(self) -> float:
-        """Memory term with flash-attention tiles resident in VMEM."""
-        return max(self.hlo_bytes - self.tile_bytes, 0.0) / HBM_BW
-
-    def finalize(self) -> "RooflineTerms":
-        # HLO quantities are PER-DEVICE (the compiled module is the
-        # post-SPMD per-chip program): divide by per-chip peaks only.
-        self.compute_s = self.hlo_flops / PEAK_FLOPS
-        self.memory_s = self.hlo_bytes / HBM_BW
-        self.collective_s = self.collective_bytes / (ICI_LINKS * ICI_BW)
-        return self
+    def lane_hop_bytes(self) -> float:
+        """Per-hop-backend traffic for one lane in one iteration: its
+        grove's slice of the packed tables (dtype-aware), the fp32 row,
+        the [O, C] fp32 probability state read+written, bookkeeping."""
+        p = self.pack
+        return (p.table_bytes / p.n_groves
+                + 4 * self.n_features
+                + 8 * p.n_heads * p.n_classes
+                + _LANE_LOOP_BYTES)
 
     @property
-    def dominant(self) -> str:
-        terms = {"compute": self.compute_s, "memory": self.memory_s,
-                 "collective": self.collective_s}
-        return max(terms, key=terms.get)
+    def lane_io_bytes(self) -> float:
+        """Fused per-lane one-time HBM traffic: fp32 row + scalar knobs in,
+        fp32 [O, C] proba + int32 hops out."""
+        p = self.pack
+        return (4 * self.n_features + _LANE_FUSED_IN_BYTES
+                + 4 * p.n_heads * p.n_classes + 4)
 
-    @property
-    def step_time_s(self) -> float:
-        """No-overlap upper bound (sum) — reported alongside max()."""
-        return max(self.compute_s, self.memory_s, self.collective_s)
+    # -- per-backend estimates -------------------------------------------
+    def estimate(self, backend: str, batch: int, *, iters: float,
+                 hops_total: float | None = None, chunks: int = 1,
+                 compact: bool = False) -> RooflineEstimate:
+        """Model one evaluation.
 
-    @property
-    def useful_flops_ratio(self) -> float:
-        """model FLOPs per chip / compiled FLOPs per chip (remat, causal
-        masking waste, and routing overhead push this below 1)."""
-        per_chip = self.model_flops / self.chips
-        return per_chip / self.hlo_flops if self.hlo_flops else 0.0
-
-    @property
-    def roofline_fraction(self) -> float:
-        """MODEL_FLOPS/(chips*peak) / step_time — 'MFU at the bound'."""
-        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
-        return ideal / self.step_time_s if self.step_time_s else 0.0
-
-    def row(self) -> str:
-        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
-                f"{self.compute_s*1e3:.1f} | {self.memory_s*1e3:.1f} | "
-                f"{self.collective_s*1e3:.1f} | {self.dominant} | "
-                f"{self.model_flops:.3g} | {self.useful_flops_ratio:.2f} | "
-                f"{self.roofline_fraction:.2f} |")
-
-
-def analytic_model_flops(cfg, shape_name: str) -> float:
-    """6ND for train; 2ND per generated token for decode; 2ND_prompt for
-    prefill.  N = active params (MoE-aware)."""
-    from repro.configs.base import param_count
-    from repro.train.loop import SHAPES
-    sp = SHAPES[shape_name]
-    _, active = param_count(cfg)
-    tokens = sp.global_batch * sp.seq_len
-    if sp.kind == "train":
-        return 6.0 * active * tokens
-    if sp.kind == "prefill":
-        return 2.0 * active * tokens
-    # decode: one token per sequence + attention reads over the cache
-    flops = 2.0 * active * sp.global_batch
-    if not cfg.ssm:
-        hd = cfg.resolved_head_dim
-        kv_flops = 4.0 * cfg.n_layers * cfg.n_heads * hd * sp.seq_len
-        flops += kv_flops * sp.global_batch
-    return flops
+        iters:      loop trip count the backend executed — ``max_hops``
+                    for the fixed-trip scan backends, the observed max hop
+                    count for early-exit loops (lazy reference, fused)
+        hops_total: Σ per-lane hops (``batch × mean_hops``); defaults to
+                    ``batch × iters`` (no early exit)
+        chunks:     fused launches per evaluation (engine auto-chunking
+                    re-pins the tables per chunk)
+        compact:    fused live-lane compaction — compute scales with
+                    Σ hops instead of batch × iters
+        """
+        p = self.pack
+        B = float(batch)
+        if hops_total is None:
+            hops_total = B * iters
+        if backend == "fused":
+            byts = chunks * p.table_bytes + B * self.lane_io_bytes
+            lane_hops = hops_total if compact else B * iters
+            flops = lane_hops * self.lane_hop_flops
+        elif backend == "ring":
+            # per-shard pin + the probability state crossing ICI every hop
+            byts = chunks * p.table_bytes + B * self.lane_io_bytes
+            flops = B * iters * self.lane_hop_flops
+        else:  # per-hop backends: reference / reference-lazy / pallas
+            byts = B * iters * self.lane_hop_bytes
+            flops = B * iters * self.lane_hop_flops
+        return RooflineEstimate(backend=backend, spec=self.spec,
+                                bytes_moved=float(byts), flops=float(flops))
 
 
-def extract(compiled, lowered_text: str, *, arch: str, shape: str,
-            mesh_name: str, chips: int, cfg) -> RooflineTerms:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):
-        cost = cost[0]
-    raw_flops = float(cost.get("flops", 0.0))
-    raw_bytes = float(cost.get("bytes accessed", 0.0))
-    model = HloCostModel(lowered_text)
-    tot = model.totals()
-    # trip-count-scaled numbers; raw cost_analysis kept as the lower bound
-    flops = max(tot["flops"], raw_flops)
-    byts = max(tot["bytes"], raw_bytes)
-    coll = tot["collective_by_kind"] or collective_bytes_from_hlo(lowered_text)
-    # fused-attention projection: [blk_q, blk_k] tiles resident in VMEM
-    # when attention runs as the Pallas kernel (validated separately)
-    tile_b = model.tile_bytes((512, 1024))
-    mem = compiled.memory_analysis()
-    bytes_per_dev = getattr(mem, "temp_size_in_bytes", 0) + \
-        getattr(mem, "argument_size_in_bytes", 0) + \
-        getattr(mem, "output_size_in_bytes", 0) - \
-        getattr(mem, "alias_size_in_bytes", 0)
-    terms = RooflineTerms(
-        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
-        hlo_flops=flops, hlo_bytes=byts,
-        collective_bytes=float(sum(coll.values())),
-        collective_by_kind=coll,
-        model_flops=analytic_model_flops(cfg, shape),
-        bytes_per_device=float(bytes_per_dev),
-    ).finalize()
-    terms.tile_bytes = tile_b
-    return terms
+# --------------------------------------------------------------------------
+# deprecation shim: the LM dry-run HLO cost model moved to launch/hlo_cost
+# --------------------------------------------------------------------------
+
+_MOVED = ("PEAK_FLOPS", "HBM_BW", "ICI_BW", "ICI_LINKS", "HloCostModel",
+          "RooflineTerms", "analytic_model_flops", "extract",
+          "collective_bytes_from_hlo", "_shape_bytes", "_SHAPE_RE",
+          "_DTYPE_BYTES", "_COLLECTIVE_RE")
+
+
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.launch.roofline.{name} moved to repro.launch.hlo_cost; "
+            "repro.launch.roofline is now the FoG-specific RooflineModel",
+            DeprecationWarning, stacklevel=2)
+        from repro.launch import hlo_cost
+        return getattr(hlo_cost, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,117 @@
+"""Fused-kernel autotuner: analytic seeding, measured sweep, cache."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.grove import split
+from repro.core.policy import NO_BUDGET
+from repro.forest.pack import ForestPack
+from repro.forest.train import TrainConfig, train_random_forest
+from repro.kernels import autotune
+from repro.kernels.fused_fog import LANE_ALIGN, fit_block_b
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """(pack, x, start, thresh, budget) on a small synthetic forest."""
+    rng = np.random.default_rng(3)
+    X = rng.standard_normal((200, 10)).astype(np.float32)
+    y = (X[:, 0] > 0).astype(np.int32) + 2 * (X[:, 2] > 0).astype(np.int32)
+    rf = train_random_forest(X, y, 4, TrainConfig(n_trees=8, max_depth=4,
+                                                  seed=0))
+    gc = split(rf, 2)
+    pack = ForestPack.from_groves(gc, "fp32")
+    B = 96
+    x = jnp.asarray(X[:B])
+    start = jax.random.randint(jax.random.key(0), (B,), 0, gc.n_groves)
+    thresh = jnp.full((B,), 0.3, jnp.float32)
+    budget = jnp.full((B,), NO_BUDGET, jnp.int32)
+    return pack, x, start, thresh, budget
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_analytic_seed_is_aligned_and_capped(tiny):
+    pack, x, *_ = tiny
+    seed = autotune.analytic_block_b(pack, x.shape[1])
+    assert seed % LANE_ALIGN == 0
+    assert LANE_ALIGN <= seed <= autotune.SEED_CAP
+    fit = fit_block_b(*pack.layout("fused"), n_features=x.shape[1])
+    assert seed <= max(fit, LANE_ALIGN)
+
+
+def test_best_config_untuned_returns_analytic(tiny):
+    pack, x, *_ = tiny
+    cfg = autotune.best_config(pack, x.shape[1])
+    assert cfg.source == "analytic"
+    assert cfg.measured_s is None
+    assert cfg.block_b == autotune.analytic_block_b(pack, x.shape[1])
+
+
+def test_tune_measures_and_caches(tiny):
+    pack, x, start, thresh, budget = tiny
+    won = autotune.tune(pack, x, start, thresh, budget,
+                        max_hops=pack.n_groves, repeats=1,
+                        blocks=[32, 64], persist=False)
+    assert won.source == "measured"
+    assert won.measured_s > 0
+    assert won.block_b in (32, 64)
+    # the engine-facing lookup now returns the measured winner
+    hit = autotune.best_config(pack, x.shape[1])
+    assert hit == won
+    # a different field signature is unaffected
+    other = autotune.best_config(pack, x.shape[1] + 1)
+    assert other.source == "analytic"
+
+
+def test_candidate_blocks_aligned_and_descending(tiny):
+    pack, x, *_ = tiny
+    blocks = autotune.candidate_blocks(pack, x.shape[1], int(x.shape[0]))
+    assert blocks, "feasible pack must yield candidates"
+    assert all(b % LANE_ALIGN == 0 for b in blocks)
+    assert blocks == sorted(blocks, reverse=True)
+    assert blocks[-1] >= LANE_ALIGN
+
+
+def test_cache_file_roundtrip(tiny, tmp_path, monkeypatch):
+    pack, x, start, thresh, budget = tiny
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    won = autotune.tune(pack, x, start, thresh, budget,
+                        max_hops=pack.n_groves, repeats=1, blocks=[32])
+    saved = json.loads(path.read_text())
+    assert len(saved) == 1
+    (cfg,) = saved.values()
+    assert cfg["block_b"] == won.block_b and cfg["compact"] == won.compact
+    # a fresh process (cleared in-memory cache) reloads the file winner
+    autotune.clear_cache()
+    hit = autotune.best_config(pack, x.shape[1])
+    assert hit.source == "cache-file"
+    assert (hit.block_b, hit.compact) == (won.block_b, won.compact)
+
+
+def test_engine_consults_autotune_when_block_b_unset(tiny, monkeypatch):
+    """FogEngine(block_b=None) + fused must route through best_config."""
+    from repro.core.engine import FogEngine
+
+    pack, x, *_ = tiny
+    calls = []
+    real = autotune.best_config
+
+    def spy(p, f):
+        calls.append((p.precision, f))
+        return real(p, f)
+
+    monkeypatch.setattr(autotune, "best_config", spy)
+    eng = FogEngine(pack, backend="fused")
+    assert eng.block_b is None
+    eng.eval(x, jax.random.key(0))
+    assert calls == [("fp32", x.shape[1])]

@@ -160,3 +160,60 @@ def test_canonical_calls_are_warning_free(gc, x128):
         from repro.serve.scheduler import ContinuousBatcher
         ContinuousBatcher(2, lambda t, l: (jnp.zeros((2, 8)), None),
                           lambda slot, prompt: len(prompt))
+
+
+# --------------------------------------------------------------------------
+# launch/roofline -> launch/hlo_cost move (the LM HLO cost model relocated;
+# repro.launch.roofline is now the FoG RooflineModel)
+# --------------------------------------------------------------------------
+
+def test_roofline_module_shim_warns_and_forwards():
+    """Legacy ``from repro.launch.roofline import HloCostModel`` style access
+    warns and returns the exact hlo_cost object."""
+    import repro.launch.hlo_cost as hc
+    import repro.launch.roofline as rl
+
+    for name in ("PEAK_FLOPS", "HBM_BW", "HloCostModel",
+                 "analytic_model_flops", "_shape_bytes"):
+        with pytest.warns(DeprecationWarning, match=f"{name} moved"):
+            got = getattr(rl, name)
+        assert got is getattr(hc, name)
+    # non-moved garbage still raises AttributeError, not a warning
+    with pytest.raises(AttributeError):
+        rl.no_such_symbol
+
+
+def test_roofline_shim_objects_still_work():
+    """The forwarded HloCostModel parses HLO identically to the new home."""
+    import repro.launch.hlo_cost as hc
+    import repro.launch.roofline as rl
+
+    hlo = ("HloModule t\n\nENTRY %main (x: f32[8,8]) -> f32[8,8] {\n"
+           "  %x = f32[8,8]{1,0} parameter(0)\n"
+           "  ROOT %d = f32[8,8]{1,0} dot(%x, %x), "
+           "lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n")
+    with pytest.warns(DeprecationWarning):
+        legacy = rl.HloCostModel(hlo).totals()
+    assert legacy == hc.HloCostModel(hlo).totals()
+
+
+def test_roofline_report_legacy_mode_warns_and_guards_division():
+    """The LM dry-run JSONL path in benchmarks.roofline_report is deprecated
+    but still callable — now with guarded divisions (chips=0, flops=0)."""
+    from benchmarks import roofline_report as rr
+
+    rec = {"arch": "a", "shape": "s", "mesh": "m", "hlo_flops": 0,
+           "hlo_bytes": 0, "collective_bytes": 0, "model_flops": 0.0,
+           "chips": 0}
+    with pytest.warns(DeprecationWarning, match="derive"):
+        row = rr.derive(rec)
+    assert row["useful_flops_ratio"] == 0.0
+    assert row["roofline_fraction"] == 0.0
+    with pytest.warns(DeprecationWarning, match="table"):
+        lines = rr.table([row])
+    assert len(lines) == 3
+
+    # the new engine-roofline entry points are warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rr.engine_table(rr.engine_rows("BENCH_engine.json"))

@@ -479,3 +479,72 @@ def test_positional_policy_is_canonical(gc, x256):
         res = FogEngine(gc).eval(x256, key, pol)
     want = FogEngine(gc).eval(x256, key, policy=pol)
     _assert_conforms(res, want, exact_proba=True)
+
+
+# ---------------------------------------------------------------------------
+# adversarial fused shapes: prime batches x auto-chunk x int8 under a tiny
+# monkeypatched VMEM budget, and engine-level live-lane compaction
+# ---------------------------------------------------------------------------
+
+def test_prime_batch_auto_chunk_int8_tiny_vmem(gc, x257, monkeypatch):
+    """Prime batch x chunk_b="auto" x int8 with VMEM_BUDGET squeezed until
+    the real forest's pack must chunk: the auto-chunker must pick a
+    LANE_ALIGN-aligned chunk whose modeled footprint stays under the tiny
+    budget, and the chunked+padded evaluation must stay bit-identical to
+    the unconstrained reference."""
+    import repro.kernels.fused_fog as ff
+    import repro.kernels.tree_traverse as tt
+    from repro.kernels.fused_fog import (LANE_ALIGN, fit_block_b,
+                                         vmem_working_set)
+
+    key = jax.random.key(11)
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves, precision="int8",
+                    chunk_b="auto")
+    want = FogEngine(gc, precision="int8").eval(x257, key,
+                                                policy=pol.replace(
+                                                    chunk_b=None))
+
+    eng = FogEngine(gc, backend="fused", block_b=256)
+    pack = eng.tables.pack("int8")
+    tables = pack.layout("fused")
+    # a budget that admits the int8 tables plus ~40 lanes, far below B=257
+    lane = (vmem_working_set(*tables, block_b=1, n_features=x257.shape[1])
+            - vmem_working_set(*tables, block_b=0,
+                               n_features=x257.shape[1]))
+    tiny_budget = vmem_working_set(*tables, block_b=0,
+                                   n_features=x257.shape[1]) + 40 * lane
+    # fused_fog imports VMEM_BUDGET by value: patch BOTH module globals
+    monkeypatch.setattr(ff, "VMEM_BUDGET", tiny_budget)
+    monkeypatch.setattr(tt, "VMEM_BUDGET", tiny_budget)
+
+    fit = fit_block_b(*tables, n_features=x257.shape[1])
+    assert 0 < fit < x257.shape[0]
+    assert fit % LANE_ALIGN == 0, "auto-chunk fit must be lane-aligned"
+    assert vmem_working_set(*tables, block_b=fit,
+                            n_features=x257.shape[1]) < tiny_budget
+    cb = eng._resolve_chunk("fused", pack, x257.shape[0], 256, "auto",
+                            x257.shape[1])
+    assert cb == fit
+
+    got = eng.eval(x257, key, policy=pol)
+    _assert_conforms(got, want)
+
+
+@pytest.mark.parametrize("B", [97, 257])
+def test_engine_compaction_bit_identical(gc, trained, B):
+    """compact on vs off through the full engine path (chunking, padding,
+    autotuned block_b) — bit-identical hops, labels and probabilities."""
+    ds, _ = trained
+    x = jnp.asarray(ds.x_test[:B])
+    key = jax.random.key(13)
+    pol = FogPolicy(threshold=0.3, max_hops=gc.n_groves)
+    off = FogEngine(gc, backend="fused", compact=False).eval(x, key,
+                                                             policy=pol)
+    on = FogEngine(gc, backend="fused", compact=True).eval(x, key,
+                                                           policy=pol)
+    _assert_conforms(on, off, exact_proba=True)
+    # and via the policy knob, overriding the engine default
+    pol_on = pol.replace(compact=True)
+    via_pol = FogEngine(gc, backend="fused", compact=False).eval(
+        x, key, policy=pol_on)
+    _assert_conforms(via_pol, off, exact_proba=True)

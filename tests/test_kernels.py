@@ -430,3 +430,115 @@ def test_ssd_chunked_kernel_backend_equivalence():
                                rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel VMEM accounting, interpret resolution, live-lane compaction
+# ---------------------------------------------------------------------------
+
+def test_vmem_lane_bytes_accounting():
+    """Byte-exact per-lane model: fp32 row + two [O, C] fp32 accumulators +
+    [t] x (depth + 2) int32 walk state + five 4-byte scalars + the int8
+    live mask at ONE byte (the historical bug charged it four)."""
+    from repro.kernels.fused_fog import vmem_lane_bytes
+    got = vmem_lane_bytes(n_heads=2, n_classes=10, grove_size=3, depth=6,
+                          n_features=16)
+    words = 16 + 2 * 2 * 10 + 3 * (6 + 2) + 5
+    assert got == 4 * words + 1
+    # one extra lane of an int8-masked field must cost an ODD byte count —
+    # a multiple of 4 would mean the mask is charged at scalar width again
+    assert got % 4 == 1
+
+
+def test_fit_block_b_aligned():
+    """fit_block_b rounds DOWN to a lane-tiling multiple of 8 (731-style
+    raw quotients defeat TPU sublane tiling), keeps sub-8 slivers
+    unrounded, and its modeled footprint stays under the budget."""
+    from repro.kernels.fused_fog import (LANE_ALIGN, fit_block_b,
+                                         vmem_working_set)
+    from repro.kernels.tree_traverse import VMEM_BUDGET
+    rng = np.random.default_rng(5)
+    pack = _packed_grove(rng, t=4, depth=5, C=7, F=16, precision="fp32")
+    tables = pack.layout("fused")
+    fit = fit_block_b(*tables, n_features=16)
+    assert fit > 0 and fit % LANE_ALIGN == 0
+    assert vmem_working_set(*tables, block_b=fit,
+                            n_features=16) < VMEM_BUDGET
+    # the next aligned size up must NOT fit (the fit is maximal)
+    assert vmem_working_set(*tables, block_b=fit + LANE_ALIGN,
+                            n_features=16) >= VMEM_BUDGET
+
+
+def test_resolve_interpret_derives_from_backend(monkeypatch):
+    """None derives from jax.default_backend(): interpreted off-TPU,
+    compiled Mosaic on TPU; an explicit bool always wins."""
+    import repro.kernels.tree_traverse as tt
+    assert tt.resolve_interpret(True) is True
+    assert tt.resolve_interpret(False) is False
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert tt.resolve_interpret(None) is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert tt.resolve_interpret(None) is False
+
+
+def test_fused_fog_interpret_default_not_hardcoded(monkeypatch):
+    """fused_fog_pallas(interpret=None) must consult the runtime backend —
+    the historical interpret=True default would silently serve the
+    interpreted kernel on a real TPU.  On this CPU container the derived
+    flag is True, and pallas_call must receive exactly that."""
+    import repro.kernels.fused_fog as ff
+    seen = {}
+    real = ff.pl.pallas_call
+
+    def spy(*a, **kw):
+        seen["interpret"] = kw.get("interpret")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ff.pl, "pallas_call", spy)
+    rng = np.random.default_rng(7)
+    pack = _packed_grove(rng, t=3, depth=4, C=5, F=10, precision="fp32")
+    x = jnp.asarray(rng.normal(size=(16, 10)).astype(np.float32))
+    ff.fused_fog_pallas(*pack.layout("fused")[:3], x,
+                        jnp.zeros((16,), jnp.int32),
+                        jnp.full((16,), 0.3, jnp.float32),
+                        jnp.full((16,), 2**31 - 1, jnp.int32),
+                        *pack.layout("fused")[3:], max_hops=1, block_b=16)
+    assert seen["interpret"] is True          # derived: CPU container
+    ff.fused_fog_pallas(*pack.layout("fused")[:3], x,
+                        jnp.zeros((16,), jnp.int32),
+                        jnp.full((16,), 0.3, jnp.float32),
+                        jnp.full((16,), 2**31 - 1, jnp.int32),
+                        *pack.layout("fused")[3:], max_hops=1, block_b=16,
+                        interpret=True)
+    assert seen["interpret"] is True          # explicit override honored
+
+
+def test_fused_compaction_bit_identical_kernel_level():
+    """Live-lane compaction is a pure relocation: hops AND probabilities
+    must be bit-identical with it on vs off, at a prime batch size that
+    forces dead-lane padding, across precisions."""
+    from repro.core.grove import GroveCollection
+    from repro.core.policy import NO_BUDGET
+    from repro.forest.pack import ForestPack
+    rng = np.random.default_rng(31)
+    G, t, depth, C, F, B = 6, 3, 4, 5, 12, 149   # prime B
+    feature = rng.integers(0, F, size=(G, t, 2**depth - 1)).astype(np.int32)
+    threshold = rng.normal(size=(G, t, 2**depth - 1)).astype(np.float32)
+    leaf = rng.dirichlet(np.ones(C), size=(G, t, 2**depth)).astype(np.float32)
+    gc = GroveCollection(jnp.asarray(feature), jnp.asarray(threshold),
+                         jnp.asarray(leaf))
+    x = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+    start = jax.random.randint(jax.random.key(2), (B,), 0, G)
+    thresh = jnp.full((B,), 0.25, jnp.float32)
+    budget = jnp.full((B,), NO_BUDGET, jnp.int32)
+    for precision in ("fp32", "int8"):
+        pack = ForestPack.from_groves(gc, precision)
+        tables = pack.layout("fused")
+        p0, h0 = ops.fused_fog(*tables[:3], x, start, thresh, budget,
+                               *tables[3:], max_hops=G, block_b=32,
+                               compact=False)
+        p1, h1 = ops.fused_fog(*tables[:3], x, start, thresh, budget,
+                               *tables[3:], max_hops=G, block_b=32,
+                               compact=True)
+        np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
