@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all bench bench-registry quickstart
+.PHONY: test test-all bench bench-registry bench-serve bench-serve-profile \
+	quickstart
 
 # tier-1 gate: fast default suite (slow marks + hypothesis sweeps excluded)
 test:
@@ -21,6 +22,17 @@ bench-full:
 # multi-tenant registry serving bench; writes BENCH_registry.json
 bench-registry:
 	$(PY) -m benchmarks.registry_bench --smoke
+
+# closed-loop serving bench (virtual + wall clock); writes BENCH_serve.json
+bench-serve:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+		$(PY) -m benchmarks.serve_bench --smoke
+
+# per-step host/device breakdown of the packed hot loop.  --no-trace by
+# default: jax.profiler.trace costs >100x per step on CPU hosts and would
+# swamp the numbers; drop the flag to also write /tmp/serve-trace
+bench-serve-profile:
+	$(PY) -m benchmarks.serve_profile --devices 4 --steps 200 --no-trace
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -228,7 +228,7 @@ def run(out_path: Path | str | None = OUT_PATH) -> list[str]:
                 f"{name} diverged on hops"
         energy_pj = res.energy_report().per_example_pj
         roof = RooflineModel(eng.tables.pack(prec), x.shape[1]).estimate(
-            "fused" if name.startswith("fused") else "reference",
+            name,
             B,
             iters=gc.n_groves if name in scan_rows else int(hops.max()),
             hops_total=float(hops.sum()),

@@ -1,0 +1,180 @@
+"""Per-step host/device profile of the packed serving hot loop.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.serve_profile --steps 200
+
+Runs a saturated ContinuousBatcher burst on the device-resident packed
+path (optionally pipelined) under ``jax.profiler.trace`` and prints a
+per-step breakdown table:
+
+- the batcher's own ``phase_ns`` accumulators (harvest / bookkeep /
+  telemetry / refill / dispatch) — host time by phase, per step;
+- the blocking device service time per dispatch, measured separately so
+  host-vs-device attribution does not rely on wall subtraction (on a
+  single-core runner device compute timeshares into whichever host phase
+  runs concurrently, so phase walls alone overstate the host);
+- aggregate throughput for the profiled window.
+
+The XLA trace itself lands in ``--trace-dir`` (default
+``/tmp/serve-trace``), viewable with TensorBoard's profile plugin or
+Perfetto; pass ``--no-trace`` to skip it (the table never needs it).
+
+This is ``make bench-serve-profile``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _force_devices(n: int) -> None:
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " " + flag).strip()
+
+
+def profile(n_devices: int, span: int, steps: int, telemetry_every: int,
+            pipeline: bool, trace_dir: str | None, seed: int = 0) -> dict:
+    import numpy as np
+    import jax
+    from benchmarks.common import forest_for
+    from repro.core.grove import split
+    from repro.core.policy import NO_BUDGET, FogPolicy
+    from repro.data import make_dataset
+    from repro.launch.mesh import serve_devices
+    from repro.serve.dispatch import DeviceDispatcher, ForestReplicaServer
+    from repro.serve.scheduler import ContinuousBatcher, Request
+
+    ds = make_dataset("penbased")
+    gc = split(forest_for("penbased"), 2)
+    n_slots = span * n_devices
+
+    server = ForestReplicaServer(gc, ds.x_test.shape[1], backend="fused",
+                                 precisions=("fp32",), seed=seed)
+    dispatcher = DeviceDispatcher(server.packed_factory,
+                                  serve_devices(n_devices))
+    dispatcher.bind(n_slots)
+
+    def batcher():
+        return ContinuousBatcher(
+            n_slots, None, server.prefill, eos_id=-1,
+            default_policy=FogPolicy(threshold=0.7, precision="fp32"),
+            dispatcher=dispatcher, pipeline=pipeline,
+            telemetry_every=telemetry_every)
+
+    def saturate(b, n):
+        for rid in range(n):
+            b.submit(Request(rid=rid,
+                             prompt=ds.x_test[rid % len(ds.x_test)],
+                             max_new_tokens=1))
+
+    # warm: compile the program, fault in every path once
+    b = batcher()
+    saturate(b, 2 * n_slots)
+    while b.active or b.queue:
+        b.step()
+    b.flush()
+
+    # blocking device service time, measured on its own (not by phase-wall
+    # subtraction): one full-span dispatch + harvest per device
+    lanes = np.arange(span, dtype=np.int64)
+    rows = np.resize(ds.x_test.astype(np.float32),
+                     (span, ds.x_test.shape[1]))
+    dispatcher.admit_lanes(lanes, rows,
+                           np.full((span,), 0.7, np.float32),
+                           np.full((span,), NO_BUDGET, np.int32))
+    for _ in range(2):
+        dispatcher.dispatch_packed(lanes, 0.7, NO_BUDGET, precision="fp32")
+        dispatcher.harvest_packed(n_slots)
+    svc = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        dispatcher.dispatch_packed(lanes, 0.7, NO_BUDGET, precision="fp32")
+        dispatcher.harvest_packed(n_slots)
+        svc = min(svc, time.perf_counter() - t0)
+    dispatcher.retire_lanes(lanes)
+
+    # the profiled window: a fresh saturated batcher, `steps` real steps
+    b = batcher()
+    n_requests = (steps + 2) * n_slots
+    saturate(b, n_requests)
+    ctx = (jax.profiler.trace(trace_dir) if trace_dir is not None
+           else _null_ctx())
+    t0 = time.perf_counter()
+    with ctx:
+        for _ in range(steps):
+            b.step()
+    wall = time.perf_counter() - t0
+    b.flush()
+
+    done = len(b.completed)
+    per_step = {k: v / 1e3 / max(b.n_steps, 1)
+                for k, v in b.phase_ns.items()}
+    return dict(
+        n_devices=n_devices, span=span, n_slots=n_slots, steps=b.n_steps,
+        pipeline=pipeline, telemetry_every=telemetry_every,
+        wall_s=wall, completed=done, rps=done / wall,
+        svc_us=svc * 1e6, phase_us_per_step=per_step,
+        trace_dir=trace_dir)
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def report(res: dict) -> None:
+    phases = res["phase_us_per_step"]
+    host_total = sum(phases.values())
+    step_us = res["wall_s"] * 1e6 / max(res["steps"], 1)
+    print(f"[serve_profile] {res['n_devices']} device(s), span "
+          f"{res['span']} ({res['n_slots']} slots), {res['steps']} steps, "
+          f"pipeline={res['pipeline']}, "
+          f"telemetry_every={res['telemetry_every']}")
+    print(f"[serve_profile] {res['rps']:.0f} req/s wall "
+          f"({step_us:.0f} us/step); device svc "
+          f"{res['svc_us']:.0f} us/dispatch (blocking, measured solo)")
+    print(f"{'phase':<12} {'us/step':>9} {'% of step':>10}")
+    for k in ("harvest", "refill", "dispatch", "bookkeep", "telemetry"):
+        v = phases.get(k, 0.0)
+        print(f"{k:<12} {v:>9.1f} {100 * v / max(step_us, 1e-9):>9.1f}%")
+    print(f"{'(host sum)':<12} {host_total:>9.1f} "
+          f"{100 * host_total / max(step_us, 1e-9):>9.1f}%")
+    print("note: on a 1-core runner device compute timeshares into the "
+          "host phases, so the phase walls overstate pure host time; the "
+          "solo svc line is the device floor")
+    if res["trace_dir"]:
+        print(f"[serve_profile] XLA trace written to {res['trace_dir']} "
+              "(TensorBoard profile plugin / Perfetto)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--span", type=int, default=256,
+                    help="lanes per device (n_slots = span * devices)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--telemetry-every", type=int, default=8)
+    ap.add_argument("--sync", action="store_true",
+                    help="synchronous step (default is pipelined)")
+    ap.add_argument("--trace-dir", default="/tmp/serve-trace")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip jax.profiler.trace (breakdown table only)")
+    args = ap.parse_args()
+
+    _force_devices(args.devices)
+    res = profile(args.devices, args.span, args.steps,
+                  args.telemetry_every, pipeline=not args.sync,
+                  trace_dir=None if args.no_trace else args.trace_dir)
+    report(res)
+
+
+if __name__ == "__main__":
+    main()

@@ -295,6 +295,107 @@ def _eval_core(pack: ForestPack, x, start, thresh, budget, max_hops: int,
 
 
 # --------------------------------------------------------------------------
+# device-resident lane state (the serving plane's donated splice path)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0,))
+def _splice(buf, idx, vals):
+    # mode="drop": padding indices point one past the end and fall away,
+    # so every splice width compiles once per power-of-two pad size
+    return buf.at[idx].set(vals, mode="drop")
+
+
+@jax.jit
+def _splice_copy(buf, idx, vals):
+    return buf.at[idx].set(vals, mode="drop")
+
+
+def splice_lanes(buf: jax.Array, idx, vals, *,
+                 donate: bool = True) -> jax.Array:
+    """In-place row update of a device-resident lane buffer.
+
+    With ``donate=True`` (the default) ``buf`` is DONATED: the caller must
+    replace its reference with the return value
+    (``buf = splice_lanes(buf, idx, vals)``).  Pass ``donate=False`` when
+    an in-flight async computation may still be READING ``buf`` — donating
+    a buffer with live readers stalls the enqueue until they drain, which
+    serializes a double-buffered dispatch pipeline; the copying splice
+    keeps the enqueue non-blocking and costs one buffer copy (trivial at
+    per-span row-buffer sizes).
+
+    ``idx`` / the leading axis of ``vals`` are padded to the next power of
+    two (capped at the buffer length) with out-of-range indices that
+    ``mode="drop"`` discards, so admit/retire bursts of any size reuse a
+    handful of compiled splice programs instead of one per burst width.
+    """
+    idx = np.asarray(idx, np.int32).reshape(-1)
+    n = int(buf.shape[0])
+    vals = np.asarray(vals)
+    if idx.size == 0:
+        return buf
+    width = min(n, 1 << max(0, int(idx.size - 1).bit_length()))
+    pad = width - idx.size
+    if pad > 0:
+        idx = np.concatenate([idx, np.full((pad,), n, np.int32)])
+        vals = np.concatenate(
+            [vals, np.zeros((pad,) + vals.shape[1:], vals.dtype)])
+    elif pad < 0:
+        raise ValueError(
+            f"splice of {idx.size} lanes into a {n}-lane buffer")
+    fn = _splice if donate else _splice_copy
+    return fn(buf, idx, vals.astype(buf.dtype, copy=False))
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _splice3(x, thr, bud, idx, rows, t, b):
+    return (x.at[idx].set(rows, mode="drop"),
+            thr.at[idx].set(t, mode="drop"),
+            bud.at[idx].set(b, mode="drop"))
+
+
+@jax.jit
+def _splice3_copy(x, thr, bud, idx, rows, t, b):
+    return (x.at[idx].set(rows, mode="drop"),
+            thr.at[idx].set(t, mode="drop"),
+            bud.at[idx].set(b, mode="drop"))
+
+
+def splice_slot_state(x: jax.Array, thr: jax.Array, bud: jax.Array,
+                      idx, rows, t, b, *,
+                      donate: bool = True):
+    """Fused :func:`splice_lanes` over a replica's THREE slot buffers
+    (feature rows, thresholds, hop budgets) sharing ONE lane index set —
+    a refill burst costs a single jitted launch instead of three.  Same
+    power-of-two padding / ``mode="drop"`` program reuse and the same
+    donation contract: with ``donate=True`` all three buffers are donated
+    and must be rebound to the returned triple; ``donate=False`` copies,
+    for callers whose previous dispatch may still be reading them."""
+    idx = np.asarray(idx, np.int32).reshape(-1)
+    if idx.size == 0:
+        return x, thr, bud
+    n = int(x.shape[0])
+    rows = np.asarray(rows)
+    t = np.asarray(t)
+    b = np.asarray(b)
+    width = min(n, 1 << max(0, int(idx.size - 1).bit_length()))
+    pad = width - idx.size
+    if pad > 0:
+        idx = np.concatenate([idx, np.full((pad,), n, np.int32)])
+        rows = np.concatenate(
+            [rows, np.zeros((pad,) + rows.shape[1:], rows.dtype)])
+        t = np.concatenate([t, np.zeros((pad,), t.dtype)])
+        b = np.concatenate([b, np.zeros((pad,), b.dtype)])
+    elif pad < 0:
+        raise ValueError(
+            f"splice of {idx.size} lanes into a {n}-lane buffer")
+    fn = _splice3 if donate else _splice3_copy
+    return fn(x, thr, bud, idx,
+              rows.astype(x.dtype, copy=False),
+              t.astype(thr.dtype, copy=False),
+              b.astype(bud.dtype, copy=False))
+
+
+# --------------------------------------------------------------------------
 # packed-table ownership
 # --------------------------------------------------------------------------
 

@@ -186,6 +186,99 @@ class FogPolicy:
         return b
 
 
+# -- device-resident per-lane policy state (the packed serving path) -------
+#
+# The continuous batcher's packed fast path keeps each span's per-lane
+# threshold / hop-budget vectors RESIDENT on the serving device and splices
+# only the lanes that changed (admit / retire), instead of re-assembling and
+# re-uploading full vectors every step.  Lanes without an explicit
+# per-request policy carry sentinels — NaN threshold / negative budget —
+# that the jitted dispatch resolves against the step's default rung
+# (``jnp.where``), so a governor rung change never forces a re-splice.
+# Retired lanes are stamped DEAD: threshold -1 confirms on the first hop
+# (MaxDiff >= 0 > -1 always) and budget 1 hard-caps it, so empty lanes cost
+# one hop and compact away instead of walking the default policy.
+
+THRESH_DEFAULT = float("nan")
+BUDGET_DEFAULT = -1
+DEAD_THRESH = -1.0
+DEAD_BUDGET = 1
+
+
+def lane_knobs(policy: "FogPolicy | None") -> tuple[float, int]:
+    """One lane's resident (threshold, hop_budget) encoding: concrete
+    values for an explicit policy (an unset hop_budget is NO_BUDGET — the
+    per-request contract fully overrides the default, matching
+    :func:`assemble`), default sentinels otherwise."""
+    if policy is None:
+        return THRESH_DEFAULT, BUDGET_DEFAULT
+    # float()/int() accept python numbers, np scalars and 0-d arrays
+    # directly; wrapping in np.asarray costs ~2us per lane in the refill
+    bud = (int(policy.hop_budget)
+           if policy.hop_budget is not None else NO_BUDGET)
+    return float(policy.threshold), bud
+
+
+class LanePolicies:
+    """Host mirror of one span's resident per-lane policy vectors, with
+    dirty-lane tracking: the serving replica drains :meth:`take_dirty` into
+    a donated device splice right before each dispatch.  All lanes start
+    DEAD (the span serves nothing until admits arrive)."""
+
+    def __init__(self, n: int):
+        self.n = int(n)
+        self.thresh = np.full((n,), DEAD_THRESH, np.float32)
+        self.budget = np.full((n,), DEAD_BUDGET, np.int32)
+        self._dirty = np.zeros((n,), bool)
+
+    def stamp(self, lane: int, thr: float, bud: int) -> None:
+        """Raw per-lane write (admit resolved knobs, flush re-stamps)."""
+        self.thresh[lane] = thr
+        self.budget[lane] = bud
+        self._dirty[lane] = True
+
+    def stamp_many(self, lanes, thr, bud) -> None:
+        """Vectorized :meth:`stamp` — the hot-loop refill stages one bulk
+        write per step instead of a Python call per lane."""
+        self.thresh[lanes] = thr
+        self.budget[lanes] = bud
+        self._dirty[lanes] = True
+
+    def admit(self, lane: int, policy: "FogPolicy | None" = None) -> None:
+        self.stamp(lane, *lane_knobs(policy))
+
+    def retire(self, lane: int) -> None:
+        self.stamp(lane, DEAD_THRESH, DEAD_BUDGET)
+
+    def retire_many(self, lanes) -> None:
+        self.stamp_many(lanes, DEAD_THRESH, DEAD_BUDGET)
+
+    @property
+    def dirty(self) -> bool:
+        return bool(self._dirty.any())
+
+    def take_dirty(self):
+        """``(idx, thresh, budget)`` of every lane staged since the last
+        take (idx ascending for deterministic splices), clearing the
+        mask."""
+        idx = np.flatnonzero(self._dirty).astype(np.int32)
+        self._dirty[idx] = False
+        return idx, self.thresh[idx], self.budget[idx]
+
+    def resolve(self, default: "FogPolicy") -> tuple[np.ndarray, np.ndarray]:
+        """The full effective vectors under ``default`` — the host-side
+        reference of what the jitted ``jnp.where`` resolution computes
+        (tests + the synchronous conformance path)."""
+        thr = np.where(np.isnan(self.thresh),
+                       np.float32(np.asarray(default.threshold)),
+                       self.thresh).astype(np.float32)
+        def_bud = (int(np.asarray(default.hop_budget))
+                   if default.hop_budget is not None else NO_BUDGET)
+        bud = np.where(self.budget < 0, np.int32(def_bud),
+                       self.budget).astype(np.int32)
+        return thr, bud
+
+
 def margin_backend(backend: "str | None") -> str:
     """Map an engine backend to the confidence-margin implementation the LM
     early-exit gate runs: kernel-flavored backends ("pallas", "fused") route

@@ -177,16 +177,24 @@ class RooflineModel:
                     re-pins the tables per chunk)
         compact:    fused live-lane compaction — compute scales with
                     Σ hops instead of batch × iters
+
+        ``backend`` may be any engine row name (``"fused-compact"``,
+        ``"pallas-chunked"``, ...); the traffic class is derived from its
+        root (``fused*`` pins tables once per launch, ``ring*`` adds the
+        ICI hop state, everything else — reference / reference-lazy /
+        pallas — streams tables per hop) while the estimate reports the
+        full name, so benchmark rows keep their own labels.
         """
         p = self.pack
         B = float(batch)
         if hops_total is None:
             hops_total = B * iters
-        if backend == "fused":
+        root = backend.split("-")[0]
+        if root == "fused":
             byts = chunks * p.table_bytes + B * self.lane_io_bytes
             lane_hops = hops_total if compact else B * iters
             flops = lane_hops * self.lane_hop_flops
-        elif backend == "ring":
+        elif root == "ring":
             # per-shard pin + the probability state crossing ICI every hop
             byts = chunks * p.table_bytes + B * self.lane_io_bytes
             flops = B * iters * self.lane_hop_flops

@@ -90,6 +90,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--shed-policy", default="reject",
                     choices=["reject", "oldest"],
                     help="who is shed when the queue is full")
+    ap.add_argument("--sync", action="store_true",
+                    help="registry mode: synchronous packed step instead "
+                         "of the default double-buffered pipeline (host "
+                         "bookkeeping overlapped with device compute)")
+    ap.add_argument("--telemetry-every", type=int, default=None,
+                    help="registry mode: replay buffered telemetry every "
+                         "k harvests instead of per step (default 8; the "
+                         "LM decode path accounts inline and only "
+                         "accepts 1)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -137,7 +146,9 @@ def _serve_registry(args) -> None:
         devices = serve_devices(args.devices)
     else:
         devices = jax.devices()[:1]
-    dispatcher = DeviceDispatcher(server.factory, devices)
+    # the packed replica protocol: device-resident slot state + fused
+    # dispatch, which is what makes the pipelined step safe
+    dispatcher = DeviceDispatcher(server.packed_factory, devices)
 
     default_policy = FogPolicy(threshold=args.thresh,
                                hop_budget=args.hop_budget,
@@ -157,7 +168,11 @@ def _serve_registry(args) -> None:
                                 governor=ledger, dispatcher=dispatcher,
                                 registry=registry,
                                 max_queue=args.max_queue,
-                                shed_policy=args.shed_policy)
+                                shed_policy=args.shed_policy,
+                                pipeline=not args.sync,
+                                telemetry_every=(args.telemetry_every
+                                                 if args.telemetry_every
+                                                 is not None else 8))
     rng = np.random.default_rng(args.seed)
     admitted = 0
     for rid in range(args.requests):
@@ -199,6 +214,9 @@ def main() -> None:
     if args.devices > 1 and args.slots % args.devices:
         ap.error(f"--slots {args.slots} must divide evenly over "
                  f"--devices {args.devices} (fixed per-device spans)")
+    if args.telemetry_every is not None and args.telemetry_every != 1:
+        ap.error("--telemetry-every > 1 needs the packed registry plane "
+                 "(--registry DIR); the LM decode path accounts inline")
 
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     if cfg.frontend:

@@ -40,9 +40,10 @@ from functools import partial
 from typing import Callable, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import NO_BUDGET, FogPolicy
+from repro.core.policy import NO_BUDGET, FogPolicy, LanePolicies
 
 
 def replicate(tree, devices: Sequence) -> list:
@@ -65,6 +66,11 @@ class Pending:
     # the (model, version) registry bucket this call serves (None = the
     # single built-in model)
     bucket: tuple | None = None
+    # packed-protocol outputs (the resident fast path): argmax labels and
+    # per-lane modeled pJ computed inside the dispatch, so harvest never
+    # downloads [span, C] logits or re-prices hops on the host
+    nxt: object | None = None    # [span] int32 device array
+    energy: object | None = None  # [span] float32 device array
 
 
 class DeviceDispatcher:
@@ -185,6 +191,103 @@ class DeviceDispatcher:
             out.append(p)
         return out
 
+    # -- the packed (device-resident) cycle -------------------------------
+    @property
+    def packed(self) -> bool:
+        """True when every replica speaks the packed protocol: resident
+        slot state updated via :meth:`admit_lane` / :meth:`retire_lane`
+        splices, dispatches that take only the step's default knobs, and
+        ``(next, hops, energy)`` outputs (see
+        :meth:`ForestReplicaServer.packed_factory`)."""
+        if self._fns is None:
+            raise ValueError("dispatcher not bound; construct the batcher "
+                             "(or call bind) first")
+        return all(getattr(fn, "packed", False) for fn in self._fns)
+
+    def admit_lane(self, lane: int, row, thr: float, bud: int) -> None:
+        """Stage one lane's feature row + resolved policy knobs onto its
+        replica (applied as a donated device splice at the next dispatch).
+        ``row=None`` re-stamps the policy knobs only (rung re-stamps after
+        a deferred-telemetry flush)."""
+        self._fns[lane // self.span].admit(lane % self.span, row, thr, bud)
+
+    def admit_lanes(self, lanes, rows, thr, bud) -> None:
+        """Bulk :meth:`admit_lane`: one vectorized staging write per
+        intersecting replica instead of a Python call per lane.  ``rows``
+        is ``[k, n_features]`` aligned with ``lanes`` (or None for a
+        knob-only re-stamp); ``thr`` / ``bud`` are ``[k]``."""
+        lanes = np.asarray(lanes, np.int64)
+        thr = np.asarray(thr, np.float32)
+        bud = np.asarray(bud, np.int32)
+        devs = lanes // self.span
+        for d in np.unique(devs):
+            m = devs == d
+            self._fns[int(d)].admit_many(
+                lanes[m] - int(d) * self.span,
+                None if rows is None else rows[m], thr[m], bud[m])
+
+    def retire_lane(self, lane: int) -> None:
+        """Stage one lane DEAD on its replica (freed slot: exits on hop 1
+        until re-admitted; an admit in the same step overrides it)."""
+        self._fns[lane // self.span].retire(lane % self.span)
+
+    def retire_lanes(self, lanes) -> None:
+        """Bulk :meth:`retire_lane` (one staging write per replica)."""
+        lanes = np.asarray(lanes, np.int64)
+        devs = lanes // self.span
+        for d in np.unique(devs):
+            self._fns[int(d)].retire_many(
+                lanes[devs == d] - int(d) * self.span)
+
+    def dispatch_packed(self, lanes, default_thresh: float,
+                        default_budget: int, precision: str | None = None,
+                        bucket: tuple | None = None) -> list[Pending]:
+        """Enqueue one bucket's lanes on the packed protocol, without
+        blocking: every intersecting device runs its whole span from
+        RESIDENT state — the only per-dispatch traced inputs are the step's
+        default threshold/budget scalars (lanes without explicit policies
+        resolve against them in-jit, so a governor rung change costs no
+        re-splice)."""
+        lanes = np.fromiter(lanes, np.int64, len(lanes)) \
+            if not isinstance(lanes, np.ndarray) else lanes.astype(np.int64)
+        out = []
+        for d in np.unique(lanes // self.span):
+            d = int(d)
+            lo = d * self.span
+            mine = lanes[(lanes >= lo) & (lanes < lo + self.span)]
+            nxt, hops, energy = self._fns[d](
+                np.float32(default_thresh), np.int32(default_budget),
+                precision, bucket=bucket)
+            p = Pending(device=d, precision=precision, lanes=mine,
+                        local=mine - lo, logits=None, hops=hops,
+                        dispatched_at=time.perf_counter(), bucket=bucket,
+                        nxt=nxt, energy=energy)
+            self._queues[d].append(p)
+            out.append(p)
+        return out
+
+    def harvest_packed(self, n_slots: int):
+        """Drain the packed queues: one deferred ``block_until_ready``,
+        then scatter each group's lanes into full-batch HOST arrays.
+
+        Returns ``(next [n_slots] int32, hops [n_slots] int64,
+        energy_pj [n_slots] float64, dispatches)`` — no logits cross the
+        host boundary and nothing is re-priced here."""
+        pending = [p for q in self._queues for p in q]
+        for q in self._queues:
+            q.clear()
+        if not pending:
+            raise ValueError("harvest_packed() with nothing dispatched")
+        jax.block_until_ready([(p.nxt, p.hops, p.energy) for p in pending])
+        nxt = np.zeros((n_slots,), np.int32)
+        hops = np.zeros((n_slots,), np.int64)
+        energy = np.zeros((n_slots,), np.float64)
+        for p in pending:
+            nxt[p.lanes] = np.asarray(p.nxt)[p.local]
+            hops[p.lanes] = np.asarray(p.hops)[p.local]
+            energy[p.lanes] = np.asarray(p.energy)[p.local]
+        return nxt, hops, energy, pending
+
     def harvest(self, n_slots: int):
         """Drain every device queue: ONE deferred ``block_until_ready``
         over all in-flight outputs, then scatter the group lanes back into
@@ -242,6 +345,35 @@ def _serve_eval(pack, x, key, step, thresh, budget, max_hops: int,
     res = _eval_core(pack, x, start, thresh, budget, max_hops, backend,
                      block_b, False)
     return res.proba, res.hops
+
+
+@partial(jax.jit,
+         static_argnames=("max_hops", "backend", "block_b"))
+def _serve_eval_packed(pack, x, key, step, thresh, budget, def_thresh,
+                       def_budget, per_hop_pj, transfer_pj, max_hops: int,
+                       backend: str, block_b: int):
+    """The packed protocol's whole decode step as ONE jitted program over
+    RESIDENT span state: start-grove draw, per-lane default resolution
+    (NaN-threshold / negative-budget lanes take the step's default rung
+    scalars), Algorithm-2 evaluation, argmax, and affine energy pricing —
+    so a dispatch uploads nothing (the step counter lives on device and
+    the default knobs are cached device scalars) and downloads three
+    [span] vectors instead of round-tripping rows, policy vectors and
+    [span, C] logits.  Returns ``(next, hops, energy, step + 1)`` — the
+    caller feeds the incremented counter straight back in, keeping the
+    whole dispatch on jax's fast path with zero host->device scalar
+    conversions per call."""
+    from repro.core.engine import _eval_core
+    start = jax.random.randint(jax.random.fold_in(key, step),
+                               (x.shape[0],), 0, pack.n_groves)
+    thr = jnp.where(jnp.isnan(thresh), def_thresh, thresh)
+    bud = jnp.where(budget < 0, def_budget, budget)
+    res = _eval_core(pack, x, start, thr, bud, max_hops, backend,
+                     block_b, False)
+    nxt = jnp.argmax(res.proba, axis=-1).astype(jnp.int32)
+    h = res.hops.astype(jnp.float32)
+    energy = h * per_hop_pj + jnp.maximum(h - 1.0, 0.0) * transfer_pj
+    return nxt, res.hops, energy, step + 1
 
 
 class ForestReplicaServer:
@@ -306,6 +438,9 @@ class ForestReplicaServer:
         self._steps: dict[int, int] = {}
         self._energy_models: dict[tuple, object] = {}
         self._devices: dict[int, object] = {}
+        # (precision, bucket) -> (per_hop_pj, transfer_pj) float32 scalars
+        # traced into the packed dispatch (in-jit affine pricing)
+        self._hop_costs: dict[tuple, tuple] = {}
 
     @property
     def n_groves(self) -> int:
@@ -395,6 +530,148 @@ class ForestReplicaServer:
                                thr, bud, max_hops=pack.n_groves,
                                backend=backend, block_b=block_b)
 
+        return decode
+
+    def _hop_cost(self, prec: str, bucket, pack):
+        """Cached (per_hop_pj, transfer_pj) host floats for one pack's
+        topology at one precision — the traced inputs of the in-jit affine
+        energy pricing.  Host floats, not device scalars: the server is
+        shared by every replica, and a scalar committed to one replica's
+        device would be transferred on every other replica's dispatch
+        (each replica device_puts its own copy in ``packed_factory``)."""
+        key = (prec, bucket)
+        c = self._hop_costs.get(key)
+        if c is None:
+            from repro.core.energy import EnergyModel
+            m = EnergyModel.from_pack(pack, self.n_features)
+            c = (float(m.per_hop_pj), float(m.transfer_pj))
+            self._hop_costs[key] = c
+        return c
+
+    def packed_factory(self, index: int, device, span: int):
+        """Packed-protocol replica: per-slot feature rows and policy
+        vectors live as PERSISTENT device buffers, updated in place via
+        donated splices when the batcher admits/retires lanes
+        (:func:`~repro.core.engine.splice_slot_state`), and each dispatch
+        runs
+        :func:`_serve_eval_packed` — start draw, default resolution,
+        evaluation, argmax and energy pricing in one launch.  ``step()``
+        therefore stops paying per-step row uploads, policy re-assembly and
+        logits downloads; only three [span] vectors come back per dispatch.
+        """
+        from repro.core.engine import splice_slot_state
+        self._span = span
+        self._devices[index] = device
+        packs = {p: jax.device_put(pack, device)
+                 for p, pack in self._packs.items()}
+        key = jax.device_put(jax.random.key(self.seed + index), device)
+        self._steps[index] = 0
+        backend = self.backend
+        block_b = min(256, span)
+        lp = LanePolicies(span)
+        # resident state; the splice path DONATES, so references live in one
+        # mutable cell the closures rebind.  The per-replica step counter
+        # is device-resident too: the eval returns step+1 and the closure
+        # feeds it straight back — no host scalar crosses per dispatch.
+        state = {
+            "x": jax.device_put(
+                jnp.zeros((span, self.n_features), jnp.float32), device),
+            "thr": jax.device_put(jnp.asarray(lp.thresh), device),
+            "bud": jax.device_put(jnp.asarray(lp.budget), device),
+            "step": jax.device_put(jnp.int32(1), device),
+        }
+        # cached device conversions of the step's default knob scalars
+        # (governor rungs form a small set; np scalars hash by value)
+        knob_cache: dict[tuple, tuple] = {}
+        # per-REPLICA device copies of the energy pricing scalars: a copy
+        # committed to another replica's device would be re-transferred on
+        # every dispatch, which dwarfs the eval enqueue itself
+        hop_cache: dict[tuple, tuple] = {}
+        # host mirror of the resident feature rows: the staging target for
+        # admits (one vectorized write per burst), the row source for the
+        # fused splice, and what prefill()-style callers (calibration) read
+        mirror = np.zeros((span, self.n_features), np.float32)
+        self._buffers[index] = mirror
+
+        def admit_many(locals_, rows, thr, bud) -> None:
+            if rows is not None:
+                rows = np.asarray(rows, np.float32)
+                if rows.shape[-1] != self.n_features:
+                    raise ValueError(
+                        f"request feature rows have {rows.shape[-1]} "
+                        f"features, server expects {self.n_features}")
+                mirror[locals_] = rows
+            lp.stamp_many(locals_, thr, bud)
+
+        def admit(local: int, row, thr: float, bud: int) -> None:
+            admit_many(np.asarray([local]),
+                       None if row is None
+                       else np.asarray(row, np.float32).reshape(1, -1),
+                       thr, bud)
+
+        def retire_many(locals_) -> None:
+            lp.retire_many(locals_)
+
+        def retire(local: int) -> None:
+            retire_many(np.asarray([local]))
+
+        def _apply_staged() -> None:
+            # one FUSED splice over all three buffers, driven by the knob
+            # dirty set (every row admit also stamps knobs, so it covers
+            # the row writes; rows come from the mirror, which is current
+            # for admitted lanes and harmlessly stale for retired ones).
+            # donate=False: the PREVIOUS dispatch may still be reading
+            # these buffers (double-buffered pipeline) — donating would
+            # stall the enqueue until it drains
+            if lp.dirty:
+                idx, thr, bud = lp.take_dirty()
+                state["x"], state["thr"], state["bud"] = splice_slot_state(
+                    state["x"], state["thr"], state["bud"],
+                    idx, mirror[idx], thr, bud, donate=False)
+
+        def decode(def_thresh, def_budget, precision=None, bucket=None):
+            _apply_staged()
+            prec = precision or self.default_precision
+            if bucket is not None:
+                if self.cache is None:
+                    raise ValueError(
+                        f"replica {index} got bucket {bucket!r} but the "
+                        "server has no registry/cache (single-model mode)")
+                tenant, version = bucket
+                pack = self.cache.device_pack(tenant, version, prec,
+                                              index, device)
+            elif packs:
+                pack = packs[prec]
+            else:
+                raise ValueError(
+                    "registry-mode server got a bucketless dispatch; "
+                    "requests must carry Request.model (no built-in "
+                    "default model was constructed)")
+            hk = (prec, bucket)
+            hop = hop_cache.get(hk)
+            if hop is None:
+                per_hop_pj, transfer_pj = self._hop_cost(prec, bucket, pack)
+                hop = hop_cache[hk] = (
+                    jax.device_put(jnp.float32(per_hop_pj), device),
+                    jax.device_put(jnp.float32(transfer_pj), device))
+            per_hop, transfer = hop
+            ck = (def_thresh, def_budget)
+            knobs = knob_cache.get(ck)
+            if knobs is None:
+                knobs = knob_cache[ck] = (
+                    jax.device_put(jnp.float32(def_thresh), device),
+                    jax.device_put(jnp.int32(def_budget), device))
+            nxt, hops, energy, state["step"] = _serve_eval_packed(
+                pack, state["x"], key, state["step"], state["thr"],
+                state["bud"], knobs[0], knobs[1], per_hop, transfer,
+                max_hops=pack.n_groves, backend=backend, block_b=block_b)
+            return nxt, hops, energy
+
+        decode.packed = True
+        decode.admit = admit
+        decode.admit_many = admit_many
+        decode.retire = retire
+        decode.retire_many = retire_many
         return decode
 
     def prefill(self, slot: int, prompt: np.ndarray) -> int:

@@ -215,6 +215,19 @@ class EnergyGovernor:
             self.device_nj[dev] = prev + alpha * (batch_nj - prev)
         self._device_obs[dev] = obs
 
+    def ingest(self, batches) -> FogPolicy:
+        """Replay deferred telemetry: ``batches`` is an ordered iterable of
+        ``(energy_pj, devices)`` per-step batches (devices may be None).
+        Each batch is observed and followed by one control-loop
+        :meth:`step`, exactly as if it had been fed live — the batcher's
+        deferred-telemetry ``flush()`` drains through here, so deferral
+        shifts WHEN the governor acts (flush boundaries) but never what it
+        sees.  Returns the active policy after the replay."""
+        for energy_pj, devices in batches:
+            self.observe(energy_pj=energy_pj, devices=devices)
+            self.step()
+        return self.current
+
     def device_summary(self) -> dict:
         """Per-device view: ``{device: {"nj": rolling, "n": observations}}``
         plus the fleet spread (max - min rolling nJ across devices) under

@@ -53,6 +53,7 @@ contract is hard).  Telemetry lives in :class:`ServeStats` — the old
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import inspect
 import time
 import warnings
@@ -64,7 +65,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import HopMeter
-from repro.core.policy import FogPolicy, assemble
+from repro.core.policy import (BUDGET_DEFAULT, NO_BUDGET, THRESH_DEFAULT,
+                               FogPolicy, assemble, lane_knobs)
 
 
 @dataclasses.dataclass
@@ -142,6 +144,12 @@ class ServeStats:
 
     def note_done(self, tier: str = "default") -> None:
         self._tier(tier)["n_done"] += 1
+
+    def note_done_many(self, counts: dict) -> None:
+        """Batched :meth:`note_done`: ``{tier: completions}`` — one dict
+        walk per harvest instead of a lookup per completed lane."""
+        for tier, k in counts.items():
+            self._tier(tier)["n_done"] += k
 
     def update(self, hops, energy_pj=None, tiers=None) -> None:
         """Fold one batch of decoded events in.  ``energy_pj`` may carry
@@ -295,7 +303,8 @@ class ContinuousBatcher:
                  meter=None, default_policy: FogPolicy | None = None,
                  governor=None, dispatcher=None,
                  max_queue: int | None = None, shed_policy: str = "reject",
-                 registry=None):
+                 registry=None, pipeline: bool = False,
+                 telemetry_every: int = 1):
         self.slots = [SlotState() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
         self.decode_fn = decode_fn
@@ -317,12 +326,14 @@ class ContinuousBatcher:
         self.governor = governor
         self.dispatcher = dispatcher
         self.registry = registry
+        self._packed = False
         if dispatcher is not None:
             if decode_fn is not None:
                 raise ValueError(
                     "pass either decode_fn or dispatcher, not both (the "
                     "dispatcher owns the per-device decode replicas)")
             dispatcher.bind(n_slots)
+            self._packed = dispatcher.packed
             self._policy_mode = "dispatch"
         else:
             if decode_fn is None:
@@ -371,6 +382,38 @@ class ContinuousBatcher:
             self._bucket_aware = dispatcher.bucket_aware
         else:
             self._bucket_aware = _takes_bucket(decode_fn)
+        # -- packed fast path (device-resident slot state) ----------------
+        if pipeline and not self._packed:
+            raise ValueError(
+                "pipeline=True needs a packed dispatcher (replicas built "
+                "from ForestReplicaServer.packed_factory — resident slot "
+                "state is what makes overlapping dispatch with host "
+                "bookkeeping safe)")
+        if telemetry_every < 1:
+            raise ValueError("telemetry_every must be >= 1")
+        if telemetry_every > 1 and not self._packed:
+            raise ValueError(
+                "telemetry_every > 1 needs the packed dispatch path "
+                "(the legacy step accounts inline)")
+        self.pipeline = bool(pipeline)
+        self.telemetry_every = int(telemetry_every)
+        # empty-slot min-heap + occupancy mask: the packed step never walks
+        # all n_slots in Python — refill pops the heap, harvest walks only
+        # the occupied lanes, bucket membership is maintained incrementally
+        self._free: list[int] = list(range(n_slots))
+        self._occ_mask = np.zeros((n_slots,), bool)
+        self._n_active = 0
+        self._bucket_lanes: dict[tuple, set[int]] = {}
+        self._lane_key: list[tuple | None] = [None] * n_slots
+        self._inflight = False
+        self._inflight_occ: np.ndarray | None = None
+        self._tel_buf: list[tuple] = []
+        self._steps_since_flush = 0
+        # per-phase host-time accumulators (ns) for the packed step — the
+        # bench-serve-profile breakdown reads these
+        self.phase_ns = {"harvest": 0, "bookkeep": 0, "telemetry": 0,
+                         "refill": 0, "dispatch": 0}
+        self.n_steps = 0
         # fleet-level FoG accounting: hop counts (and, with a governor's
         # energy model, modeled pJ) of every decoded token
         self.stats = ServeStats()
@@ -494,6 +537,8 @@ class ContinuousBatcher:
 
     @property
     def active(self) -> int:
+        if self._packed:
+            return self._n_active
         return sum(1 for s in self.slots if s.request is not None)
 
     def _tenant_rung(self, req: Request) -> FogPolicy | None:
@@ -550,8 +595,290 @@ class ContinuousBatcher:
             next(iter(groups.values())).extend(none_idxs)
         return groups
 
+    # -- the packed fast path ---------------------------------------------
+    #
+    # With a packed dispatcher (ForestReplicaServer.packed_factory) the hot
+    # loop stops re-assembling and re-uploading per-step state: feature
+    # rows and per-lane policy vectors are PERSISTENT device buffers,
+    # admits/retires stage donated splices, each bucket dispatch traces
+    # only the step's default-rung scalars, and one launch returns packed
+    # (next, hops, energy) per span — no logits download, no host argmax,
+    # no host pricing.  ``pipeline=True`` double-buffers the loop: step t's
+    # dispatch is harvested at the START of step t+1, so the host's
+    # refill/splice/bookkeeping for t+1 overlaps device compute of t.  The
+    # request -> (slot, dispatch) mapping is IDENTICAL to the synchronous
+    # mode (completions are processed before the next refill in both), so
+    # the pipelined path is bit-equivalent under a fixed seed — only the
+    # wall-clock interleaving changes (see tests/test_serve_equivalence).
+    #
+    # Telemetry is buffered and replayed in order every ``telemetry_every``
+    # steps (and at :meth:`flush`): the governor/ledger/registry see
+    # exactly the per-step batches they would have seen live, just later —
+    # rung transitions therefore take effect at flush boundaries.
+
+    def _step_packed(self) -> int:
+        pc = time.perf_counter_ns
+        t0 = pc()
+        if self._inflight:
+            self._process_harvest()
+        t1 = pc()
+        self._refill_packed()
+        t2 = pc()
+        self.phase_ns["refill"] += t2 - t1
+        if self._n_active:
+            self._dispatch_packed()
+            t3 = pc()
+            self.phase_ns["dispatch"] += t3 - t2
+            if not self.pipeline:
+                self._process_harvest()
+        self.n_steps += 1
+        return self._n_active
+
+    def _refill_packed(self) -> None:
+        if not self.queue or not self._free:
+            return
+        q, free = self.queue, self._free
+        slots, occ_mask = self.slots, self._occ_mask
+        registry, ledger = self.registry, self.ledger
+        lane_key, bucket_lanes = self._lane_key, self._bucket_lanes
+        heappop, popleft = heapq.heappop, q.popleft
+        lanes, rows, thrs, buds = [], [], [], []
+        n_admitted = 0
+        while q and free:
+            i = heappop(free)
+            req = popleft()
+            if (req.model is not None and req.version is None
+                    and registry is not None):
+                # pin the serving version at slot assignment, exactly like
+                # the legacy refill (hot-swap never migrates in-flight work)
+                req.version = registry.route(req.model, req.rid)
+            slot = slots[i]
+            slot.request = req
+            slot.length = 1          # one resident feature row per slot
+            occ_mask[i] = True
+            n_admitted += 1
+            pol = req.policy
+            if pol is not None:
+                thr, bud = lane_knobs(pol)
+                prec = pol.precision
+            else:
+                rung = (None if ledger is None
+                        else self._tenant_rung(req))
+                if rung is not None:
+                    # tenant-ledger lanes are stamped CONCRETE at their
+                    # tenant's current rung (re-stamped when a flush
+                    # transitions that governor); fleet-default lanes stay
+                    # sentinels and track the rung in-jit every dispatch
+                    thr, bud = lane_knobs(rung)
+                    prec = rung.precision
+                else:
+                    thr, bud = THRESH_DEFAULT, BUDGET_DEFAULT
+                    prec = None
+            lanes.append(i)
+            rows.append(req.prompt)
+            thrs.append(thr)
+            buds.append(bud)
+            key = (req.model, req.version, prec)
+            lane_key[i] = key
+            bucket = bucket_lanes.get(key)
+            if bucket is None:
+                bucket = bucket_lanes[key] = set()
+            bucket.add(i)
+        self._n_active += n_admitted
+        if lanes:
+            # one vectorized staging write per replica for the whole burst
+            self.dispatcher.admit_lanes(
+                np.asarray(lanes, np.int64),
+                np.asarray(rows, np.float32), thrs, buds)
+
+    def _retire_lane(self, i: int) -> None:
+        """Host-side slot bookkeeping of one freed lane (the device-side
+        dead-stamp is batched by the caller via ``retire_lanes``)."""
+        s = self.slots[i]
+        s.request = None
+        s.length = 0
+        self._occ_mask[i] = False
+        self._n_active -= 1
+        heapq.heappush(self._free, i)
+        key = self._lane_key[i]
+        if key is not None:
+            self._bucket_lanes[key].discard(i)
+            self._lane_key[i] = None
+
+    def _dispatch_packed(self) -> None:
+        default = (self.governor.current if self.governor is not None
+                   else self.default_policy)
+        def_thr = float(np.asarray(default.threshold))
+        def_bud = (int(np.asarray(default.hop_budget))
+                   if default.hop_budget is not None else NO_BUDGET)
+        for key in list(self._bucket_lanes):
+            lanes = self._bucket_lanes[key]
+            if not lanes:
+                del self._bucket_lanes[key]
+                continue
+            model, version, prec = key
+            eff_prec = prec if prec is not None else default.precision
+            bucket = None if model is None else (model, version)
+            self.dispatcher.dispatch_packed(
+                lanes, def_thr, def_bud, precision=eff_prec, bucket=bucket)
+        self._inflight = True
+        self._inflight_occ = np.flatnonzero(self._occ_mask)
+
+    def _process_harvest(self) -> None:
+        pc = time.perf_counter_ns
+        t0 = pc()
+        nxt, hops, energy, pend = self.dispatcher.harvest_packed(
+            len(self.slots))
+        self.last_dispatches = pend
+        self._inflight = False
+        occ = self._inflight_occ
+        t1 = pc()
+        self.phase_ns["harvest"] += t1 - t0
+        occ_l = occ.tolist()
+        nxt_l = nxt[occ].tolist()
+        hops_l = hops[occ].tolist()
+        now = time.perf_counter()
+        reqs = []
+        retired = []
+        done_tiers: dict[str, int] = {}
+        slots, eos = self.slots, self.eos_id
+        completed_append = self.completed.append
+        retire = self._retire_lane
+        for j, i in enumerate(occ_l):
+            s = slots[i]
+            req = s.request
+            reqs.append(req)
+            tok = nxt_l[j]
+            gen = req.generated
+            gen.append(tok)
+            req.hops.append(hops_l[j])
+            s.length += 1
+            if tok == eos or len(gen) >= req.max_new_tokens:
+                req.done = True
+                if req.t_submit is not None:
+                    req.t_done = now
+                tier = req.tier
+                done_tiers[tier] = done_tiers.get(tier, 0) + 1
+                completed_append(req)
+                retire(i)
+                retired.append(i)
+        if done_tiers:
+            self.stats.note_done_many(done_tiers)
+        if retired:
+            # one bulk dead-stamp per replica (an admit in the same step
+            # simply overwrites the staged entry)
+            self.dispatcher.retire_lanes(retired)
+        t2 = pc()
+        self.phase_ns["bookkeep"] += t2 - t1
+        if occ.size:
+            self._tel_buf.append((hops[occ], energy[occ], reqs, occ))
+            self._steps_since_flush += 1
+            if self._steps_since_flush >= self.telemetry_every:
+                self._flush_telemetry()
+        self.phase_ns["telemetry"] += pc() - t2
+
+    def _flush_telemetry(self) -> None:
+        """Replay the buffered per-step telemetry batches IN ORDER: the
+        governor/ledger observe+step per batch exactly as the inline path
+        would have, the fleet stats and registry per-version stats fold in
+        the same events — deferral changes when the consumers see the
+        telemetry (flush boundaries), never what they see."""
+        buf, self._tel_buf = self._tel_buf, []
+        self._steps_since_flush = 0
+        if not buf:
+            return
+        ledger_trans = None
+        if self.ledger is not None:
+            govs = [g for _, g in self.ledger.items()]
+            if self.ledger.default is not None:
+                govs.append(self.ledger.default)
+            ledger_trans = [(g, len(g.transitions)) for g in govs]
+        fleet_batches = []
+        for hops, energy, reqs, lanes in buf:
+            tiers = [r.tier for r in reqs]
+            devices = (self.dispatcher.lane_devices(lanes)
+                       if self.dispatcher is not None else None)
+            e = energy
+            if self.governor is not None:
+                fleet_batches.append((e, devices))
+            elif self.ledger is not None:
+                # per-tenant governance, NaN for lanes no governor bills —
+                # identical grouping to the legacy inline _account
+                e = energy.copy()
+                by_tenant: dict[str | None, list[int]] = {}
+                for i, r in enumerate(reqs):
+                    by_tenant.setdefault(r.tenant, []).append(i)
+                for tenant, idxs in by_tenant.items():
+                    gov = self.ledger.governor_for(tenant)
+                    if gov is None:
+                        e[idxs] = np.nan
+                        continue
+                    gov.ingest([(e[idxs],
+                                 None if devices is None
+                                 else devices[idxs])])
+            self.stats.update(hops, e, tiers=tiers)
+            if self.registry is not None:
+                by_version: dict[tuple, list[int]] = {}
+                for i, r in enumerate(reqs):
+                    if r.model is not None and r.version is not None:
+                        by_version.setdefault(
+                            (r.model, r.version), []).append(i)
+                for (tenant, version), idxs in by_version.items():
+                    self.registry.stats_for(tenant, version).update(
+                        hops[idxs], e[idxs],
+                        tiers=[tiers[i] for i in idxs])
+        if self.governor is not None and fleet_batches:
+            self.governor.ingest(fleet_batches)
+        if ledger_trans is not None and any(
+                len(g.transitions) != n for g, n in ledger_trans):
+            # a tenant rung moved: its concrete lane stamps (and rung-
+            # precision bucket keys) are stale — re-stamp the occupied
+            # default-policy lanes
+            self._restamp_default_lanes()
+
+    def _restamp_default_lanes(self) -> None:
+        lanes, thrs, buds = [], [], []
+        for i in np.flatnonzero(self._occ_mask).tolist():
+            req = self.slots[i].request
+            if req is None or req.policy is not None:
+                continue
+            rung = self._tenant_rung(req)
+            if rung is None:
+                continue
+            thr, bud = lane_knobs(rung)
+            lanes.append(i)
+            thrs.append(thr)
+            buds.append(bud)
+            key = (req.model, req.version, rung.precision)
+            if key != self._lane_key[i]:
+                self._bucket_lanes[self._lane_key[i]].discard(i)
+                self._lane_key[i] = key
+                self._bucket_lanes.setdefault(key, set()).add(i)
+        if lanes:
+            self.dispatcher.admit_lanes(lanes, None, thrs, buds)
+
+    def flush(self) -> None:
+        """Drain the pipelined loop: harvest any in-flight dispatch, then
+        replay ALL buffered telemetry.  After flush() the governor/ledger/
+        registry/stats state is exactly what the synchronous per-step loop
+        would hold — call it before reading telemetry mid-run and once
+        after the last step.  A no-op on the legacy (non-packed) path,
+        which accounts inline."""
+        if not self._packed:
+            return
+        if self._inflight:
+            self._process_harvest()
+        self._flush_telemetry()
+
     def step(self) -> int:
-        """One decode step across all active slots.  Returns #active."""
+        """One decode step across all active slots.  Returns #active.
+
+        On the packed path with ``pipeline=True`` this harvests the
+        PREVIOUS step's dispatch and issues this step's — completions
+        surface one ``step()`` call later; :meth:`flush` drains the tail.
+        """
+        if self._packed:
+            return self._step_packed()
         self._refill()
         occ = [i for i, s in enumerate(self.slots) if s.request is not None]
         if not occ:
@@ -729,4 +1056,5 @@ class ContinuousBatcher:
         while (self.queue or self.active) and steps < max_steps:
             self.step()
             steps += 1
+        self.flush()
         return self.completed

@@ -163,3 +163,24 @@ def test_roofline_compaction_cuts_compute_not_bytes(small_pack):
     on = m.estimate("fused", 1000, iters=4, hops_total=1300.0, compact=True)
     assert on.flops < off.flops
     assert on.bytes_moved == off.bytes_moved
+
+
+def test_roofline_row_names_map_to_traffic_class(small_pack):
+    """Benchmark rows pass their OWN names ("pallas", "fused-compact",
+    "reference-lazy"): the traffic class comes from the name root, the
+    estimate reports the full name — so BENCH_engine.json roofline rows
+    are labeled by the backend that was actually measured."""
+    m = RooflineModel(small_pack, 12)
+    ref = m.estimate("reference", 1000, iters=4)
+    for name in ("pallas", "pallas-chunked", "reference-lazy"):
+        est = m.estimate(name, 1000, iters=4)
+        assert est.backend == name
+        assert est.bytes_moved == ref.bytes_moved    # per-hop traffic
+        assert est.flops == ref.flops
+    fused = m.estimate("fused", 1000, iters=4, hops_total=1300.0,
+                       compact=True)
+    named = m.estimate("fused-compact", 1000, iters=4, hops_total=1300.0,
+                       compact=True)
+    assert named.backend == "fused-compact"
+    assert named.bytes_moved == fused.bytes_moved    # one table pin
+    assert named.flops == fused.flops

@@ -1,0 +1,272 @@
+"""Pipelined-vs-synchronous equivalence of the packed serving hot loop.
+
+The double-buffered pipeline (``pipeline=True``) overlaps host bookkeeping
+for step t+1 with the device computing step t, and ``telemetry_every=k``
+defers the governor/ledger/stats replay to flush boundaries.  Neither is
+allowed to change WHAT is served: for a fixed seed and a fixed submission
+schedule, every mode must produce identical labels, hops, shed sets,
+governor transitions and registry version pinning — the pipeline moves
+work in wall time, never in step time.
+
+Everything runs in ONE process: ``make_dataset`` is process-seeded, so
+cross-process runs see different data, but within a process each mode
+rebuilds an identical plane from the same seed.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FogPolicy, split
+from repro.core.engine import splice_lanes, splice_slot_state
+from repro.core.policy import (BUDGET_DEFAULT, DEAD_BUDGET, DEAD_THRESH,
+                               LanePolicies, THRESH_DEFAULT)
+from repro.forest import ForestPack
+from repro.launch.mesh import serve_devices
+from repro.registry import ModelRegistry, PackCache
+from repro.serve.dispatch import DeviceDispatcher, ForestReplicaServer
+from repro.serve.governor import EnergyGovernor, default_ladder
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+# --------------------------------------------------------------------------
+# splice primitives
+# --------------------------------------------------------------------------
+
+def test_splice_copy_matches_donating_and_preserves_source():
+    """donate=False must compute the same buffer as donate=True while
+    leaving the source readable (the pipeline's previous dispatch may
+    still hold it)."""
+    base = np.arange(24, dtype=np.float32).reshape(8, 3)
+    idx = [1, 4, 6]
+    vals = -np.ones((3, 3), np.float32)
+    donated = splice_lanes(jnp.asarray(base), idx, vals, donate=True)
+    src = jnp.asarray(base)
+    copied = splice_lanes(src, idx, vals, donate=False)
+    np.testing.assert_array_equal(np.asarray(donated), np.asarray(copied))
+    # the copying splice left its source untouched and alive
+    np.testing.assert_array_equal(np.asarray(src), base)
+    want = base.copy()
+    want[idx] = -1.0
+    np.testing.assert_array_equal(np.asarray(copied), want)
+
+
+def test_splice_slot_state_matches_three_single_splices():
+    """The fused three-buffer splice is exactly three splice_lanes calls
+    sharing one index set (any burst width, pow-2 padding included)."""
+    rng = np.random.default_rng(0)
+    n, f = 16, 5
+    x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    thr = jnp.asarray(rng.random(n).astype(np.float32))
+    bud = jnp.asarray(rng.integers(0, 9, n).astype(np.int32))
+    for width in (1, 3, 8, 16):
+        idx = np.sort(rng.choice(n, size=width, replace=False))
+        rows = rng.normal(size=(width, f)).astype(np.float32)
+        t = rng.random(width).astype(np.float32)
+        b = rng.integers(0, 9, width).astype(np.int32)
+        fx, fthr, fbud = splice_slot_state(x, thr, bud, idx, rows, t, b,
+                                           donate=False)
+        np.testing.assert_array_equal(
+            np.asarray(fx),
+            np.asarray(splice_lanes(x, idx, rows, donate=False)))
+        np.testing.assert_array_equal(
+            np.asarray(fthr),
+            np.asarray(splice_lanes(thr, idx, t, donate=False)))
+        np.testing.assert_array_equal(
+            np.asarray(fbud),
+            np.asarray(splice_lanes(bud, idx, b, donate=False)))
+
+
+def test_lane_policies_dirty_tracking_round_trip():
+    lp = LanePolicies(6)
+    assert not lp.dirty
+    lp.stamp_many(np.asarray([4, 1]), np.float32(0.5), np.int32(3))
+    lp.retire_many(np.asarray([2]))
+    assert lp.dirty
+    idx, thr, bud = lp.take_dirty()
+    np.testing.assert_array_equal(idx, [1, 2, 4])   # ascending, clears
+    np.testing.assert_array_equal(thr, np.float32([0.5, DEAD_THRESH, 0.5]))
+    np.testing.assert_array_equal(bud, np.int32([3, DEAD_BUDGET, 3]))
+    assert not lp.dirty
+    # sentinels resolve against the step default, concrete stamps win
+    lp.stamp(0, THRESH_DEFAULT, BUDGET_DEFAULT)
+    rthr, rbud = lp.resolve(FogPolicy(threshold=0.9, hop_budget=7))
+    assert rthr[0] == np.float32(0.9) and rbud[0] == 7
+    assert rthr[1] == np.float32(0.5) and rbud[1] == 3
+
+
+# --------------------------------------------------------------------------
+# closed-loop mode equivalence
+# --------------------------------------------------------------------------
+
+N_SLOTS = 8
+
+
+def _run_mode(trained, *, pipeline, telemetry_every, governor_budget="none",
+              max_queue=None, waves=6, wave_n=16, steps_per_wave=3):
+    """One full serving run at a fixed submission schedule: ``waves``
+    bursts of ``wave_n`` requests with ``steps_per_wave`` steps between
+    bursts, then drain.  Fresh plane + governor per call, same seed."""
+    ds, rf = trained
+    gc = split(rf, 2)
+    server = ForestReplicaServer(gc, ds.x_test.shape[1], backend="fused",
+                                 precisions=("fp32", "int8"), seed=0)
+    disp = DeviceDispatcher(server.packed_factory, serve_devices(1))
+    base = FogPolicy(threshold=0.7, precision="fp32")
+    gov = None
+    if governor_budget != "none":
+        model = server.energy_model("fp32")
+        ladder = default_ladder(base, model, governor_budget)
+        gov = EnergyGovernor(ladder, governor_budget, model=model,
+                             window=16, patience=2, cooldown=10_000,
+                             warmup=4)
+    b = ContinuousBatcher(N_SLOTS, None, server.prefill, eos_id=-1,
+                          default_policy=base, governor=gov,
+                          dispatcher=disp, max_queue=max_queue,
+                          pipeline=pipeline,
+                          telemetry_every=telemetry_every)
+    rid = 0
+    for _ in range(waves):
+        for _ in range(wave_n):
+            pol = (FogPolicy(threshold=0.55, precision="int8")
+                   if rid % 3 == 0 else None)
+            b.submit(Request(rid=rid, prompt=ds.x_test[rid % len(ds.x_test)],
+                             max_new_tokens=1, policy=pol,
+                             tier="bulk" if rid % 3 == 0 else "std"))
+            rid += 1
+        for _ in range(steps_per_wave):
+            b.step()
+    while b.active or b.queue:
+        b.step()
+    b.flush()
+    return b, gov
+
+
+def _served(b):
+    return {r.rid: (tuple(r.generated), tuple(r.hops))
+            for r in b.completed}
+
+
+def test_pipelined_step_is_bit_equal_to_synchronous(trained):
+    """pipeline=True with per-step telemetry serves exactly what the
+    synchronous step serves: same labels, same hops, same shed set, same
+    fleet stats — under queue pressure and a mixed-precision bucket mix."""
+    sync, _ = _run_mode(trained, pipeline=False, telemetry_every=1,
+                        max_queue=24)
+    pipe, _ = _run_mode(trained, pipeline=True, telemetry_every=1,
+                        max_queue=24)
+    assert _served(sync) == _served(pipe)
+    assert ({r.rid for r in sync.shed_requests}
+            == {r.rid for r in pipe.shed_requests})
+    for attr in ("total_hops", "n_events", "n_offered", "n_shed"):
+        assert getattr(sync.stats, attr) == getattr(pipe.stats, attr)
+    assert sync.stats.tier_summary() == pipe.stats.tier_summary()
+
+
+def test_pipelined_governor_transitions_match_synchronous(trained):
+    """A TIGHT energy SLO walks the ladder mid-run; the pipeline (which
+    harvests one step late) must reproduce the synchronous governor's
+    transition sequence and final rung exactly — telemetry is replayed by
+    harvest index, not by wall order."""
+    ds, rf = trained
+    gc = split(rf, 2)
+    server = ForestReplicaServer(gc, ds.x_test.shape[1], backend="fused",
+                                 precisions=("fp32", "int8"), seed=0)
+    model = server.energy_model("fp32")
+    # budget around the cost of ~1.5 hops: the base rung breaches, the
+    # ladder walks — both modes must agree on every step of that walk
+    budget = float(np.asarray(model.lane_pj(np.asarray([2]))[0])) * 1e-3 * 0.8
+    sync, gov_s = _run_mode(trained, pipeline=False, telemetry_every=1,
+                            governor_budget=budget)
+    pipe, gov_p = _run_mode(trained, pipeline=True, telemetry_every=1,
+                            governor_budget=budget)
+    assert _served(sync) == _served(pipe)
+    assert gov_s.transitions == gov_p.transitions
+    assert len(gov_s.transitions) >= 1      # the SLO actually bit
+    assert gov_s.rung == gov_p.rung
+    assert gov_s.rolling_nj == pytest.approx(gov_p.rolling_nj)
+
+
+def test_deferred_telemetry_changes_when_not_what(trained):
+    """telemetry_every=8 batches the replay but, with a metering-only
+    governor (no stepping), must leave every post-flush observable equal
+    to the per-step account: labels, stats totals, rolling estimate."""
+    ref, gov_r = _run_mode(trained, pipeline=False, telemetry_every=1,
+                           governor_budget=None)
+    defer, gov_d = _run_mode(trained, pipeline=True, telemetry_every=8,
+                             governor_budget=None)
+    assert _served(ref) == _served(defer)
+    assert ref.stats.total_hops == defer.stats.total_hops
+    assert ref.stats.n_events == defer.stats.n_events
+    assert ref.stats.total_pj == pytest.approx(defer.stats.total_pj)
+    assert gov_r.rolling_nj == pytest.approx(gov_d.rolling_nj)
+    assert gov_r.transitions == gov_d.transitions == []
+
+
+def _run_swap(trained, tmp_path, *, pipeline, telemetry_every):
+    """Registry-mode serving with a mid-run hot-swap at a fixed step
+    boundary: 2 full steps on v1 traffic, publish v2, second burst,
+    drain.  Version pinning happens at slot assignment, so both modes
+    must pin the same rid -> version map."""
+    ds, rf = trained
+    pack = ForestPack.from_groves(split(rf, 2))
+    reg = ModelRegistry(tmp_path / f"reg-{pipeline}-{telemetry_every}")
+    reg.publish("t", pack)
+    cache = PackCache(reg, budget_bytes=4 * pack.table_bytes)
+    server = ForestReplicaServer(None, ds.x_test.shape[1], backend="fused",
+                                 registry=reg, cache=cache, seed=0)
+    disp = DeviceDispatcher(server.packed_factory, serve_devices(1))
+    b = ContinuousBatcher(4, None, server.prefill, eos_id=-1,
+                          default_policy=FogPolicy(threshold=0.7,
+                                                   precision="fp32"),
+                          dispatcher=disp, registry=reg, pipeline=pipeline,
+                          telemetry_every=telemetry_every)
+    for rid in range(8):
+        b.submit(Request(rid=rid, prompt=ds.x_test[rid], max_new_tokens=1,
+                         model="t"))
+    for _ in range(2):
+        b.step()
+    reg.publish("t", pack)                  # hot-swap mid-flight
+    for rid in range(8, 16):
+        b.submit(Request(rid=rid, prompt=ds.x_test[rid], max_new_tokens=1,
+                         model="t"))
+    while b.active or b.queue:
+        b.step()
+    b.flush()
+    return {r.rid: (r.version, tuple(r.generated), tuple(r.hops))
+            for r in b.completed}
+
+
+def test_hot_swap_version_pinning_matches_across_modes(trained, tmp_path):
+    sync = _run_swap(trained, tmp_path, pipeline=False, telemetry_every=1)
+    pipe = _run_swap(trained, tmp_path, pipeline=True, telemetry_every=4)
+    assert sync == pipe
+    assert len(sync) == 16
+    versions = {v for v, _, _ in sync.values()}
+    assert versions == {1, 2}               # the swap actually happened
+    # requests in flight (or queued) before the publish stayed on v1
+    assert all(sync[rid][0] == 1 for rid in range(8))
+    assert all(sync[rid][0] == 2 for rid in range(8, 16))
+
+
+def test_flush_is_idempotent_and_drains_inflight(trained):
+    """flush() mid-run harvests the in-flight dispatch and replays the
+    buffered telemetry; a second flush is a no-op."""
+    ds, rf = trained
+    gc = split(rf, 2)
+    server = ForestReplicaServer(gc, ds.x_test.shape[1], backend="fused",
+                                 precisions=("fp32",), seed=0)
+    disp = DeviceDispatcher(server.packed_factory, serve_devices(1))
+    b = ContinuousBatcher(4, None, server.prefill, eos_id=-1,
+                          default_policy=FogPolicy(threshold=0.7,
+                                                   precision="fp32"),
+                          dispatcher=disp, pipeline=True, telemetry_every=16)
+    for rid in range(4):
+        b.submit(Request(rid=rid, prompt=ds.x_test[rid], max_new_tokens=1))
+    b.step()                                # dispatched, nothing harvested
+    assert len(b.completed) == 0
+    b.flush()
+    assert len(b.completed) == 4            # in-flight drained
+    assert b.stats.n_events == 4            # telemetry replayed
+    before = (b.stats.n_events, b.stats.total_hops, len(b.completed))
+    b.flush()
+    assert (b.stats.n_events, b.stats.total_hops, len(b.completed)) == before
