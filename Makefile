@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-all bench bench-registry bench-serve bench-serve-profile \
-	quickstart
+	bench-train quickstart
 
 # tier-1 gate: fast default suite (slow marks + hypothesis sweeps excluded)
 test:
@@ -27,6 +27,10 @@ bench-registry:
 bench-serve:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 		$(PY) -m benchmarks.serve_bench --smoke
+
+# host vs device trainer sweep + train_gate; writes BENCH_train.json
+bench-train:
+	$(PY) -m benchmarks.train_bench
 
 # per-step host/device breakdown of the packed hot loop.  --no-trace by
 # default: jax.profiler.trace costs >100x per step on CPU hosts and would

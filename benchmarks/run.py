@@ -23,7 +23,7 @@ def main() -> None:
     from benchmarks import (
         ablation_adaptive, engine_bench, fig4_topology, fig5_threshold,
         fog_ring_bench, lm_fog_exit, registry_bench, serve_bench,
-        table1_accuracy, table1_energy,
+        table1_accuracy, table1_energy, train_bench,
     )
     import benchmarks.common as common
 
@@ -44,6 +44,8 @@ def main() -> None:
         "serve": lambda: serve_bench.run(smoke=args.quick),
         # subprocess for the same reason; multi-tenant registry serving
         "registry": lambda: registry_bench.run(smoke=args.quick),
+        # host vs device trainer; full mode runs the train_gate
+        "train": lambda: train_bench.run(smoke=args.quick),
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -1,0 +1,237 @@
+"""Trainer benchmark: host CART vs device histogram induction -> CSV rows
++ BENCH_train.json.
+
+Times both trainers over a forest-size sweep on the budgeted-RF bench
+config — penbased, depth 8, ``max_features="all"`` with a
+``feature_cost``/``cost_weight`` penalty.  That config is the paper's
+training story (the Nan/Wang/Saligrama budgeted criterion scores EVERY
+feature's acquisition cost at every node, so there is no subsample to hide
+the host trainer's per-candidate work behind), and it is where retraining
+cost actually bites the streaming tier.
+
+Record schema (``BENCH_train.json``):
+
+  sweep[]        one entry per n_trees: host_s / device_s wall time (device
+                 timed warm — compile is a once-per-shape cost a retraining
+                 loop never pays again; compile time is recorded
+                 separately), speedup, test accuracy per trainer,
+                 tree_samples_per_s (N * n_trees / wall)
+  gate           the gate-config (largest sweep entry) measurements plus
+                 the determinism and round-trip checks
+  autotune       the measured histogram TuneResult for the gate signature
+
+``train_gate`` (CI tier-1) fails the run unless, on the gate config:
+  - the device trainer is >= 5x faster than the (vectorized) host trainer
+  - device test accuracy is within 0.5% absolute of the host trainer
+  - two same-seed device runs produce bit-identical TensorForest tables
+  - the device-trained forest round-trips ForestPack.save/load and
+    ModelRegistry.publish, and all four engine backends (reference,
+    pallas, fused, ring) serve it with bit-identical labels and hops
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_train.json"
+
+GATE_MIN_SPEEDUP = 5.0
+GATE_MAX_ACC_GAP = 0.005        # absolute test-accuracy parity budget
+
+DATASET = "penbased"
+DEPTH = 8
+SWEEP = (8, 16, 32)             # n_trees; last entry is the gate config
+SEED = 0
+COST_WEIGHT = 0.01
+
+
+def train_gate(record: dict | None = None,
+               path: Path | str = OUT_PATH) -> None:
+    """Fail (raise) unless the gate-config measurements hold: >=5x device
+    speedup, <=0.5% absolute accuracy gap, bit-reproducible device runs,
+    and an intact ForestPack/ModelRegistry/4-backend round trip."""
+    if record is None:
+        record = json.loads(Path(path).read_text())
+    g = record["gate"]
+    if g["speedup"] < GATE_MIN_SPEEDUP:
+        raise SystemExit(
+            f"train gate FAILED: device speedup {g['speedup']:.2f}x is "
+            f"below {GATE_MIN_SPEEDUP:.0f}x (host {g['host_s']:.2f}s vs "
+            f"device {g['device_s']:.2f}s)")
+    # round before comparing: accuracies are ratios of small integers, and
+    # a gap of exactly 0.5% must not fail on fp representation error
+    gap = round(abs(g["acc_host"] - g["acc_device"]), 9)
+    if gap > GATE_MAX_ACC_GAP:
+        raise SystemExit(
+            f"train gate FAILED: accuracy gap {gap * 100:.2f}% exceeds "
+            f"{GATE_MAX_ACC_GAP * 100:.1f}% (host {g['acc_host']:.4f} vs "
+            f"device {g['acc_device']:.4f})")
+    if not g["bit_reproducible"]:
+        raise SystemExit("train gate FAILED: two same-seed device runs "
+                         "produced different TensorForest tables")
+    if not g["roundtrip_identical"]:
+        raise SystemExit("train gate FAILED: the device-trained forest did "
+                         "not serve bit-identically across backends after "
+                         "the ForestPack/ModelRegistry round trip")
+    print(f"CSV,train,train_gate=pass,speedup={g['speedup']:.2f}x,"
+          f"acc_gap={gap * 100:.2f}%,backends={g['backends_checked']}")
+
+
+def _forest_equal(a, b) -> bool:
+    import numpy as np
+    return (np.array_equal(a.feature, b.feature)
+            and np.array_equal(a.threshold, b.threshold)
+            and np.array_equal(a.leaf, b.leaf))
+
+
+def _roundtrip(forest, ds, n_classes: int) -> dict:
+    """ForestPack save/load + ModelRegistry publish + 4-backend serve on
+    the device-trained forest; returns the gate evidence."""
+    import jax
+    import numpy as np
+    from repro.core import FogEngine, FogPolicy, split
+    from repro.forest.pack import ForestPack
+    from repro.registry import ModelRegistry
+
+    gc = split(forest, 2)
+    pack = ForestPack.from_groves(gc)
+    policy = FogPolicy(threshold=0.3, max_hops=gc.n_groves)
+    key = jax.random.key(SEED)
+    x = ds.x_test
+
+    mesh = jax.make_mesh((1,), ("grove",))
+    engines = {
+        "reference": FogEngine(gc, policy=policy),
+        "pallas": FogEngine(gc, backend="pallas", policy=policy),
+        "fused": FogEngine(gc, backend="fused", policy=policy),
+        "ring": FogEngine(gc, backend="ring", mesh=mesh, policy=policy),
+    }
+    labels, hops = {}, {}
+    for name, eng in engines.items():
+        res = eng.eval(x, key)
+        labels[name] = np.asarray(res.label)
+        hops[name] = np.asarray(res.hops)
+    base = labels["reference"]
+    identical = all(
+        np.array_equal(labels[n], base)
+        and np.array_equal(hops[n], hops["reference"]) for n in engines)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        art = pack.save(Path(tmp) / "trained.npz")
+        pack2, _ = ForestPack.load_with_meta(art)
+        res2 = FogEngine(pack2, policy=policy).eval(x, key)
+        identical &= np.array_equal(np.asarray(res2.label), base)
+        identical &= np.array_equal(np.asarray(res2.hops),
+                                    hops["reference"])
+        reg = ModelRegistry(Path(tmp) / "registry")
+        version = reg.publish("train-bench", pack)
+        pack3, _ = reg.load("train-bench")
+        res3 = FogEngine(pack3, policy=policy).eval(x, key)
+        identical &= np.array_equal(np.asarray(res3.label), base)
+
+    acc = float((base == ds.y_test).mean())
+    return {"roundtrip_identical": bool(identical),
+            "backends_checked": sorted(engines),
+            "published_version": int(version),
+            "serve_acc": acc}
+
+
+def run(out_path: Path | str | None = OUT_PATH,
+        smoke: bool = False) -> list[str]:
+    import numpy as np
+    from repro.data import make_dataset
+    from repro.forest import TrainConfig, train_random_forest
+    from repro.forest.rf import rf_predict
+    from repro.kernels import autotune
+
+    ds = make_dataset(DATASET)
+    n, n_features = ds.x_train.shape
+    fcost = np.linspace(1.0, 2.0, n_features).astype(np.float32)
+    depth = 5 if smoke else DEPTH
+    sweep = (4,) if smoke else SWEEP
+    n_thresholds = 16
+
+    def cfg(trainer: str, n_trees: int) -> TrainConfig:
+        return TrainConfig(n_trees=n_trees, max_depth=depth,
+                           n_thresholds=n_thresholds, max_features="all",
+                           feature_cost=fcost, cost_weight=COST_WEIGHT,
+                           seed=SEED, trainer=trainer)
+
+    # measured histogram autotune for the gate signature, so grow_forest's
+    # best_hist_config lookup serves the measured winner (mirrors the
+    # engine bench tuning the fused kernel before timing it)
+    tuned = autotune.tune_histogram(
+        sweep[-1], depth, n_features, n_thresholds + 1, ds.n_classes,
+        n_samples=n, repeats=1 if smoke else 3)
+
+    def accuracy(forest) -> float:
+        pred = np.asarray(rf_predict(forest, ds.x_test))
+        return float((pred == ds.y_test).mean())
+
+    rows, sweep_rec = [], []
+    gate: dict = {}
+    for n_trees in sweep:
+        t0 = time.perf_counter()
+        f_host = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                                     cfg("host", n_trees))
+        host_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        f_warm = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                                     cfg("device", n_trees))
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        f_dev = train_random_forest(ds.x_train, ds.y_train, ds.n_classes,
+                                    cfg("device", n_trees))
+        device_s = time.perf_counter() - t0
+
+        acc_h, acc_d = accuracy(f_host), accuracy(f_dev)
+        entry = {
+            "n_trees": n_trees, "host_s": host_s, "device_s": device_s,
+            "device_compile_s": compile_s, "speedup": host_s / device_s,
+            "acc_host": acc_h, "acc_device": acc_d,
+            "tree_samples_per_s": {
+                "host": n * n_trees / host_s,
+                "device": n * n_trees / device_s,
+            },
+        }
+        sweep_rec.append(entry)
+        rows.append(
+            f"CSV,train,n_trees={n_trees},host_s={host_s:.2f},"
+            f"device_s={device_s:.2f},speedup={entry['speedup']:.2f}x,"
+            f"acc_host={acc_h:.4f},acc_device={acc_d:.4f}")
+
+        if n_trees == sweep[-1]:
+            gate = dict(entry)
+            # warmup and timed runs share the seed: bit-equal tables IS
+            # the two-same-seed-runs determinism contract
+            gate["bit_reproducible"] = _forest_equal(f_warm, f_dev)
+            gate.update(_roundtrip(f_dev, ds, ds.n_classes))
+
+    record = {
+        "bench": "trainers", "dataset": DATASET, "n_train": int(n),
+        "n_features": int(n_features), "depth": depth,
+        "n_thresholds": n_thresholds, "max_features": "all",
+        "cost_weight": COST_WEIGHT, "seed": SEED, "smoke": smoke,
+        "sweep": sweep_rec, "gate": gate, "autotune": tuned.to_dict(),
+    }
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(record, indent=2) + "\n")
+        rows.append(f"CSV,train,wrote={out_path}")
+    if not smoke:
+        train_gate(record)
+        rows.append(
+            f"CSV,train,gate,speedup={gate['speedup']:.2f}x,"
+            f"reproducible={gate['bit_reproducible']},"
+            f"roundtrip={gate['roundtrip_identical']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if "--gate-only" in sys.argv:
+        train_gate()
+    else:
+        print("\n".join(run(smoke="--smoke" in sys.argv)))

@@ -8,6 +8,7 @@ nonlinear ones, as in Table 1).  Generators are deterministic per seed.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -65,7 +66,9 @@ class Dataset:
 
 def make_dataset(name: str, seed: int = 0) -> Dataset:
     spec = SPECS[name]
-    rng = np.random.default_rng(seed + hash(name) % (2**16))
+    # crc32, not hash(): str hashes are salted per process, which would
+    # make "the same dataset" differ across runs and CI jobs
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (2**16))
     F, C = spec.n_features, spec.n_classes
     n_signal = max(2, int(F * (1.0 - spec.noise_features)))
 

@@ -1,11 +1,13 @@
 from repro.forest.tree import TensorForest, forest_proba, forest_votes, pad_forest
 from repro.forest.pack import (PACK_FORMAT_VERSION, PRECISION_BYTES,
                                PRECISIONS, ForestPack)
-from repro.forest.train import TrainConfig, train_random_forest
+from repro.forest.train import (TRAINERS, TrainConfig, bin_features,
+                                quantile_bin_edges, train_random_forest)
 from repro.forest.rf import rf_predict, rf_predict_proba
 
 __all__ = [
     "TensorForest", "forest_proba", "forest_votes", "pad_forest",
     "ForestPack", "PRECISIONS", "PRECISION_BYTES", "PACK_FORMAT_VERSION",
-    "TrainConfig", "train_random_forest", "rf_predict", "rf_predict_proba",
+    "TRAINERS", "TrainConfig", "train_random_forest", "quantile_bin_edges",
+    "bin_features", "rf_predict", "rf_predict_proba",
 ]

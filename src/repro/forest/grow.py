@@ -1,0 +1,216 @@
+"""Device-resident forest trainer: level-wise histogram tree induction.
+
+The numpy CART in :mod:`repro.forest.train` expands one node at a time; on
+a forest it is a Python loop over trees x nodes.  This trainer inverts the
+nesting the way accelerator tree inducers do (LightGBM-style level-wise
+growth): grow ALL trees simultaneously, one level per step, with every
+per-level quantity a dense tensor —
+
+1. **Bin once.**  Features are quantile-binned against the SAME candidate
+   grid the host trainer searches (:func:`~repro.forest.train.
+   quantile_bin_edges` / :func:`~repro.forest.train.bin_features`), so a
+   split decision here is the split ``x > edges[f, j]`` there, bit for bit.
+2. **Histogram per level.**  A ``[T, N]`` node-id vector tracks where each
+   sample sits in each tree; :func:`repro.kernels.histogram.
+   histogram_level` turns (node ids, labels, bootstrap weights, bins) into
+   per-(tree, node, feature, bin, class) fp32 counts — the Pallas one-hot
+   kernel or the XLA scatter path, per the autotuned crossover.
+3. **All splits in one pass.**  A cumsum over the bin axis yields every
+   candidate's left/right class counts; gini gain (including the
+   Nan/Wang/Saligrama ``feature_cost`` penalty against a per-path
+   paid-feature mask) is computed for the whole ``[T, nodes, F, q]``
+   candidate block, argmaxed per node with the host trainer's tie order
+   (lowest feature id, then lowest threshold).
+4. **Partition by gather.**  No data moves: routing is
+   ``node = 2*node + (bin > chosen_j)`` per sample, a pair of gathers.
+
+Bootstrap resampling is expressed as per-tree multiplicity weights
+(``w[t, i]`` = times sample i was drawn for tree t), so weighted histogram
+counts equal the host trainer's duplicated-row counts exactly.  All
+randomness (bootstrap draws, ``max_features`` subsets) comes from
+``jax.random`` keyed on ``cfg.seed`` — two same-seed runs produce
+bit-identical ``TensorForest`` tables.
+
+Conventions match the host trainer exactly: complete depth-``d`` trees in
+heap order, non-splitting nodes sealed with ``feature=0, threshold=+inf``
+("always go left"), sealed distributions replicated down to every leaf
+below them, empty-node fallback ``1/C``.  The emitted ``TensorForest``
+feeds ``ForestPack``/``ModelRegistry``/all four eval backends unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.forest.train import (GAIN_EPS, TrainConfig, bin_features,
+                                quantile_bin_edges, resolve_max_features)
+from repro.forest.tree import TensorForest
+from repro.kernels import autotune
+from repro.kernels.histogram import histogram_level, onehot_rows
+
+
+def _gini(counts: jax.Array, total: jax.Array) -> jax.Array:
+    """Gini impurity from weighted class counts [..., C] and their sum."""
+    t = jnp.maximum(total, 1.0)
+    return 1.0 - jnp.sum(counts * counts, axis=-1) / (t * t)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_trees", "depth", "n_classes", "msl", "k_feat",
+                     "bootstrap", "cost_weight", "hc"))
+def _grow(bins, edges, y, fcost, key, *, n_trees, depth, n_classes, msl,
+          k_feat, bootstrap, cost_weight, hc):
+    N, F = bins.shape
+    q = edges.shape[1]
+    n_bins = q + 1
+    T = n_trees
+    kb, kf = jax.random.split(key)
+
+    if bootstrap:
+        def draw(k):
+            idx = jax.random.randint(k, (N,), 0, N)
+            return jnp.zeros((N,), jnp.float32).at[idx].add(1.0)
+        w = jax.vmap(draw)(jax.random.split(kb, T))
+    else:
+        w = jnp.ones((T, N), jnp.float32)
+
+    wu = onehot_rows(bins, w, n_bins)            # level-invariant, built once
+    node = jnp.zeros((T, N), jnp.int32)          # level-local node per sample
+    alive = jnp.ones((T, 1), bool)               # node still growable
+    inherit = jnp.full((T, 1, n_classes), 1.0 / n_classes, jnp.float32)
+    paid = jnp.zeros((T, 1, F), bool)            # features paid on the path
+    feats, thrs = [], []
+
+    for level in range(depth):
+        nodes = 1 << level
+        hist = histogram_level(
+            node, y, w, bins, n_nodes=nodes, n_bins=n_bins,
+            n_classes=n_classes, matmul_max_r=hc.matmul_max_r,
+            block_n=hc.block_n, block_r=hc.block_r, block_f=hc.block_f,
+            wu=wu)
+        # per-node class counts: any feature's bins partition the node
+        counts = hist[:, :, 0, :, :].sum(axis=2)             # [T, nodes, C]
+        total = counts.sum(-1)                               # [T, nodes]
+        dist = jnp.where((alive & (total > 0))[..., None],
+                         counts / jnp.maximum(total, 1.0)[..., None],
+                         inherit)
+        pure = (counts > 0).sum(-1) <= 1
+        can_split = alive & (total >= 2 * msl) & ~pure
+
+        # candidate j sends bin <= j left; cumsum gives left counts, and
+        # right stats follow algebraically (sum-of-squares expansion keeps
+        # every [T,nodes,F,q,C]-shaped tensor to the one cumsum + two
+        # contractions instead of materializing the right counts too):
+        #   n*gini = n - sum_c(count_c^2)/n
+        #   sum_c(right_c^2) = sum_c(counts_c^2) - 2*sum_c(counts_c*left_c)
+        #                      + sum_c(left_c^2)
+        left = jnp.cumsum(hist, axis=3)[:, :, :, :q, :]  # [T,nodes,F,q,C]
+        n_l = left.sum(-1)
+        n_r = total[:, :, None, None] - n_l
+        sq_l = jnp.einsum("tnfqc,tnfqc->tnfq", left, left)
+        cross = jnp.einsum("tnfqc,tnc->tnfq", left, counts)
+        sq_c = jnp.einsum("tnc,tnc->tn", counts, counts)
+        sq_r = sq_c[:, :, None, None] - 2.0 * cross + sq_l
+        parent_imp = _gini(counts, total)
+        child = (n_l - sq_l / jnp.maximum(n_l, 1.0)
+                 + n_r - sq_r / jnp.maximum(n_r, 1.0))
+        gain = (parent_imp[:, :, None, None]
+                - child / jnp.maximum(total, 1.0)[:, :, None, None])
+        if fcost is not None and cost_weight:
+            gain = gain - cost_weight * (fcost[None, None, :]
+                                         * ~paid)[..., None]
+        if k_feat < F:
+            u = jax.random.uniform(jax.random.fold_in(kf, level),
+                                   (T, nodes, F))
+            _, idx = jax.lax.top_k(u, k_feat)
+            fmask = (idx[..., None] == jnp.arange(F)).any(axis=-2)
+        else:
+            fmask = jnp.ones((T, nodes, F), bool)
+        valid = (n_l >= msl) & (n_r >= msl) & fmask[..., None]
+        gain = jnp.where(valid, gain, -jnp.inf)
+
+        # first-max argmax over [F*q]: lowest feature id, then lowest
+        # threshold — the host trainer's tie order
+        flat = gain.reshape(T, nodes, F * q)
+        bidx = jnp.argmax(flat, axis=-1)
+        bgain = jnp.take_along_axis(flat, bidx[..., None], axis=-1)[..., 0]
+        split_ok = can_split & (bgain > GAIN_EPS)
+        f_best = (bidx // q).astype(jnp.int32)
+        j_best = (bidx % q).astype(jnp.int32)
+        feat_l = jnp.where(split_ok, f_best, 0)
+        thr_l = jnp.where(split_ok, edges[f_best, j_best],
+                          jnp.inf).astype(jnp.float32)
+        feats.append(feat_l)
+        thrs.append(thr_l)
+
+        # route: right iff this sample's node split and its bin clears the
+        # chosen edge index (bin > j  <=>  x > edges[f, j])
+        sf = jnp.take_along_axis(feat_l, node, axis=1)       # [T, N]
+        sj = jnp.take_along_axis(j_best, node, axis=1)
+        sok = jnp.take_along_axis(split_ok, node, axis=1)
+        xb = bins[jnp.arange(N)[None, :], sf]
+        go_right = sok & (xb > sj)
+        node = 2 * node + go_right.astype(jnp.int32)
+
+        # children inherit path state; [m] -> [2m, 2m+1] via repeat
+        newly = split_ok[..., None] & (jnp.arange(F) == feat_l[..., None])
+        paid = jnp.repeat(paid | newly, 2, axis=1)
+        alive = jnp.repeat(split_ok, 2, axis=1)
+        inherit = jnp.repeat(dist, 2, axis=1)
+
+    n_leaves = 1 << depth
+
+    def leaf_counts(node_t, w_t):
+        return jnp.zeros((n_leaves, n_classes),
+                         jnp.float32).at[node_t, y].add(w_t)
+
+    lc = jax.vmap(leaf_counts)(node, w)
+    ltot = lc.sum(-1)
+    leaf = jnp.where((alive & (ltot > 0))[..., None],
+                     lc / jnp.maximum(ltot, 1.0)[..., None], inherit)
+    feature = jnp.concatenate(feats, axis=1)     # heap order by level concat
+    threshold = jnp.concatenate(thrs, axis=1)
+    return feature, threshold, leaf
+
+
+def grow_forest(x: np.ndarray, y: np.ndarray, n_classes: int,
+                cfg: TrainConfig) -> TensorForest:
+    """Train ``cfg.n_trees`` trees simultaneously on device.
+
+    Same contract as the host path of
+    :func:`repro.forest.train.train_random_forest`: complete
+    depth-``cfg.max_depth`` trees over the shared quantile candidate grid,
+    seed-deterministic (bit-identical tables across same-seed runs).  Tile
+    sizes and the histogram path crossover come from
+    :func:`repro.kernels.autotune.best_hist_config`.
+    """
+    if cfg.min_samples_leaf < 1:
+        raise ValueError("device trainer requires min_samples_leaf >= 1 "
+                         f"(got {cfg.min_samples_leaf}); padded +inf "
+                         "candidates rely on empty right children being "
+                         "invalid")
+    if cfg.max_depth < 1:
+        raise ValueError(f"max_depth must be >= 1 (got {cfg.max_depth})")
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.int32)
+    n_features = x.shape[1]
+    edges = quantile_bin_edges(x, cfg.n_thresholds)
+    bins = bin_features(x, edges)
+    k_feat = resolve_max_features(cfg.max_features, n_features)
+    hc = autotune.best_hist_config(cfg.n_trees, cfg.max_depth, n_features,
+                                   edges.shape[1] + 1, n_classes)
+    use_cost = cfg.feature_cost is not None and bool(cfg.cost_weight)
+    fcost = jnp.asarray(cfg.feature_cost, jnp.float32) if use_cost else None
+    feature, threshold, leaf = _grow(
+        jnp.asarray(bins, jnp.int32), jnp.asarray(edges),
+        jnp.asarray(y), fcost, jax.random.key(cfg.seed),
+        n_trees=cfg.n_trees, depth=cfg.max_depth, n_classes=n_classes,
+        msl=int(cfg.min_samples_leaf), k_feat=k_feat,
+        bootstrap=bool(cfg.bootstrap),
+        cost_weight=float(cfg.cost_weight), hc=hc)
+    return TensorForest(np.asarray(feature), np.asarray(threshold),
+                        np.asarray(leaf))

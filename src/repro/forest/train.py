@@ -2,10 +2,29 @@
 
 The paper trains with scikit-learn + the feature-budgeted criterion of
 Nan/Wang/Saligrama (ICML'15).  Offline container => we implement CART
-ourselves in numpy (training is offline in the paper too; only *evaluation*
-runs on the accelerator).  The budgeted criterion is the ``feature_cost``
-option: split gain is penalized by the acquisition cost of features not yet
-paid for on that root-to-node path, which is the essence of [11].
+ourselves (training is offline in the paper too; only *evaluation* runs on
+the accelerator).  The budgeted criterion is the ``feature_cost`` option:
+split gain is penalized by the acquisition cost of features not yet paid
+for on that root-to-node path, which is the essence of [11].
+
+Two trainers share one candidate-threshold contract:
+
+``trainer="host"``    the numpy CART here: recursive node expansion, but
+                      with the split search vectorized across the whole
+                      ``[n, F_sub, q]`` (samples x subsampled features x
+                      candidate thresholds) grid per node.
+``trainer="device"``  :mod:`repro.forest.grow` — level-wise histogram tree
+                      induction growing all trees simultaneously on the
+                      accelerator (quantile-binned features, Pallas
+                      histogram kernel, one vectorized gain pass per level).
+
+Both search the SAME candidate grid: :func:`quantile_bin_edges` computes
+per-feature global quantile thresholds ONCE per fit (deduplicated — a
+low-cardinality column's repeated quantiles would otherwise produce
+redundant candidate masks — and padded with ``+inf``, which no sample
+exceeds, so padding candidates are never valid splits).  Ties in the gain
+argmax break toward the lowest feature index, then the lowest threshold,
+in both trainers.
 """
 from __future__ import annotations
 
@@ -14,6 +33,11 @@ import dataclasses
 import numpy as np
 
 from repro.forest.tree import TensorForest, pad_forest
+
+TRAINERS = ("host", "device")
+
+# a split must beat the parent impurity by more than this to be taken
+GAIN_EPS = 1e-12
 
 
 @dataclasses.dataclass
@@ -27,6 +51,51 @@ class TrainConfig:
     feature_cost: np.ndarray | None = None  # [F] acquisition cost (budgeted RF)
     cost_weight: float = 0.0                 # lambda in gain - lambda*cost
     seed: int = 0
+    trainer: str = "host"         # "host" (numpy CART) | "device" (grow.py)
+
+
+def resolve_max_features(max_features: str | int, n_features: int) -> int:
+    """The per-node feature-subsample size k (shared by both trainers)."""
+    if max_features == "sqrt":
+        return max(1, int(np.sqrt(n_features)))
+    if max_features == "all":
+        return n_features
+    return min(int(max_features), n_features)
+
+
+def quantile_bin_edges(x: np.ndarray, n_thresholds: int) -> np.ndarray:
+    """Per-feature candidate split thresholds, shared by both trainers.
+
+    Returns float32 ``[F, q]``: the ``linspace(0.05, 0.95, q)`` quantiles
+    of each column over the FULL training matrix (computed once per fit —
+    the device trainer bins against these, and the host trainer searches
+    the same grid), deduplicated per feature and right-padded with ``+inf``.
+    Dedup happens AFTER the float32 cast so two float64 quantiles that
+    collapse at storage precision count as one candidate; ``+inf`` pads are
+    inactive by construction (``x > +inf`` is never true, so the right
+    child is empty and ``min_samples_leaf >= 1`` invalidates the split).
+    """
+    x = np.asarray(x, np.float64)
+    qs = np.quantile(x, np.linspace(0.05, 0.95, n_thresholds), axis=0)
+    qs = qs.T.astype(np.float32)                       # [F, q]
+    edges = np.full_like(qs, np.inf)
+    for f in range(qs.shape[0]):
+        u = np.unique(qs[f])
+        u = u[np.isfinite(u)]
+        edges[f, : len(u)] = u
+    return edges
+
+
+def bin_features(x: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    """Bin index per (sample, feature): ``bin = #edges strictly below x``.
+
+    With edges sorted ascending, ``x > edges[f, j]  <=>  bin[x] > j`` — the
+    device trainer's histogram cumsums recover every candidate split's
+    left/right counts from these uint8 indices alone.
+    """
+    x = np.asarray(x, np.float32)
+    bins = (x[:, :, None] > edges[None, :, :]).sum(axis=-1)
+    return bins.astype(np.uint8)
 
 
 def _gini(counts: np.ndarray) -> np.ndarray:
@@ -39,9 +108,16 @@ def _gini(counts: np.ndarray) -> np.ndarray:
 
 def _best_split(x: np.ndarray, y: np.ndarray, n_classes: int,
                 feat_ids: np.ndarray, cfg: TrainConfig,
-                paid: np.ndarray) -> tuple[int, float, float] | None:
-    """Exhaustive split search over candidate quantile thresholds.
+                paid: np.ndarray, edges: np.ndarray,
+                ) -> tuple[int, float, float] | None:
+    """Split search over the shared candidate grid, one vectorized pass.
 
+    The historical per-feature Python loop is hoisted into a single
+    ``[n, F_sub, q]`` batched gain computation (right-mask -> einsum counts
+    -> gini gain for every (feature, threshold) candidate at once).
+    Ties break toward the lowest feature index then lowest threshold
+    (``feat_ids`` are sorted first — the subsample's draw order must not
+    leak into the pick, or the device trainer could never match it).
     Returns (feature, threshold, gain) or None if no split improves.
     """
     n = len(y)
@@ -49,37 +125,33 @@ def _best_split(x: np.ndarray, y: np.ndarray, n_classes: int,
     parent_counts = onehot.sum(axis=0)
     parent_imp = _gini(parent_counts)
 
-    best = None
-    best_gain = 1e-12
-    for f in feat_ids:
-        col = x[:, f]
-        qs = np.quantile(col, np.linspace(0.05, 0.95, cfg.n_thresholds))
-        qs = np.unique(qs)
-        if len(qs) == 0:
-            continue
-        # [n, q] mask of right-going examples
-        right = col[:, None] > qs[None, :]
-        right_counts = np.einsum("nq,nc->qc", right.astype(np.float64), onehot)
-        left_counts = parent_counts[None, :] - right_counts
-        n_r = right_counts.sum(axis=-1)
-        n_l = n - n_r
-        valid = (n_r >= cfg.min_samples_leaf) & (n_l >= cfg.min_samples_leaf)
-        if not valid.any():
-            continue
-        child_imp = (n_l * _gini(left_counts) + n_r * _gini(right_counts)) / n
-        gain = parent_imp - child_imp
-        if cfg.feature_cost is not None and not paid[f]:
-            gain = gain - cfg.cost_weight * cfg.feature_cost[f]
-        gain = np.where(valid, gain, -np.inf)
-        q_best = int(np.argmax(gain))
-        if gain[q_best] > best_gain:
-            best_gain = float(gain[q_best])
-            best = (int(f), float(qs[q_best]), best_gain)
-    return best
+    feat_ids = np.sort(np.asarray(feat_ids))
+    e = edges[feat_ids]                                       # [Fs, q]
+    right = x[:, feat_ids, None] > e[None, :, :]              # [n, Fs, q]
+    right_counts = np.einsum("nfq,nc->fqc", right.astype(np.float64), onehot)
+    left_counts = parent_counts[None, None, :] - right_counts
+    n_r = right_counts.sum(axis=-1)
+    n_l = n - n_r
+    valid = (n_r >= cfg.min_samples_leaf) & (n_l >= cfg.min_samples_leaf)
+    if not valid.any():
+        return None
+    child_imp = (n_l * _gini(left_counts) + n_r * _gini(right_counts)) / n
+    gain = parent_imp - child_imp                             # [Fs, q]
+    if cfg.feature_cost is not None and cfg.cost_weight:
+        unpaid = ~paid[feat_ids]
+        gain = gain - (cfg.cost_weight * cfg.feature_cost[feat_ids]
+                       * unpaid)[:, None]
+    gain = np.where(valid, gain, -np.inf)
+    flat = int(np.argmax(gain))                # first max: lowest f, then q
+    if gain.flat[flat] <= GAIN_EPS:
+        return None
+    f_loc, j = divmod(flat, edges.shape[1])
+    return int(feat_ids[f_loc]), float(e[f_loc, j]), float(gain.flat[flat])
 
 
 def _train_tree(x: np.ndarray, y: np.ndarray, n_classes: int,
-                cfg: TrainConfig, rng: np.random.Generator) -> TensorForest:
+                cfg: TrainConfig, rng: np.random.Generator,
+                edges: np.ndarray) -> TensorForest:
     """Train one tree; emit it as a depth-``cfg.max_depth`` complete tree."""
     d = cfg.max_depth
     n_internal = 2**d - 1
@@ -88,12 +160,7 @@ def _train_tree(x: np.ndarray, y: np.ndarray, n_classes: int,
     threshold = np.full((n_internal,), np.inf, np.float32)  # default: go left
     leaf = np.zeros((n_leaves, n_classes), np.float32)
 
-    if cfg.max_features == "sqrt":
-        k_feat = max(1, int(np.sqrt(x.shape[1])))
-    elif cfg.max_features == "all":
-        k_feat = x.shape[1]
-    else:
-        k_feat = int(cfg.max_features)
+    k_feat = resolve_max_features(cfg.max_features, x.shape[1])
 
     def leaf_dist(idx: np.ndarray) -> np.ndarray:
         counts = np.bincount(y[idx], minlength=n_classes).astype(np.float32)
@@ -122,7 +189,7 @@ def _train_tree(x: np.ndarray, y: np.ndarray, n_classes: int,
                 fill_leaves(node, depth, dist)
             continue
         feat_ids = rng.choice(x.shape[1], size=min(k_feat, x.shape[1]), replace=False)
-        split = _best_split(x[idx], ys, n_classes, feat_ids, cfg, paid)
+        split = _best_split(x[idx], ys, n_classes, feat_ids, cfg, paid, edges)
         if split is None:
             fill_leaves(node, depth, leaf_dist(idx))
             continue
@@ -140,7 +207,23 @@ def _train_tree(x: np.ndarray, y: np.ndarray, n_classes: int,
 
 def train_random_forest(x: np.ndarray, y: np.ndarray, n_classes: int,
                         cfg: TrainConfig) -> TensorForest:
-    """RandomForestTrain(n, X, y) — Algorithm 1 line 2."""
+    """RandomForestTrain(n, X, y) — Algorithm 1 line 2.
+
+    ``cfg.trainer`` selects the implementation: ``"host"`` is the numpy
+    CART below; ``"device"`` dispatches to the level-wise histogram trainer
+    (:func:`repro.forest.grow.grow_forest`) that grows every tree
+    simultaneously on the accelerator.  Both emit the same complete-tree
+    ``TensorForest`` padding/sentinel conventions.
+    """
+    if cfg.trainer not in TRAINERS:
+        raise ValueError(f"unknown trainer {cfg.trainer!r}; "
+                         f"pick from {TRAINERS}")
+    if cfg.trainer == "device":
+        from repro.forest.grow import grow_forest
+        return grow_forest(x, y, n_classes, cfg)
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.int32)
+    edges = quantile_bin_edges(x, cfg.n_thresholds)
     rng = np.random.default_rng(cfg.seed)
     trees = []
     for _ in range(cfg.n_trees):
@@ -148,5 +231,5 @@ def train_random_forest(x: np.ndarray, y: np.ndarray, n_classes: int,
             idx = rng.integers(0, len(y), size=len(y))
         else:
             idx = np.arange(len(y))
-        trees.append(_train_tree(x[idx], y[idx], n_classes, cfg, rng))
+        trees.append(_train_tree(x[idx], y[idx], n_classes, cfg, rng, edges))
     return pad_forest(trees)

@@ -1,4 +1,4 @@
-"""Measured autotuner for the fused FoG kernel.
+"""Measured autotuner for the fused FoG kernel and the trainer histogram.
 
 ``block_b`` (batch lanes per launch block) and ``compact`` (live-lane
 compaction) are the two knobs that set the fused kernel's VMEM traffic and
@@ -23,6 +23,21 @@ VMEM fit, x compaction on/off, best-of-k timing on representative inputs)
 and caches the winner; set ``FOG_AUTOTUNE_CACHE=/path/file.json`` to
 persist winners across processes (loaded lazily, written atomically), the
 re-tune story for new hardware.
+
+The device forest trainer shares the table (and the cache file).  Its
+level-wise histogram kernel has three tile knobs (``block_n`` batch lanes,
+``block_r`` resident rows, ``block_f`` feature columns) plus a path
+crossover ``matmul_max_r``: below that many (node, class) rows the Pallas
+one-hot matmul kernel wins, above it the XLA scatter path does (deep
+levels spread few samples over many nodes, where a dense one-hot wastes
+its width).  Histogram entries are keyed by the trainer signature
+
+    key = ("hist", n_trees, depth, n_features, n_bins, n_classes)
+
+``best_hist_config(...)`` mirrors ``best_config``: a measured/cached entry
+wins, else an analytic seed (scatter-everywhere on interpreted backends,
+matmul for the top levels on a compiled TPU); ``tune_histogram()`` measures
+both paths per level size and the block_n ladder on synthetic shapes.
 """
 from __future__ import annotations
 
@@ -60,10 +75,34 @@ class TuneResult:
                 "measured_s": self.measured_s, "source": self.source}
 
 
+@dataclass(frozen=True)
+class HistConfig:
+    """One winning trainer-histogram configuration (tile sizes + path
+    crossover; see kernels/histogram.py)."""
+    block_n: int
+    block_r: int
+    block_f: int
+    matmul_max_r: int                 # Pallas one-hot path while R <= this
+    measured_s: float | None = None   # None: analytic seed, never measured
+    source: str = "analytic"          # "analytic" | "measured" | "cache-file"
+
+    def to_dict(self) -> dict:
+        return {"block_n": self.block_n, "block_r": self.block_r,
+                "block_f": self.block_f, "matmul_max_r": self.matmul_max_r,
+                "measured_s": self.measured_s, "source": self.source}
+
+
 def pack_key(pack, n_features: int) -> tuple:
     """The (precision, field size) signature a tuned config is valid for."""
     return (pack.precision, pack.n_heads, pack.n_groves, pack.grove_size,
             pack.depth, pack.n_classes, int(n_features))
+
+
+def hist_key(n_trees: int, depth: int, n_features: int, n_bins: int,
+             n_classes: int) -> tuple:
+    """The trainer signature a tuned histogram config is valid for."""
+    return ("hist", int(n_trees), int(depth), int(n_features), int(n_bins),
+            int(n_classes))
 
 
 def _key_str(key: tuple) -> str:
@@ -157,6 +196,130 @@ def tune(pack, x, start, thresh, budget, *, max_hops: int,
     return best
 
 
+def analytic_hist_config(n_trees: int, depth: int, n_features: int,
+                         n_bins: int, n_classes: int) -> HistConfig:
+    """Seed histogram config, answered without benchmarking.
+
+    Tile sizes come straight from the kernel's VMEM model; the path
+    crossover depends on the backend: a compiled TPU keeps the one-hot
+    matmul (MXU work against a VMEM-resident block) while the row count is
+    modest, whereas an interpreted backend pays the matmul's full
+    ``N*R*F*bins`` flop bill on the host VPU-less path, where the XLA
+    scatter always wins — so the interpreted seed is scatter-everywhere.
+    """
+    from repro.kernels import histogram
+    from repro.kernels.tree_traverse import resolve_interpret
+    block_f = histogram.default_block_f(n_features, n_bins)
+    matmul_max_r = 0 if resolve_interpret(None) else 2048
+    return HistConfig(block_n=histogram.BLOCK_N, block_r=histogram.BLOCK_R,
+                      block_f=block_f, matmul_max_r=matmul_max_r,
+                      source="analytic")
+
+
+def best_hist_config(n_trees: int, depth: int, n_features: int, n_bins: int,
+                     n_classes: int) -> HistConfig:
+    """The config the device trainer uses: the cached measured winner for
+    this trainer signature, else the analytic seed."""
+    _load_cache_file()
+    key = hist_key(n_trees, depth, n_features, n_bins, n_classes)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    return analytic_hist_config(n_trees, depth, n_features, n_bins,
+                                n_classes)
+
+
+# skip timing the one-hot matmul path once its modeled flops pass this
+# (interpreted hosts would stall for minutes measuring a foregone loss)
+_HIST_TUNE_FLOP_CAP = 2e9
+
+
+def tune_histogram(n_trees: int, depth: int, n_features: int, n_bins: int,
+                   n_classes: int, *, n_samples: int, seed: int = 0,
+                   repeats: int = 3, persist: bool = True,
+                   blocks: tuple[int, ...] = (512, 1024, 2048)) -> HistConfig:
+    """Measured histogram sweep on synthetic level shapes.
+
+    Times the Pallas one-hot kernel over the ``blocks`` batch-tile ladder
+    at a shallow probe level, then walks the levels deepest-rows-first
+    timing Pallas vs scatter per row count; ``matmul_max_r`` is the
+    largest row count where the kernel still wins (it loses monotonically
+    as rows grow, so the walk stops at the first loss).  On an interpreted
+    backend the Pallas side is never timed (interpret-mode matmuls lose by
+    construction and cost minutes to prove it); only the segment-sum
+    levels are measured, with ``matmul_max_r = 0``.  Winner cached under
+    the trainer signature (persisted to ``$FOG_AUTOTUNE_CACHE`` when set
+    and ``persist``).
+    """
+    from repro.kernels import histogram
+    from repro.kernels.tree_traverse import resolve_interpret
+
+    key = hist_key(n_trees, depth, n_features, n_bins, n_classes)
+    seed_cfg = analytic_hist_config(n_trees, depth, n_features, n_bins,
+                                    n_classes)
+    interp = resolve_interpret(None)
+    k = jax.random.key(seed)
+    ky, kb, kw = jax.random.split(k, 3)
+    y = jax.random.randint(ky, (n_samples,), 0, n_classes)
+    bins = jax.random.randint(kb, (n_samples, n_features), 0, n_bins)
+    w = jnp.ones((n_trees, n_samples), jnp.float32)
+
+    def node_at(level: int):
+        return jax.random.randint(kw, (n_trees, n_samples), 0, 1 << level)
+
+    def timed(fn) -> float:
+        out = fn()
+        jax.block_until_ready(out)      # compile / warm
+        return min(_timed(lambda: jax.block_until_ready(fn()))
+                   for _ in range(repeats))
+
+    # block_n ladder at a shallow probe level (cheap enough to matmul)
+    best_bn, best_t = seed_cfg.block_n, None
+    if not interp:
+        probe = min(2, depth - 1)
+        node = node_at(probe)
+        for bn in blocks:
+            t = timed(lambda: histogram.histogram_level_pallas(
+                node, y, w, bins, n_nodes=1 << probe, n_bins=n_bins,
+                n_classes=n_classes, block_n=bn, block_r=seed_cfg.block_r,
+                block_f=seed_cfg.block_f))
+            if best_t is None or t < best_t:
+                best_bn, best_t = bn, t
+
+    # per-level crossover: largest R where the Pallas path still wins.
+    # The win region must stay contiguous from R=0 (the dispatcher tests
+    # R <= matmul_max_r), so growth stops at the first level Pallas loses.
+    matmul_max_r, total = 0, 0.0
+    pallas_alive = not interp
+    for level in range(depth):
+        r = (1 << level) * n_classes
+        flops = n_samples * r * n_features * n_bins
+        node = node_at(level)
+        kw_args = dict(n_nodes=1 << level, n_bins=n_bins,
+                       n_classes=n_classes)
+        t_sc = timed(lambda: histogram.histogram_level_scatter(
+            node, y, w, bins, **kw_args))
+        if not pallas_alive or flops > _HIST_TUNE_FLOP_CAP:
+            total += t_sc
+            continue
+        t_pl = timed(lambda: histogram.histogram_level_pallas(
+            node, y, w, bins, block_n=best_bn, block_r=seed_cfg.block_r,
+            block_f=seed_cfg.block_f, **kw_args))
+        total += min(t_pl, t_sc)
+        if t_pl < t_sc:
+            matmul_max_r = r
+        else:
+            pallas_alive = False
+
+    best = HistConfig(block_n=best_bn, block_r=seed_cfg.block_r,
+                      block_f=seed_cfg.block_f, matmul_max_r=matmul_max_r,
+                      measured_s=total, source="measured")
+    _CACHE[key] = best
+    if persist:
+        _save_cache_file()
+    return best
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -184,7 +347,16 @@ def _load_cache_file() -> None:
     for kstr, cfg in raw.items():
         key = tuple(p if i == 0 else int(p)
                     for i, p in enumerate(kstr.split("/")))
-        if key not in _CACHE:   # fresher in-process measurements win
+        if key in _CACHE:       # fresher in-process measurements win
+            continue
+        if key[0] == "hist":
+            _CACHE[key] = HistConfig(block_n=int(cfg["block_n"]),
+                                     block_r=int(cfg["block_r"]),
+                                     block_f=int(cfg["block_f"]),
+                                     matmul_max_r=int(cfg["matmul_max_r"]),
+                                     measured_s=cfg.get("measured_s"),
+                                     source="cache-file")
+        else:
             _CACHE[key] = TuneResult(block_b=int(cfg["block_b"]),
                                      compact=bool(cfg["compact"]),
                                      measured_s=cfg.get("measured_s"),

@@ -55,7 +55,7 @@ from repro.forest.pack import ForestPack
 from repro.forest.train import TrainConfig, train_random_forest
 
 _PARAMS = ("n_trees", "grove_size", "max_depth", "policy", "backend", "seed",
-           "train_cfg", "precision")
+           "train_cfg", "precision", "trainer")
 
 
 class FogClassifier:
@@ -74,13 +74,16 @@ class FogClassifier:
                 above override its corresponding fields
     precision:  default packed-table dtype ("fp32" | "bf16" | "int8") —
                 see :meth:`quantize`; per-call policies may still override
+    trainer:    ``"host"`` (numpy CART) | ``"device"`` (level-wise
+                histogram induction, :mod:`repro.forest.grow`); ``None``
+                defers to ``train_cfg.trainer``
     """
 
     def __init__(self, n_trees: int = 16, grove_size: int = 2,
                  max_depth: int = 8, *, policy: FogPolicy | None = None,
                  backend: str = "reference", seed: int = 0,
                  train_cfg: TrainConfig | None = None,
-                 precision: str = "fp32"):
+                 precision: str = "fp32", trainer: str | None = None):
         self.n_trees = n_trees
         self.grove_size = grove_size
         self.max_depth = max_depth
@@ -89,6 +92,7 @@ class FogClassifier:
         self.seed = seed
         self.train_cfg = train_cfg
         self.precision = precision
+        self.trainer = trainer
 
     # -- sklearn param protocol ------------------------------------------
     def get_params(self, deep: bool = True) -> dict:
@@ -147,6 +151,8 @@ class FogClassifier:
         cfg = self.train_cfg if self.train_cfg is not None else TrainConfig()
         cfg = dataclasses.replace(cfg, n_trees=self.n_trees,
                                   max_depth=self.max_depth, seed=self.seed)
+        if self.trainer is not None:
+            cfg = dataclasses.replace(cfg, trainer=self.trainer)
         self.forest_ = train_random_forest(X, y, n_classes, cfg)
         self.gc_ = split(self.forest_, self.grove_size)
         self.engine_ = FogEngine(self.gc_, backend=self.backend,

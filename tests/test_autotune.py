@@ -98,6 +98,73 @@ def test_cache_file_roundtrip(tiny, tmp_path, monkeypatch):
     assert (hit.block_b, hit.compact) == (won.block_b, won.compact)
 
 
+def test_hist_analytic_seed_scatter_on_interpret():
+    """On an interpreted backend (CPU CI) the analytic histogram seed must
+    be scatter-everywhere: matmul_max_r == 0, runnable tile sizes."""
+    from repro.kernels.tree_traverse import resolve_interpret
+    cfg = autotune.analytic_hist_config(8, 6, 16, 17, 10)
+    assert cfg.source == "analytic" and cfg.measured_s is None
+    assert cfg.block_n > 0 and cfg.block_r > 0 and cfg.block_f >= 1
+    if resolve_interpret(None):
+        assert cfg.matmul_max_r == 0
+    # untuned lookup answers immediately with the seed
+    assert autotune.best_hist_config(8, 6, 16, 17, 10) == cfg
+
+
+def test_hist_tune_measures_and_caches():
+    won = autotune.tune_histogram(2, 3, 4, 5, 3, n_samples=256, repeats=1,
+                                  persist=False)
+    assert won.source == "measured"
+    assert won.measured_s > 0
+    hit = autotune.best_hist_config(2, 3, 4, 5, 3)
+    assert hit == won
+    # a different trainer signature still gets the analytic seed
+    assert autotune.best_hist_config(2, 4, 4, 5, 3).source == "analytic"
+
+
+def test_cache_file_mixed_fused_and_hist_entries(tiny, tmp_path,
+                                                 monkeypatch):
+    """One cache file holds both entry kinds; each reloads as its own
+    config type keyed by its own signature."""
+    pack, x, start, thresh, budget = tiny
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    fused = autotune.tune(pack, x, start, thresh, budget,
+                          max_hops=pack.n_groves, repeats=1, blocks=[32])
+    hist = autotune.tune_histogram(2, 3, 4, 5, 3, n_samples=256, repeats=1)
+    assert len(json.loads(path.read_text())) == 2
+    autotune.clear_cache()                    # "fresh process"
+    h = autotune.best_hist_config(2, 3, 4, 5, 3)
+    f = autotune.best_config(pack, x.shape[1])
+    assert h.source == "cache-file" and f.source == "cache-file"
+    assert (h.block_n, h.matmul_max_r) == (hist.block_n, hist.matmul_max_r)
+    assert (f.block_b, f.compact) == (fused.block_b, fused.compact)
+
+
+def test_grow_consults_best_hist_config(ds_penbased, monkeypatch):
+    """grow_forest must route its tile sizes through the shared best-config
+    table (the same lookup discipline as the serving engine)."""
+    from repro.forest.grow import grow_forest
+
+    calls = []
+    real = autotune.best_hist_config
+
+    def spy(*args):
+        calls.append(args)
+        return real(*args)
+
+    monkeypatch.setattr(autotune, "best_hist_config", spy)
+    ds = ds_penbased
+    grow_forest(ds.x_train[:400], ds.y_train[:400], ds.n_classes,
+                TrainConfig(n_trees=2, max_depth=3, seed=0,
+                            trainer="device"))
+    assert len(calls) == 1
+    n_trees, depth, n_features, n_bins, n_classes = calls[0]
+    assert (n_trees, depth, n_features, n_classes) == (2, 3, 16,
+                                                       ds.n_classes)
+    assert n_bins >= 2
+
+
 def test_engine_consults_autotune_when_block_b_unset(tiny, monkeypatch):
     """FogEngine(block_b=None) + fused must route through best_config."""
     from repro.core.engine import FogEngine

@@ -1,0 +1,275 @@
+"""Device trainer (forest/grow.py): shared-grid binning, host parity,
+determinism, and serving the trained forest through the full pipeline.
+
+The contract under test: both trainers search the SAME candidate grid with
+the SAME tie order, so with the randomness pinned (bootstrap=False,
+max_features="all") they must emit bit-identical tree structure; with tied
+gains (duplicate feature values) structure may diverge at fp32-vs-fp64
+precision but the ensembles must still agree on labels.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.forest.grow import grow_forest
+from repro.forest.rf import rf_predict
+from repro.forest.train import (GAIN_EPS, TrainConfig, _best_split, _gini,
+                                bin_features, quantile_bin_edges,
+                                train_random_forest)
+
+
+@pytest.fixture(scope="module")
+def small(ds_penbased):
+    """(x_train, y_train, x_test, y_test, C) subset: fast host training."""
+    ds = ds_penbased
+    # 2000 rows: every gain in the UNTIED configs is genuinely untied (no
+    # fp32-vs-fp64 near-tie flips; the dataset generator is seed-frozen,
+    # so this property is stable)
+    return (ds.x_train[:2000], ds.y_train[:2000], ds.x_test, ds.y_test,
+            ds.n_classes)
+
+
+UNTIED = dict(n_trees=3, max_depth=4, bootstrap=False, max_features="all",
+              seed=0)
+
+
+# ---------------------------------------------------------------- binning
+
+def test_bin_edges_dedupe_constant_and_binary():
+    """Regression: low-cardinality columns must not produce duplicate
+    candidate thresholds (historically np.quantile emitted q copies)."""
+    rng = np.random.default_rng(0)
+    n = 500
+    x = np.stack([
+        np.full(n, 3.0),                       # constant
+        (rng.random(n) < 0.4).astype(float),   # binary
+        rng.normal(size=n),                    # continuous
+    ], axis=1).astype(np.float32)
+    edges = quantile_bin_edges(x, 16)
+    assert edges.shape == (3, 16)
+    for f in range(3):
+        fin = edges[f][np.isfinite(edges[f])]
+        # deduplicated and sorted; +inf padding at the tail
+        assert len(np.unique(fin)) == len(fin)
+        assert np.all(np.diff(fin) > 0)
+        assert np.all(np.isinf(edges[f][len(fin):]))
+    assert np.isfinite(edges[0]).sum() == 1          # constant: one edge
+    assert np.isfinite(edges[1]).sum() <= 3          # binary: tiny grid
+    assert np.isfinite(edges[2]).sum() == 16         # continuous: full grid
+
+    bins = bin_features(x, edges)
+    assert bins.dtype == np.uint8
+    # bin semantics: bin = #edges strictly below x, so x > edges[f, j]
+    # exactly when bin > j
+    for f in range(3):
+        for j in range(16):
+            np.testing.assert_array_equal(bins[:, f] > j,
+                                          x[:, f] > edges[f, j])
+    assert np.all(bins[:, 0] == 0)                   # x > const is false
+
+
+def _brute_best_split(x, y, n_classes, feat_ids, cfg, paid, edges):
+    """Scalar-loop oracle for _best_split (same tie order: lowest feature,
+    then lowest threshold, strict improvement only)."""
+    n = len(y)
+    parent = np.bincount(y, minlength=n_classes).astype(np.float64)
+    parent_imp = _gini(parent)
+    best = None
+    for f in sorted(feat_ids):
+        for j in range(edges.shape[1]):
+            thr = edges[f, j]
+            right = x[:, f] > thr
+            n_r = int(right.sum())
+            n_l = n - n_r
+            if n_r < cfg.min_samples_leaf or n_l < cfg.min_samples_leaf:
+                continue
+            rc = np.bincount(y[right], minlength=n_classes).astype(np.float64)
+            lc = parent - rc
+            gain = parent_imp - (n_l * _gini(lc) + n_r * _gini(rc)) / n
+            if cfg.feature_cost is not None and cfg.cost_weight:
+                gain -= cfg.cost_weight * cfg.feature_cost[f] * (not paid[f])
+            if gain <= GAIN_EPS:
+                continue
+            if best is None or gain > best[2] + 1e-12:
+                best = (f, float(thr), float(gain))
+    return best
+
+
+@pytest.mark.parametrize("seed,with_cost", [(0, False), (1, False),
+                                            (2, True), (3, True)])
+def test_vectorized_best_split_matches_bruteforce(seed, with_cost):
+    rng = np.random.default_rng(seed)
+    n, F, C = 120, 6, 3
+    # integer-valued features force duplicate thresholds and tied gains,
+    # exercising the dedupe + tie-order paths
+    x = rng.integers(0, 5, size=(n, F)).astype(np.float32)
+    y = ((x[:, 0] + x[:, 1] > 4).astype(np.int32)
+         + (x[:, 2] > 2).astype(np.int32))
+    cfg = TrainConfig(min_samples_leaf=2,
+                      feature_cost=(np.linspace(0.5, 2.0, F).astype(np.float32)
+                                    if with_cost else None),
+                      cost_weight=0.05 if with_cost else 0.0)
+    edges = quantile_bin_edges(x, 8)
+    feat_ids = rng.choice(F, size=4, replace=False)
+    paid = np.zeros(F, bool)
+    paid[feat_ids[0]] = True
+    got = _best_split(x, y, C, feat_ids, cfg, paid, edges)
+    want = _brute_best_split(x, y, C, feat_ids, cfg, paid, edges)
+    if want is None:
+        assert got is None
+        return
+    assert got is not None
+    assert (got[0], got[1]) == (want[0], want[1])
+    assert got[2] == pytest.approx(want[2], abs=1e-9)
+
+
+# ----------------------------------------------------------- host parity
+
+def test_host_device_identical_structure_untied(small):
+    """bootstrap=False + max_features='all' removes all randomness: the two
+    trainers search the same grid with the same tie order and must emit
+    bit-identical feature/threshold tables."""
+    x, y, xt, yt, C = small
+    fh = train_random_forest(x, y, C, TrainConfig(trainer="host", **UNTIED))
+    fd = train_random_forest(x, y, C, TrainConfig(trainer="device", **UNTIED))
+    np.testing.assert_array_equal(fh.feature, fd.feature)
+    np.testing.assert_array_equal(fh.threshold, fd.threshold)
+    np.testing.assert_allclose(fh.leaf, fd.leaf, atol=1e-6)
+
+
+def test_host_device_label_agreement_tied(small):
+    """Integer-quantized features create tied gains where fp32-vs-fp64
+    precision may pick different (equally good) splits; the ensembles must
+    still agree on >=99% of test labels."""
+    x, y, xt, yt, C = small
+    xq = np.round(x).astype(np.float32)
+    xtq = np.round(xt).astype(np.float32)
+    kw = dict(n_trees=8, max_depth=6, bootstrap=False, max_features="all",
+              seed=0)
+    fh = train_random_forest(xq, y, C, TrainConfig(trainer="host", **kw))
+    fd = train_random_forest(xq, y, C, TrainConfig(trainer="device", **kw))
+    ph = np.asarray(rf_predict(fh, xtq))
+    pd = np.asarray(rf_predict(fd, xtq))
+    assert (ph == pd).mean() >= 0.99
+
+
+def test_feature_cost_changes_splits_identically(small):
+    """The budgeted criterion must steer BOTH trainers the same way: with
+    the penalty on, structures still match bit-for-bit, and differ from
+    the unpenalized structures (the budget actually changed choices)."""
+    x, y, xt, yt, C = small
+    F = x.shape[1]
+    cost = dict(feature_cost=np.linspace(1.0, 3.0, F).astype(np.float32),
+                cost_weight=0.05)
+    fh = train_random_forest(x, y, C,
+                             TrainConfig(trainer="host", **UNTIED, **cost))
+    fd = train_random_forest(x, y, C,
+                             TrainConfig(trainer="device", **UNTIED, **cost))
+    np.testing.assert_array_equal(fh.feature, fd.feature)
+    np.testing.assert_array_equal(fh.threshold, fd.threshold)
+    free = train_random_forest(x, y, C,
+                               TrainConfig(trainer="host", **UNTIED))
+    assert not np.array_equal(fh.feature, free.feature)
+
+
+# -------------------------------------------------- determinism / config
+
+def test_device_trainer_bit_reproducible(small):
+    """Two same-seed runs (bootstrap + sqrt subsampling live) must produce
+    bit-identical TensorForest tables; a different seed must not."""
+    x, y, *_, C = small
+    cfg = TrainConfig(n_trees=4, max_depth=4, seed=7, trainer="device")
+    a = grow_forest(x, y, C, cfg)
+    b = grow_forest(x, y, C, cfg)
+    np.testing.assert_array_equal(a.feature, b.feature)
+    np.testing.assert_array_equal(a.threshold, b.threshold)
+    np.testing.assert_array_equal(a.leaf, b.leaf)
+    import dataclasses
+    c = grow_forest(x, y, C, dataclasses.replace(cfg, seed=8))
+    assert not (np.array_equal(a.feature, c.feature)
+                and np.array_equal(a.threshold, c.threshold))
+
+
+def test_device_trainer_bootstrap_sqrt_accuracy(ds_penbased):
+    """Default randomized config trains a usable forest end to end."""
+    ds = ds_penbased
+    f = train_random_forest(
+        ds.x_train, ds.y_train, ds.n_classes,
+        TrainConfig(n_trees=8, max_depth=6, seed=0, trainer="device"))
+    pred = np.asarray(rf_predict(f, ds.x_test))
+    assert (pred == ds.y_test).mean() > 0.85
+
+
+def test_grow_validates_config(small):
+    x, y, *_, C = small
+    with pytest.raises(ValueError, match="min_samples_leaf"):
+        grow_forest(x, y, C, TrainConfig(min_samples_leaf=0,
+                                         trainer="device"))
+    with pytest.raises(ValueError, match="max_depth"):
+        grow_forest(x, y, C, TrainConfig(max_depth=0, trainer="device"))
+    with pytest.raises(ValueError, match="unknown trainer"):
+        train_random_forest(x, y, C, TrainConfig(trainer="gpu"))
+
+
+# ------------------------------------------------------- kernel / serving
+
+def test_histogram_pallas_matches_scatter():
+    """The Pallas one-hot kernel (interpret mode) and the XLA segment-sum
+    path must produce identical fp32 counts."""
+    from repro.kernels.histogram import (histogram_level_pallas,
+                                         histogram_level_scatter)
+    rng = np.random.default_rng(0)
+    T, N, F, B, C, nodes = 2, 96, 3, 5, 3, 4
+    node = rng.integers(0, nodes, size=(T, N)).astype(np.int32)
+    y = rng.integers(0, C, size=N).astype(np.int32)
+    w = rng.integers(0, 3, size=(T, N)).astype(np.float32)  # bootstrap-like
+    bins = rng.integers(0, B, size=(N, F)).astype(np.int32)
+    kw = dict(n_nodes=nodes, n_bins=B, n_classes=C)
+    got = histogram_level_pallas(node, y, w, bins, block_n=32, block_r=8,
+                                 block_f=2, interpret=True, **kw)
+    want = histogram_level_scatter(node, y, w, bins, **kw)
+    assert got.shape == (T, nodes, F, B, C)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # counts are exact: every sample lands in exactly one (node, bin, class)
+    np.testing.assert_allclose(np.asarray(want)[:, :, 0].sum(axis=(1, 2, 3)),
+                               w.sum(axis=1))
+
+
+def test_device_forest_serves_identically_across_backends(small):
+    """A device-trained forest must feed split/ForestPack and serve with
+    bit-identical labels on all four engine backends."""
+    from repro.core import FogEngine, FogPolicy, split
+    from repro.forest.pack import ForestPack
+    x, y, xt, yt, C = small
+    f = train_random_forest(x, y, C,
+                            TrainConfig(n_trees=4, max_depth=4, seed=0,
+                                        trainer="device"))
+    gc = split(f, 2)
+    pack = ForestPack.from_groves(gc)
+    policy = FogPolicy(threshold=0.3, max_hops=gc.n_groves)
+    key = jax.random.key(0)
+    mesh = jax.make_mesh((1,), ("grove",))
+    ref = FogEngine(gc, policy=policy).eval(xt, key)
+    for backend in ("pallas", "fused", "ring"):
+        eng = FogEngine(gc, backend=backend, policy=policy,
+                        **({"mesh": mesh} if backend == "ring" else {}))
+        res = eng.eval(xt, key)
+        np.testing.assert_array_equal(np.asarray(res.label),
+                                      np.asarray(ref.label))
+        np.testing.assert_array_equal(np.asarray(res.hops),
+                                      np.asarray(ref.hops))
+
+
+def test_sklearn_trainer_knob(small):
+    """FogClassifier(trainer=...) plumbs through to TrainConfig; the
+    untied facade fits produce identical packed models."""
+    from repro.sklearn import FogClassifier
+    x, y, xt, yt, C = small
+    kw = dict(n_trees=4, grove_size=2, max_depth=4, seed=0,
+              train_cfg=TrainConfig(bootstrap=False, max_features="all"))
+    host = FogClassifier(**kw, trainer="host").fit(x, y)
+    dev = FogClassifier(**kw, trainer="device").fit(x, y)
+    assert host.get_params()["trainer"] == "host"
+    np.testing.assert_array_equal(host.forest_.feature, dev.forest_.feature)
+    np.testing.assert_array_equal(dev.predict(xt[:256]),
+                                  host.predict(xt[:256]))
